@@ -1,0 +1,49 @@
+"""Sizey variant ablations (EXPERIMENTS.md §1 extension).
+
+    PYTHONPATH=src python -m benchmarks.ablations [--scale 0.3]
+
+Varies one knob at a time against the paper-default configuration
+(interpolation, alpha=0, full retrain, 4 model classes).
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.baselines.sizey_method import SizeyMethod
+from repro.core import SizeyConfig
+from repro.workflow import generate_workflow, simulate
+
+VARIANTS = {
+    "paper-default": SizeyConfig(),
+    "argmax": SizeyConfig(strategy="argmax"),
+    "adaptive-alpha": SizeyConfig(adaptive_alpha=True),
+    "alpha=0.5": SizeyConfig(alpha=0.5),
+    "alpha=1.0": SizeyConfig(alpha=1.0),
+    "incremental": SizeyConfig(incremental=True),
+    "no-mlp": SizeyConfig(model_classes=("linear", "knn", "forest")),
+    "linear-only": SizeyConfig(model_classes=("linear",)),
+}
+
+WORKFLOWS = ("rnaseq", "mag", "eager")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.3)
+    args = ap.parse_args()
+
+    print(f"| variant | {' | '.join(WORKFLOWS)} | total |")
+    print("|---|" + "---|" * (len(WORKFLOWS) + 1))
+    traces = {wf: generate_workflow(wf, scale=args.scale)
+              for wf in WORKFLOWS}
+    for name, cfg in VARIANTS.items():
+        per = []
+        for wf in WORKFLOWS:
+            r = simulate(traces[wf], SizeyMethod(cfg, ttf=1.0), ttf=1.0)
+            per.append(r.wastage_gbh)
+        row = " | ".join(f"{v:.1f}" for v in per)
+        print(f"| {name} | {row} | {sum(per):.1f} |", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Baseline vs optimized roofline comparison (feeds EXPERIMENTS.md §Perf).
+
+    PYTHONPATH=src python -m benchmarks.perf_compare
+"""
+from __future__ import annotations
+
+import json
+import os
+
+
+def load(path):
+    rows = {}
+    if not os.path.exists(path):
+        return rows
+    for line in open(path):
+        r = json.loads(line)
+        if r.get("status") == "ok":
+            rows[(r["arch"], r["shape"], r["mesh"])] = r
+    return rows
+
+
+def bound(r):
+    rt = r["roofline"]
+    return max(rt["compute_s"], rt["memory_s"], rt["collective_s"])
+
+
+def main(base_path="results/dryrun.jsonl",
+         opt_path="results/dryrun_optimized.jsonl"):
+    base = load(base_path)
+    opt = load(opt_path)
+    print("| arch | shape | mesh | peak GB b->o | step-bound s b->o | "
+          "speedup | bottleneck b->o |")
+    print("|---|---|---|---|---|---|---|")
+    speedups = []
+    for key in sorted(base):
+        if key not in opt:
+            continue
+        b, o = base[key], opt[key]
+        sb, so = bound(b), bound(o)
+        sp = sb / so if so > 0 else float("inf")
+        speedups.append(sp)
+        print(f"| {key[0]} | {key[1]} | {key[2]} | "
+              f"{b['memory']['peak_gb']:.1f} -> {o['memory']['peak_gb']:.1f} | "
+              f"{sb:.3e} -> {so:.3e} | {sp:.2f}x | "
+              f"{b['roofline']['bottleneck']} -> "
+              f"{o['roofline']['bottleneck']} |")
+    if speedups:
+        import statistics
+        print(f"\nmedian step-bound speedup: "
+              f"{statistics.median(speedups):.2f}x over {len(speedups)} cells")
+
+
+if __name__ == "__main__":
+    main()

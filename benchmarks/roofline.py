@@ -1,0 +1,89 @@
+"""Roofline table from the dry-run artifacts (assignment deliverable g).
+
+Reads results/dryrun.jsonl (written by repro.launch.dryrun) and renders
+the per-(arch x shape x mesh) three-term roofline with bottleneck calls
+and useful-compute ratios. Markdown output feeds EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+DEFAULT_PATH = os.environ.get("REPRO_DRYRUN_RESULTS", "results/dryrun.jsonl")
+
+COLUMNS = ("arch", "shape", "mesh", "chips", "peak_gb", "compute_s",
+           "memory_s", "collective_s", "bottleneck", "useful", "frac")
+
+
+def load_rows(path: str = DEFAULT_PATH) -> list[dict]:
+    rows = []
+    if not os.path.exists(path):
+        return rows
+    # keep only the LAST row per cell (later runs supersede earlier ones)
+    by_key = {}
+    for line in open(path):
+        r = json.loads(line)
+        by_key[(r["arch"], r["shape"], r["mesh"])] = r
+    for r in by_key.values():
+        if r["status"] == "ok":
+            rt = r["roofline"]
+            rows.append({
+                "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+                "chips": r["chips"],
+                "peak_gb": r["memory"]["peak_gb"],
+                "compute_s": rt["compute_s"], "memory_s": rt["memory_s"],
+                "collective_s": rt["collective_s"],
+                "bottleneck": rt["bottleneck"],
+                "useful": rt["useful_ratio"],
+                "frac": rt["roofline_fraction"],
+            })
+        elif r["status"] == "skipped":
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "mesh": r["mesh"], "skipped": r["reason"]})
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
+             "long_500k": 3}
+    rows.sort(key=lambda x: (x["arch"], order.get(x["shape"], 9),
+                             x["mesh"]))
+    return rows
+
+
+def markdown_table(rows: list[dict]) -> str:
+    lines = ["| arch | shape | mesh | chips | peak GB/chip | compute s | "
+             "memory s | collective s | bottleneck | useful | frac |",
+             "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if "skipped" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | - | "
+                         f"SKIP | - | - | - | - | - | - |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['chips']} | "
+            f"{r['peak_gb']:.2f} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
+            f"{r['bottleneck']} | {r['useful']:.3f} | {r['frac']:.3f} |")
+    return "\n".join(lines)
+
+
+def csv_rows(rows: list[dict]):
+    for r in rows:
+        if "skipped" in r:
+            continue
+        name = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+        yield (f"{name},bottleneck={r['bottleneck']},"
+               f"compute_s={r['compute_s']:.4e},memory_s={r['memory_s']:.4e},"
+               f"collective_s={r['collective_s']:.4e},"
+               f"useful={r['useful']:.4f},frac={r['frac']:.4f},"
+               f"peak_gb={r['peak_gb']:.2f}")
+
+
+def main(path: str = DEFAULT_PATH):
+    rows = load_rows(path)
+    if not rows:
+        print(f"roofline: no dry-run rows at {path} "
+              "(run python -m repro.launch.dryrun)")
+        return
+    print(markdown_table(rows))
+
+
+if __name__ == "__main__":
+    main()

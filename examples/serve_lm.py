@@ -1,0 +1,15 @@
+"""Batched serving example: decoder-only audio-token model (musicgen
+backbone) with Sizey-sized KV caches.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    engine = serve_main(["--arch", "musicgen-large", "--requests", "16",
+                         "--max-new", "24"])
+    sizer = engine.sizer
+    if sizer is not None and sizer.decisions:
+        last = sizer.decisions[-1]
+        print(f"KV sizing decisions: {len(sizer.decisions)} "
+              f"(last source={last.source}, alloc={last.allocation_gb:.3f} GB)")

@@ -1,0 +1,7 @@
+"""repro — Sizey-JAX: memory-efficient execution of scientific workflow tasks.
+
+A production-grade JAX framework reproducing and extending
+"Sizey: Memory-Efficient Execution of Scientific Workflow Tasks" (Bader et al., 2024).
+"""
+
+__version__ = "1.0.0"

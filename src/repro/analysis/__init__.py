@@ -1,0 +1,3 @@
+"""Roofline analysis from compiled dry-run artifacts."""
+from repro.analysis.hlo import collective_bytes
+from repro.analysis.roofline import roofline_terms, model_flops

@@ -1,0 +1,37 @@
+"""State-of-the-art baselines (paper §III-B) + the Sizey adapter.
+
+All methods implement repro.workflow.simulator.SizingMethod. The baselines
+are reimplemented from the cited papers (the authors' code is not vendored);
+differences are documented per class.
+"""
+from repro.baselines.common import HistoryMethod
+from repro.baselines.presets import WorkflowPresets
+from repro.baselines.sizey_method import SizeyMethod
+from repro.baselines.tovar_ppm import TovarPPM
+from repro.baselines.witt import WittLR, WittPercentile, WittWastage
+
+ALL_BASELINES = ("witt_wastage", "witt_lr", "tovar_ppm", "witt_percentile",
+                 "workflow_presets")
+
+
+def make_method(name: str, machine_cap_gb: float = 128.0, ttf: float = 1.0,
+                **kw):
+    """Factory used by benchmarks: name -> SizingMethod instance."""
+    from repro.core import SizeyConfig
+    if name == "sizey":
+        return SizeyMethod(SizeyConfig(**kw), ttf=ttf,
+                           machine_cap_gb=machine_cap_gb)
+    if name == "sizey_argmax":
+        return SizeyMethod(SizeyConfig(strategy="argmax", **kw), ttf=ttf,
+                           machine_cap_gb=machine_cap_gb, name="sizey_argmax")
+    if name == "witt_wastage":
+        return WittWastage(machine_cap_gb, ttf=ttf)
+    if name == "witt_lr":
+        return WittLR(machine_cap_gb)
+    if name == "witt_percentile":
+        return WittPercentile(machine_cap_gb)
+    if name == "tovar_ppm":
+        return TovarPPM(machine_cap_gb, ttf=ttf)
+    if name == "workflow_presets":
+        return WorkflowPresets(machine_cap_gb)
+    raise ValueError(f"unknown method {name!r}")

@@ -1,0 +1,43 @@
+"""Shared history bookkeeping for the baselines."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.workflow.trace import TaskInstance
+
+
+class HistoryMethod:
+    """Per-(task_type, machine) observation history + doubling retry."""
+
+    name = "history"
+    min_history = 3
+
+    def __init__(self, machine_cap_gb: float = 128.0):
+        self.machine_cap_gb = machine_cap_gb
+        self._xs: dict[tuple[str, str], list[float]] = {}
+        self._ys: dict[tuple[str, str], list[float]] = {}
+        self._rts: dict[tuple[str, str], list[float]] = {}
+
+    def _key(self, task: TaskInstance) -> tuple[str, str]:
+        return (task.task_type, task.machine)
+
+    def history(self, task: TaskInstance):
+        k = self._key(task)
+        return (np.asarray(self._xs.get(k, [])),
+                np.asarray(self._ys.get(k, [])),
+                np.asarray(self._rts.get(k, [])))
+
+    # SizingMethod protocol -------------------------------------------------
+    def allocate(self, task: TaskInstance) -> float:
+        raise NotImplementedError
+
+    def retry(self, task: TaskInstance, attempt: int,
+              last_alloc_gb: float) -> float:
+        return min(last_alloc_gb * 2.0, self.machine_cap_gb)
+
+    def complete(self, task: TaskInstance, first_alloc_gb: float,
+                 attempts: int) -> None:
+        k = self._key(task)
+        self._xs.setdefault(k, []).append(task.input_size_gb)
+        self._ys.setdefault(k, []).append(task.actual_peak_gb)
+        self._rts.setdefault(k, []).append(task.runtime_h)

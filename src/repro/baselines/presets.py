@@ -1,0 +1,12 @@
+"""Workflow-Presets: the developer's static estimate, always (sanity baseline)."""
+from __future__ import annotations
+
+from repro.baselines.common import HistoryMethod
+from repro.workflow.trace import TaskInstance
+
+
+class WorkflowPresets(HistoryMethod):
+    name = "workflow_presets"
+
+    def allocate(self, task: TaskInstance) -> float:
+        return min(task.user_preset_gb, self.machine_cap_gb)

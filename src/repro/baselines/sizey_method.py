@@ -1,0 +1,33 @@
+"""Adapter exposing SizeyPredictor through the SizingMethod protocol."""
+from __future__ import annotations
+
+from repro.core import SizeyConfig
+from repro.core.predictor import SizeyPredictor, SizingDecision
+from repro.workflow.trace import TaskInstance
+
+
+class SizeyMethod:
+    def __init__(self, cfg: SizeyConfig | None = None, *, ttf: float = 1.0,
+                 machine_cap_gb: float = 128.0, name: str = "sizey"):
+        self.name = name
+        self.predictor = SizeyPredictor(cfg, ttf=ttf,
+                                        default_machine_cap_gb=machine_cap_gb)
+        self._pending: SizingDecision | None = None
+
+    def allocate(self, task: TaskInstance) -> float:
+        self._pending = self.predictor.predict(
+            task.task_type, task.machine, task.features, task.user_preset_gb)
+        return self._pending.allocation_gb
+
+    def retry(self, task: TaskInstance, attempt: int,
+              last_alloc_gb: float) -> float:
+        assert self._pending is not None
+        return self.predictor.retry_allocation(self._pending, attempt,
+                                               last_alloc_gb)
+
+    def complete(self, task: TaskInstance, first_alloc_gb: float,
+                 attempts: int) -> None:
+        assert self._pending is not None
+        self.predictor.observe(self._pending, task.actual_peak_gb,
+                               task.runtime_h, attempts, task.workflow)
+        self._pending = None

@@ -1,0 +1,4 @@
+"""Architecture configs: one module per assigned architecture."""
+from repro.configs.base import (ModelConfig, ShapeConfig, SHAPES,
+                                cell_is_applicable)
+from repro.configs.registry import ARCH_IDS, get_config

@@ -1,0 +1,9 @@
+"""minitron-8b — pruned nemotron [arXiv:2407.14679; hf].
+
+32L, d_model=4096, 32 heads (kv=8), d_ff=16384, vocab=256000.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minitron-8b", family="dense", n_layers=32, d_model=4096,
+    n_heads=32, n_kv=8, d_ff=16384, vocab=256000)

@@ -1,0 +1,13 @@
+"""Sizey core: online multi-model memory prediction (the paper's contribution).
+
+Public API:
+    SizeyPredictor  — per (task-type × machine) model pool with RAQ gating
+    SizeyConfig     — hyperparameters (alpha, beta, strategy, offsets, ...)
+    accuracy_score / efficiency_scores / raq_scores — paper Eq. 1-3
+"""
+from repro.core.config import SizeyConfig
+from repro.core.raq import accuracy_score, efficiency_scores, raq_scores
+from repro.core.gating import gate_predictions
+from repro.core.offsets import OFFSET_STRATEGIES, select_offset
+from repro.core.predictor import SizeyPredictor
+from repro.core.provenance import ProvenanceDB, TaskRecord

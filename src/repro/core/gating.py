@@ -1,0 +1,29 @@
+"""Gating mechanism over the model pool (paper §II-D, Fig. 6).
+
+Two strategies:
+  * ``argmax``        — weight 1 on the highest-RAQ predictor (Eq. under §II-D a).
+  * ``interpolation`` — softmax(beta * RAQ) weights, Eq. 4.
+
+Both are pure jnp; ties in argmax resolve to the lowest model index
+(jnp.argmax semantics), which makes the cold-start deterministic.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gate_weights(raq: jnp.ndarray, strategy: str, beta: float) -> jnp.ndarray:
+    """Return the (N_models,) weight vector for the given strategy."""
+    if strategy == "argmax":
+        return jax.nn.one_hot(jnp.argmax(raq), raq.shape[0], dtype=raq.dtype)
+    if strategy == "interpolation":
+        return jax.nn.softmax(beta * raq)
+    raise ValueError(f"unknown gating strategy {strategy!r}")
+
+
+def gate_predictions(preds: jnp.ndarray, raq: jnp.ndarray, strategy: str,
+                     beta: float) -> jnp.ndarray:
+    """Aggregate model predictions into a single estimate y_hat_{t*} (Eq. 4)."""
+    w = gate_weights(raq, strategy, beta)
+    return jnp.sum(preds * w)

@@ -1,0 +1,21 @@
+"""Sizey's model pool (paper Fig. 5): four regression model classes in JAX.
+
+Every model follows the same functional API over fixed-capacity masked
+buffers (CAP, d) / (CAP,):
+
+    state = fit(xs, ys, mask, key, cfg)            # full retrain
+    state = update(state, xs, ys, mask, key, cfg)  # lightweight online step
+    yhat  = predict(state, x)                      # x: (d,) -> scalar
+
+States are NamedTuples (pytrees), so fit/update/predict jit and vmap cleanly.
+Features and targets arrive pre-scaled in GB units (fixed scaling — not
+data-dependent — so incremental sufficient-statistics updates stay valid).
+"""
+from repro.core.models import forest, knn, linear, mlp
+
+MODEL_MODULES = {
+    "linear": linear,
+    "knn": knn,
+    "mlp": mlp,
+    "forest": forest,
+}

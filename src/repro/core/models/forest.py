@@ -1,0 +1,145 @@
+"""Random-forest regression as an ensemble of *oblivious* trees.
+
+Hardware adaptation (DESIGN.md §3): classic CART forests are pointer-chasing
+and do not vectorize on TPU. We replace them with oblivious regression trees
+— one (feature, threshold) pair per level shared across the whole level — so
+
+  * prediction is a bit-packed comparison + a 2^depth leaf-table gather,
+    pure jnp, batchable over (trees × tasks);
+  * training is an exhaustive vectorized scan over candidate thresholds per
+    level (vmapped over candidates and over trees), with per-tree Poisson
+    bootstrap weights for ensemble diversity.
+
+The incremental update keeps the grown structure and refreshes the leaf
+means from the full buffer (structure-frozen leaf refit) — O(CAP * trees),
+the forest analogue of the paper's lightweight online step.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import SizeyConfig
+
+_EPS = 1e-9
+N_QUANTILES = 16
+
+
+class ForestState(NamedTuple):
+    feat: jnp.ndarray       # (T, D) int32 — split feature per tree level
+    thresh: jnp.ndarray     # (T, D) float32 — split threshold per tree level
+    leaf_vals: jnp.ndarray  # (T, 2^D) float32 — leaf means
+    global_mean: jnp.ndarray
+
+
+def init(d: int, cfg: SizeyConfig) -> ForestState:
+    t, dep = cfg.forest_trees, cfg.forest_depth
+    return ForestState(jnp.zeros((t, dep), jnp.int32),
+                       jnp.zeros((t, dep), jnp.float32),
+                       jnp.zeros((t, 2 ** dep), jnp.float32),
+                       jnp.zeros(()))
+
+
+def _candidate_thresholds(xs: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """(d, Q) candidate thresholds = masked per-feature quantiles."""
+    qs = jnp.linspace(0.05, 0.95, N_QUANTILES)
+    xm = jnp.where(mask[:, None] > 0, xs, jnp.nan)
+    return jnp.nanquantile(xm, qs, axis=0).T  # (d, Q)
+
+
+def _split_sse(leaf: jnp.ndarray, go_right: jnp.ndarray, w: jnp.ndarray,
+               ys: jnp.ndarray, n_segments: int) -> jnp.ndarray:
+    """Weighted SSE of the partition induced by splitting every leaf."""
+    seg = leaf * 2 + go_right.astype(jnp.int32)
+    sw = jax.ops.segment_sum(w, seg, num_segments=n_segments)
+    swy = jax.ops.segment_sum(w * ys, seg, num_segments=n_segments)
+    swy2 = jax.ops.segment_sum(w * ys * ys, seg, num_segments=n_segments)
+    return jnp.sum(swy2 - swy * swy / jnp.maximum(sw, _EPS))
+
+
+def _grow_tree(w: jnp.ndarray, xs: jnp.ndarray, ys: jnp.ndarray,
+               cands: jnp.ndarray, depth: int):
+    """Grow one oblivious tree with sample weights w. Returns (feat, thresh, leaf)."""
+    cap, d = xs.shape
+    q = cands.shape[1]
+    leaf = jnp.zeros((cap,), jnp.int32)
+    feats, threshs = [], []
+
+    for level in range(depth):
+        n_seg = 2 ** (level + 1)
+
+        def sse_for(f, qi):
+            return _split_sse(leaf, xs[:, f] > cands[f, qi], w, ys, n_seg)
+
+        fs = jnp.repeat(jnp.arange(d), q)
+        qs = jnp.tile(jnp.arange(q), d)
+        sses = jax.vmap(sse_for)(fs, qs)
+        best = jnp.argmin(sses)
+        bf, bq = fs[best], qs[best]
+        bt = cands[bf, bq]
+        feats.append(bf)
+        threshs.append(bt)
+        leaf = leaf * 2 + (xs[:, bf] > bt).astype(jnp.int32)
+
+    return jnp.stack(feats), jnp.stack(threshs), leaf
+
+
+def _leaf_means(leaf: jnp.ndarray, w: jnp.ndarray, ys: jnp.ndarray,
+                n_leaves: int, fallback: jnp.ndarray) -> jnp.ndarray:
+    sw = jax.ops.segment_sum(w, leaf, num_segments=n_leaves)
+    swy = jax.ops.segment_sum(w * ys, leaf, num_segments=n_leaves)
+    return jnp.where(sw > _EPS, swy / jnp.maximum(sw, _EPS), fallback)
+
+
+def fit(xs: jnp.ndarray, ys: jnp.ndarray, mask: jnp.ndarray, key,
+        cfg: SizeyConfig) -> ForestState:
+    t, depth = cfg.forest_trees, cfg.forest_depth
+    cands = _candidate_thresholds(xs, mask)
+    cands = jnp.nan_to_num(cands, nan=0.0)
+    n = jnp.maximum(jnp.sum(mask), 1.0)
+    gmean = jnp.sum(ys * mask) / n
+    # Poisson(1) bootstrap weights per tree (masked-out rows weigh 0)
+    boot = jax.random.poisson(key, 1.0, (t, xs.shape[0])).astype(jnp.float32)
+    boot = boot * mask[None, :]
+
+    def one_tree(w):
+        feat, thresh, leaf = _grow_tree(w, xs, ys, cands, depth)
+        vals = _leaf_means(leaf, w, ys, 2 ** depth, gmean)
+        return feat, thresh, vals
+
+    feat, thresh, vals = jax.vmap(one_tree)(boot)
+    return ForestState(feat, thresh, vals, gmean)
+
+
+def _leaf_index(feat: jnp.ndarray, thresh: jnp.ndarray,
+                x: jnp.ndarray) -> jnp.ndarray:
+    """Bit-pack the level comparisons into a leaf index. feat/thresh: (D,)."""
+    bits = (x[feat] > thresh).astype(jnp.int32)  # (D,)
+    weights = 2 ** jnp.arange(bits.shape[0] - 1, -1, -1)
+    return jnp.sum(bits * weights)
+
+
+def update(state: ForestState, xs: jnp.ndarray, ys: jnp.ndarray,
+           mask: jnp.ndarray, new_idx: jnp.ndarray, key,
+           cfg: SizeyConfig) -> ForestState:
+    """Structure-frozen leaf refresh from the full (unweighted) buffer."""
+    depth = state.feat.shape[1]
+    n = jnp.maximum(jnp.sum(mask), 1.0)
+    gmean = jnp.sum(ys * mask) / n
+
+    def refresh(feat, thresh):
+        leaf = jax.vmap(lambda x: _leaf_index(feat, thresh, x))(xs)
+        return _leaf_means(leaf, mask, ys, 2 ** depth, gmean)
+
+    vals = jax.vmap(refresh)(state.feat, state.thresh)
+    return ForestState(state.feat, state.thresh, vals, gmean)
+
+
+def predict(state: ForestState, x: jnp.ndarray) -> jnp.ndarray:
+    def one(feat, thresh, vals):
+        return vals[_leaf_index(feat, thresh, x)]
+
+    preds = jax.vmap(one)(state.feat, state.thresh, state.leaf_vals)
+    return jnp.mean(preds)

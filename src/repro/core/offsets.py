@@ -1,0 +1,113 @@
+"""Dynamic prediction offset (paper §II-E).
+
+Sizey adds a fault-tolerance offset to the aggregate prediction. Four
+candidate offsets are maintained from the history of *aggregate* prediction
+errors e_j = y_j - y_hat_j (positive e = underprediction):
+
+    std               std of all errors
+    std_under         std of underprediction errors only
+    median_err        median absolute error
+    median_err_under  median underprediction error
+
+During online learning Sizey selects the candidate that *would have caused
+the least wastage* on the already-executed tasks: for each candidate o we
+replay history with allocation y_hat_j + o; a success wastes
+(y_hat_j + o - y_j) * runtime, a failure costs the retry ladder's wastage
+(allocation burned for the failed attempt plus the conservative retry).
+
+All offset math is pure jnp over fixed-capacity masked buffers.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+OFFSET_STRATEGIES = ("std", "std_under", "median_err", "median_err_under")
+
+_EPS = 1e-9
+
+
+def _masked_std(x: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    n = jnp.maximum(jnp.sum(mask), 1.0)
+    mean = jnp.sum(x * mask) / n
+    var = jnp.sum(((x - mean) ** 2) * mask) / n
+    return jnp.sqrt(jnp.maximum(var, 0.0))
+
+
+def _masked_median(x: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Median of the masked entries (0 if none). Sort-based, jit-safe."""
+    n = jnp.sum(mask).astype(jnp.int32)
+    big = jnp.where(mask > 0, x, jnp.inf)
+    s = jnp.sort(big)
+    # indices of the middle element(s) among the first n sorted entries
+    lo = jnp.maximum((n - 1) // 2, 0)
+    hi = jnp.maximum(n // 2, 0)
+    med = 0.5 * (s[lo] + s[hi])
+    return jnp.where(n > 0, med, 0.0)
+
+
+def candidate_offsets(errors: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Return the 4 candidate offsets, order matching OFFSET_STRATEGIES.
+
+    errors: (CAP,) aggregate prediction errors y - y_hat.
+    mask:   (CAP,) validity mask.
+    """
+    under = mask * (errors > 0)
+    std_all = _masked_std(errors, mask)
+    std_under = _masked_std(errors, under)
+    med_abs = _masked_median(jnp.abs(errors), mask)
+    med_under = _masked_median(errors, under)
+    offs = jnp.stack([std_all, std_under, med_abs, med_under])
+    return jnp.maximum(offs, 0.0)  # an offset never reduces the allocation
+
+
+def retrospective_wastage(offset: jnp.ndarray, preds: jnp.ndarray,
+                          actuals: jnp.ndarray, runtimes: jnp.ndarray,
+                          mask: jnp.ndarray, max_seen: jnp.ndarray,
+                          ttf: float = 1.0) -> jnp.ndarray:
+    """Wastage (GBh) history would have incurred with ``offset`` added.
+
+    Success: waste = (pred + offset - actual) * runtime.
+    Failure: the failed attempt burns the whole allocation for ttf*runtime,
+    then the paper's first retry (max memory ever observed) wastes
+    (max_seen - actual) * runtime.
+    """
+    alloc = preds + offset
+    ok = alloc >= actuals
+    waste_ok = (alloc - actuals) * runtimes
+    waste_fail = alloc * (ttf * runtimes) + jnp.maximum(max_seen - actuals, 0.0) * runtimes
+    return jnp.sum(jnp.where(ok, waste_ok, waste_fail) * mask)
+
+
+# magnitude grid applied to every candidate strategy: the paper's dynamic
+# selector picks the *least-wasteful* offset; §III-E notes a "more
+# conservative offset" trades failures for waste. Scaling each named
+# statistic by a small learned multiplier (same least-retrospective-wastage
+# rule) lets the selector actually reach conservative allocations when
+# failures are expensive (ttf high) — documented in DESIGN.md as an
+# extension of the paper's §II-E selector. A 0.0 entry was evaluated and
+# REJECTED: with young prequential logs the replay overfits and picks "no
+# offset", doubling failure counts at small history sizes (bench scale
+# 0.35: Sizey dropped from 6/6 to 4/6 workflow wins) — the paper's
+# always-positive offsets act as a safety margin prior.
+OFFSET_MULTIPLIERS = (1.0, 1.5, 2.0, 3.0)
+
+
+def select_offset(errors: jnp.ndarray, preds: jnp.ndarray, actuals: jnp.ndarray,
+                  runtimes: jnp.ndarray, mask: jnp.ndarray,
+                  ttf: float = 1.0) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Pick the least-retrospective-wastage candidate (paper §II-E).
+
+    Returns (offset_value, strategy_index into OFFSET_STRATEGIES).
+    """
+    offs = candidate_offsets(errors, mask)  # (4,)
+    mults = jnp.asarray(OFFSET_MULTIPLIERS)
+    cands = offs[:, None] * mults[None, :]  # (4, M)
+    max_seen = jnp.max(jnp.where(mask > 0, actuals, 0.0))
+    flat = cands.reshape(-1)
+    wastes = jnp.stack([
+        retrospective_wastage(flat[i], preds, actuals, runtimes, mask,
+                              max_seen, ttf)
+        for i in range(flat.shape[0])
+    ])
+    idx = jnp.argmin(wastes)
+    return flat[idx], idx // mults.shape[0]

@@ -1,0 +1,266 @@
+"""SizeyPredictor — the paper's online memory-prediction engine (§II).
+
+Pipeline per submitted task (paper Fig. 3):
+  1  retrieve the (task_type × machine) pool from the provenance DB;
+  2.1 every model in the pool predicts;    2.2 RAQ-gated aggregation;
+  2.3 dynamic offset;  -> allocation submitted to the resource manager;
+  3  on completion, the provenance DB and all models are updated online
+     (full retrain or incremental, cfg.incremental).
+
+All numeric work is jitted; buffers live on host as numpy and are handed to
+a bounded set of compiled functions (shapes grow geometrically, so each
+model compiles O(log history) times per feature dimension).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.config import SizeyConfig
+from repro.core.failure import retry_allocation
+from repro.core.gating import gate_predictions, gate_weights
+from repro.core.models import MODEL_MODULES
+from repro.core.offsets import select_offset
+from repro.core.provenance import ProvenanceDB, TaskRecord
+from repro.core.raq import accuracy_score, efficiency_scores, raq_scores
+from repro.utils.misc import stable_hash
+
+
+@dataclasses.dataclass
+class SizingDecision:
+    """What Sizey decided for one task submission."""
+    task_type: str
+    machine: str
+    features: tuple[float, ...]
+    source: str                      # "preset" | "model"
+    allocation_gb: float
+    user_preset_gb: float
+    machine_cap_gb: float
+    model_preds: np.ndarray | None = None   # (N_models,)
+    raq: np.ndarray | None = None
+    weights: np.ndarray | None = None
+    agg_pred_gb: float = 0.0
+    offset_gb: float = 0.0
+    offset_idx: int = -1
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_fit(model: str, cfg: SizeyConfig):
+    mod = MODEL_MODULES[model]
+    return jax.jit(functools.partial(mod.fit, cfg=cfg))
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_update(model: str, cfg: SizeyConfig):
+    mod = MODEL_MODULES[model]
+    return jax.jit(functools.partial(mod.update, cfg=cfg))
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_predict(model: str, cfg: SizeyConfig):
+    mod = MODEL_MODULES[model]
+    if model == "knn":
+        return jax.jit(functools.partial(mod.predict, k=cfg.knn_k))
+    return jax.jit(mod.predict)
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_predict_batch(model: str, cfg: SizeyConfig):
+    """vmapped in-sample prediction over the whole history buffer."""
+    mod = MODEL_MODULES[model]
+    if model == "knn":
+        fn = functools.partial(mod.predict, k=cfg.knn_k)
+    else:
+        fn = mod.predict
+    return jax.jit(jax.vmap(fn, in_axes=(None, 0)))
+
+
+# candidate grid for the adaptive-alpha extension (paper §III-E future work)
+ALPHA_GRID = (0.0, 0.25, 0.5, 0.75, 1.0)
+
+
+def _select_alpha(acc, log_model_preds, log_actual, log_runtime, log_mask,
+                  strategy: str, beta: float, ttf: float):
+    """Retrospectively score each candidate alpha: re-gate the LOGGED
+    per-model predictions with (current AS, per-instance ES) and pick the
+    alpha whose aggregate would have wasted the least (offset-free replay —
+    relative comparison only)."""
+    from repro.core.offsets import retrospective_wastage
+    # per-instance efficiency scores of the logged predictions: (N, L)
+    p = jnp.maximum(log_model_preds, 0.0)
+    eff_log = 1.0 - p / jnp.maximum(jnp.max(p, axis=0, keepdims=True), 1e-9)
+    max_seen = jnp.max(jnp.where(log_mask > 0, log_actual, 0.0))
+
+    def waste_of(alpha):
+        raq = (1.0 - alpha) * acc[:, None] + alpha * eff_log     # (N, L)
+        if strategy == "argmax":
+            w = jax.nn.one_hot(jnp.argmax(raq, 0), raq.shape[0]).T
+        else:
+            w = jax.nn.softmax(beta * raq, axis=0)
+        agg = jnp.sum(w * log_model_preds, axis=0)               # (L,)
+        return retrospective_wastage(jnp.asarray(0.0), agg, log_actual,
+                                     log_runtime, log_mask, max_seen, ttf)
+
+    alphas = jnp.asarray(ALPHA_GRID)
+    wastes = jax.vmap(waste_of)(alphas)
+    return alphas[jnp.argmin(wastes)]
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_combine(strategy: str, alpha: float, beta: float, ttf: float,
+                 adaptive_alpha: bool = False):
+    """RAQ -> gating -> offset, one fused jitted function (Eq. 1-4 + §II-E)."""
+
+    def combine(model_preds, insample_preds, ys, runtimes, mask, log_agg,
+                log_actual, log_runtime, log_mask, log_model_preds):
+        # AS from the models' in-sample predictions over the history buffer
+        # (refreshed after every fit/update); ES from the current outputs.
+        acc = accuracy_score(insample_preds, ys, mask)
+        eff = efficiency_scores(model_preds)
+        if adaptive_alpha:
+            a = _select_alpha(acc, log_model_preds, log_actual, log_runtime,
+                              log_mask, strategy, beta, ttf)
+            a = jnp.where(jnp.sum(log_mask) >= 5, a, alpha)
+        else:
+            a = alpha
+        raq = raq_scores(acc, eff, a)
+        weights = gate_weights(raq, strategy, beta)
+        agg = gate_predictions(model_preds, raq, strategy, beta)
+        # offset from the *prequential* aggregate errors actually experienced;
+        # while the log is young (< 5 predictions) fall back to the in-sample
+        # errors of an accuracy-weighted aggregate so the very first model
+        # predictions already carry a fault-tolerance offset (§II-E).
+        off_log, idx_log = select_offset(log_actual - log_agg, log_agg,
+                                         log_actual, log_runtime, log_mask,
+                                         ttf)
+        acc_w = gate_weights(raq_scores(acc, jnp.zeros_like(acc), 0.0),
+                             strategy, beta)
+        ins_agg = acc_w @ insample_preds
+        off_ins, idx_ins = select_offset(ys - ins_agg, ins_agg, ys, runtimes,
+                                         mask, ttf)
+        young = jnp.sum(log_mask) < 5
+        offset = jnp.where(young, jnp.maximum(off_ins, off_log), off_log)
+        off_idx = jnp.where(young, idx_ins, idx_log)
+        return agg, raq, weights, offset, off_idx
+
+    return jax.jit(combine)
+
+
+class SizeyPredictor:
+    """Online multi-model memory predictor (the paper's contribution)."""
+
+    def __init__(self, cfg: SizeyConfig | None = None,
+                 db: ProvenanceDB | None = None, *, n_features: int = 1,
+                 ttf: float = 1.0, default_machine_cap_gb: float = 128.0):
+        self.cfg = cfg or SizeyConfig()
+        self.n_features = n_features
+        self.models = tuple(self.cfg.model_classes)
+        self.db = db or ProvenanceDB(n_features=n_features,
+                                     n_models=len(self.models))
+        self.ttf = float(ttf)
+        self.default_machine_cap_gb = default_machine_cap_gb
+        # per-pool model states: key -> {model_name: state}
+        self.states: dict[tuple[str, str], dict] = {}
+        self._fit_serial: dict[tuple[str, str], int] = {}
+        self.train_times_s: list[float] = []
+        self.model_select_counts = np.zeros(len(self.models), np.int64)
+
+    # ------------------------------------------------------------- predict
+    def predict(self, task_type: str, machine: str, features,
+                user_preset_gb: float,
+                machine_cap_gb: float | None = None) -> SizingDecision:
+        cap_gb = machine_cap_gb or self.default_machine_cap_gb
+        feats = tuple(float(f) for f in np.atleast_1d(features))
+        pool = self.db.pool(task_type, machine)
+        key = (task_type, machine)
+
+        if pool.count < self.cfg.min_history or key not in self.states:
+            # unknown/young task type -> user preset straight to the RM (§I)
+            return SizingDecision(task_type, machine, feats, "preset",
+                                  min(user_preset_gb, cap_gb),
+                                  user_preset_gb, cap_gb)
+
+        x = jnp.asarray(feats, jnp.float32)
+        preds = jnp.stack([
+            _jit_predict(m, self.cfg)(self.states[key][m], x)
+            for m in self.models
+        ])
+        combine = _jit_combine(self.cfg.strategy, self.cfg.alpha,
+                               self.cfg.beta, self.ttf,
+                               self.cfg.adaptive_alpha)
+        agg, raq, weights, offset, off_idx = combine(
+            preds, jnp.asarray(pool.insample_preds), jnp.asarray(pool.ys),
+            jnp.asarray(pool.runtimes), jnp.asarray(pool.mask),
+            jnp.asarray(pool.log_agg), jnp.asarray(pool.log_actual),
+            jnp.asarray(pool.log_runtime), jnp.asarray(pool.log_mask),
+            jnp.asarray(pool.log_model_preds))
+
+        alloc = float(np.clip(float(agg) + float(offset),
+                              self.cfg.min_alloc_gb, cap_gb))
+        self.model_select_counts[int(np.argmax(np.asarray(raq)))] += 1
+        return SizingDecision(task_type, machine, feats, "model", alloc,
+                              user_preset_gb, cap_gb,
+                              model_preds=np.asarray(preds),
+                              raq=np.asarray(raq),
+                              weights=np.asarray(weights),
+                              agg_pred_gb=float(agg),
+                              offset_gb=float(offset),
+                              offset_idx=int(off_idx))
+
+    # ------------------------------------------------------------- failure
+    def retry_allocation(self, decision: SizingDecision, attempt: int,
+                         last_alloc_gb: float) -> float:
+        pool = self.db.pool(decision.task_type, decision.machine)
+        return retry_allocation(attempt, last_alloc_gb, pool.max_seen_gb,
+                                decision.machine_cap_gb)
+
+    # ------------------------------------------------------------- observe
+    def observe(self, decision: SizingDecision, peak_mem_gb: float,
+                runtime_h: float, attempts: int = 1,
+                workflow: str = "") -> None:
+        """Task completed: update provenance, prequential log, and models."""
+        key = (decision.task_type, decision.machine)
+        self.db.add(TaskRecord(decision.task_type, decision.machine,
+                               decision.features, float(peak_mem_gb),
+                               float(runtime_h), attempts, workflow))
+        pool = self.db.pool(*key)
+        if decision.source == "model":
+            pool.add_log(decision.model_preds, decision.agg_pred_gb,
+                         float(peak_mem_gb), float(runtime_h))
+        if pool.count < self.cfg.min_history:
+            return
+
+        t0 = time.perf_counter()
+        xs = jnp.asarray(pool.xs)
+        ys = jnp.asarray(pool.ys)
+        mask = jnp.asarray(pool.mask)
+        serial = self._fit_serial.get(key, 0)
+        rng = jax.random.PRNGKey(
+            (stable_hash(f"{key}") + serial + self.cfg.seed) % (2**31))
+
+        if key not in self.states or not self.cfg.incremental:
+            # full retrain (paper's default evaluation mode, incl. MLP HPO)
+            self.states[key] = {
+                m: _jit_fit(m, self.cfg)(xs, ys, mask, rng)
+                for m in self.models
+            }
+        else:
+            new_idx = jnp.asarray(pool.count - 1)
+            self.states[key] = {
+                m: _jit_update(m, self.cfg)(self.states[key][m], xs, ys,
+                                            mask, new_idx, rng)
+                for m in self.models
+            }
+        # refresh in-sample predictions for the accuracy score (Eq. 1)
+        pool.insample_preds = np.stack([
+            np.asarray(_jit_predict_batch(m, self.cfg)(self.states[key][m], xs))
+            for m in self.models
+        ])
+        jax.block_until_ready(self.states[key])
+        self._fit_serial[key] = serial + 1
+        self.train_times_s.append(time.perf_counter() - t0)

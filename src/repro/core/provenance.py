@@ -1,0 +1,159 @@
+"""Provenance database (paper Fig. 3, phase 1/3).
+
+Stores completed task executions per (task_type, machine) key in
+fixed-capacity numpy ring buffers that grow geometrically (so the jitted
+model code sees a small, bounded set of static shapes), plus the
+*prequential* prediction log used by the accuracy score and the offset
+selector. Optionally persists every record to a JSONL file so a workflow
+can resume with full history (checkpoint/restart story).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Iterator
+
+import numpy as np
+
+INITIAL_CAP = 128
+GROWTH = 4
+
+
+@dataclasses.dataclass
+class TaskRecord:
+    """One completed task execution."""
+    task_type: str
+    machine: str
+    features: tuple[float, ...]   # e.g. (input_size_gb,)
+    peak_mem_gb: float
+    runtime_h: float
+    attempts: int = 1
+    workflow: str = ""
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self))
+
+    @staticmethod
+    def from_json(line: str) -> "TaskRecord":
+        d = json.loads(line)
+        d["features"] = tuple(d["features"])
+        return TaskRecord(**d)
+
+
+class _PoolBuffers:
+    """Masked, geometrically-growing buffers for one (task_type, machine)."""
+
+    def __init__(self, n_features: int, n_models: int):
+        self.cap = INITIAL_CAP
+        self.count = 0
+        self.n_models = n_models
+        self.xs = np.zeros((self.cap, n_features), np.float32)
+        self.ys = np.zeros((self.cap,), np.float32)
+        self.runtimes = np.zeros((self.cap,), np.float32)
+        # per-model in-sample predictions over the buffer, refreshed after
+        # every fit/update — feeds the accuracy score (Eq. 1)
+        self.insample_preds = np.zeros((n_models, self.cap), np.float32)
+        # prequential prediction log (only rows where Sizey really predicted)
+        self.log_cap = INITIAL_CAP
+        self.log_count = 0
+        self.log_model_preds = np.zeros((n_models, self.log_cap), np.float32)
+        self.log_agg = np.zeros((self.log_cap,), np.float32)
+        self.log_actual = np.zeros((self.log_cap,), np.float32)
+        self.log_runtime = np.zeros((self.log_cap,), np.float32)
+        self.max_seen_gb = 0.0
+
+    @property
+    def mask(self) -> np.ndarray:
+        m = np.zeros((self.cap,), np.float32)
+        m[: self.count] = 1.0
+        return m
+
+    @property
+    def log_mask(self) -> np.ndarray:
+        m = np.zeros((self.log_cap,), np.float32)
+        m[: self.log_count] = 1.0
+        return m
+
+    def add(self, features: np.ndarray, y: float, runtime_h: float) -> int:
+        if self.count == self.cap:
+            self.cap *= GROWTH
+            for name in ("xs", "ys", "runtimes"):
+                old = getattr(self, name)
+                new = np.zeros((self.cap, *old.shape[1:]), old.dtype)
+                new[: self.count] = old
+                setattr(self, name, new)
+            new_ip = np.zeros((self.n_models, self.cap), np.float32)
+            new_ip[:, : self.count] = self.insample_preds
+            self.insample_preds = new_ip
+        i = self.count
+        self.xs[i] = features
+        self.ys[i] = y
+        self.runtimes[i] = runtime_h
+        self.count += 1
+        self.max_seen_gb = max(self.max_seen_gb, float(y))
+        return i
+
+    def add_log(self, model_preds: np.ndarray, agg: float, actual: float,
+                runtime_h: float) -> None:
+        if self.log_count == self.log_cap:
+            self.log_cap *= GROWTH
+            new_mp = np.zeros((self.log_model_preds.shape[0], self.log_cap),
+                              np.float32)
+            new_mp[:, : self.log_count] = self.log_model_preds
+            self.log_model_preds = new_mp
+            for name in ("log_agg", "log_actual", "log_runtime"):
+                old = getattr(self, name)
+                new = np.zeros((self.log_cap,), np.float32)
+                new[: self.log_count] = old
+                setattr(self, name, new)
+        j = self.log_count
+        self.log_model_preds[:, j] = model_preds
+        self.log_agg[j] = agg
+        self.log_actual[j] = actual
+        self.log_runtime[j] = runtime_h
+        self.log_count += 1
+
+
+class ProvenanceDB:
+    """All task history, keyed by (task_type, machine)."""
+
+    def __init__(self, n_features: int = 1, n_models: int = 4,
+                 persist_path: str | None = None):
+        self.n_features = n_features
+        self.n_models = n_models
+        self.pools: dict[tuple[str, str], _PoolBuffers] = {}
+        self.records: list[TaskRecord] = []
+        self.persist_path = persist_path
+        if persist_path and os.path.exists(persist_path):
+            for rec in self._read_jsonl(persist_path):
+                self._ingest(rec)
+
+    def _read_jsonl(self, path: str) -> Iterator[TaskRecord]:
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if line:
+                    yield TaskRecord.from_json(line)
+
+    def pool(self, task_type: str, machine: str) -> _PoolBuffers:
+        key = (task_type, machine)
+        if key not in self.pools:
+            self.pools[key] = _PoolBuffers(self.n_features, self.n_models)
+        return self.pools[key]
+
+    def _ingest(self, rec: TaskRecord) -> None:
+        self.records.append(rec)
+        self.pool(rec.task_type, rec.machine).add(
+            np.asarray(rec.features, np.float32), rec.peak_mem_gb,
+            rec.runtime_h)
+
+    def add(self, rec: TaskRecord) -> None:
+        self._ingest(rec)
+        if self.persist_path:
+            with open(self.persist_path, "a") as f:
+                f.write(rec.to_json() + "\n")
+
+    def history_size(self, task_type: str, machine: str) -> int:
+        key = (task_type, machine)
+        return self.pools[key].count if key in self.pools else 0

@@ -1,0 +1,47 @@
+"""Resource Allocation Quality score (paper §II-C, Eq. 1-3).
+
+All functions are pure jnp and jit-safe. Scores are scalars in [0, 1]
+(1 = best). The accuracy score is *prequential*: it is computed from the
+predictions each model actually emitted at submission time, recorded in the
+provenance buffers, not from in-sample refits — this matches the paper's
+"accuracy scores are updated over time, while models predict and learn from
+new task data" (§II-C a).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_EPS = 1e-9
+
+
+def accuracy_score(preds: jnp.ndarray, actuals: jnp.ndarray,
+                   mask: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 1 — mean bounded relative error, per model.
+
+    preds:   (N_models, CAP) historical predictions y_hat_{i,t(j)}
+    actuals: (CAP,)          actual peak usage y_{t(j)}
+    mask:    (CAP,)          1.0 where the slot holds a real record
+
+    Returns (N_models,) accuracy scores in [0, 1]. With an empty history the
+    score is 1.0 (neutral — all models tie, gating falls back to model order).
+    """
+    rel_err = jnp.abs(preds - actuals[None, :]) / jnp.maximum(actuals[None, :], _EPS)
+    bounded = jnp.minimum(rel_err, 1.0)  # bound at 1: outliers cannot skew AS
+    n = jnp.maximum(jnp.sum(mask), 1.0)
+    return 1.0 - jnp.sum(bounded * mask[None, :], axis=-1) / n
+
+
+def efficiency_scores(preds: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 2 — ES_i = 1 - y_hat_i / max_j y_hat_j for the *current* task.
+
+    preds: (N_models,) current predictions. The largest estimate always gets
+    ES = 0; smaller estimates score higher. Negative predictions are clamped
+    to 0 before the ratio so a degenerate model cannot earn ES > 1.
+    """
+    p = jnp.maximum(preds, 0.0)
+    return 1.0 - p / jnp.maximum(jnp.max(p), _EPS)
+
+
+def raq_scores(acc: jnp.ndarray, eff: jnp.ndarray, alpha: float) -> jnp.ndarray:
+    """Eq. 3 — RAQ_i = (1 - alpha) * AS_i + alpha * ES_i."""
+    return (1.0 - alpha) * acc + alpha * eff

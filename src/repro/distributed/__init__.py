@@ -1,0 +1,4 @@
+"""Distribution layer: logical-axis sharding rules, meshes, collectives."""
+from repro.distributed.sharding import (axis_rules, logical_to_spec, shard,
+                                        param_specs, batch_specs,
+                                        DEFAULT_RULES, FSDP_AXES)

@@ -1,0 +1,1 @@
+from repro.kernels.ensemble_mlp.ops import ensemble_mlp_forward

@@ -1,0 +1,23 @@
+"""Public ensemble-MLP wrapper: padding over the task dim."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ensemble_mlp.kernel import ensemble_mlp_blocked
+from repro.utils.misc import round_up
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "interpret"))
+def ensemble_mlp_forward(x, w1, b1, w2, b2, *, bt: int = 128,
+                         interpret: bool = False):
+    """x: (M, T, d) task features per model -> (M, T) predictions."""
+    m, t, d = x.shape
+    b2 = b2.reshape(m, 1)
+    tp = round_up(t, bt)
+    xp = jnp.pad(x, ((0, 0), (0, tp - t), (0, 0)))
+    out = ensemble_mlp_blocked(xp, w1, b1, w2, b2, bt=bt,
+                               interpret=interpret)
+    return out[:, :t]

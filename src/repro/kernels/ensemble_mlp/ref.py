@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the fused ensemble MLP forward."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ensemble_mlp_ref(x, w1, b1, w2, b2):
+    """x: (M,T,d) -> (M,T)."""
+    hid = jnp.tanh(jnp.einsum("mtd,mdh->mth", x.astype(jnp.float32),
+                              w1.astype(jnp.float32)) + b1[:, None, :])
+    out = jnp.einsum("mth,mho->mto", hid, w2.astype(jnp.float32))
+    return out[..., 0] + b2
+
+
+def ensemble_mlp_ref_loop(x, w1, b1, w2, b2):
+    """The paper's formulation: one model at a time (identical numerics)."""
+    outs = []
+    for i in range(x.shape[0]):
+        h = jnp.tanh(x[i].astype(jnp.float32) @ w1[i] + b1[i])
+        outs.append((h @ w2[i])[:, 0] + b2[i])
+    return jnp.stack(outs)

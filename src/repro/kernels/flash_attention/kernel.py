@@ -1,0 +1,110 @@
+"""Blocked causal attention with online softmax (flash attention) on TPU.
+
+Grid: (batch, heads, q_blocks, kv_blocks) — the kv dim is innermost and
+sequential; (m, l, acc) accumulators live in VMEM scratch and persist
+across kv steps. Fully-masked (above-diagonal) tiles are skipped with
+pl.when — unlike the portable jnp chunked path, the kernel really does
+~halve the causal FLOPs. Q/K/V tiles are VMEM blocks of (bq|bk, D); D is
+padded to the 128-lane MXU width by ops.py.
+
+GQA is handled in the K/V index maps (kv_head = head // groups) so the
+repeated heads are never materialized (the jnp fallback pays that copy).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_body(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                scale: float, bq: int, bk: int, nk: int, causal: bool,
+                kv_len: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # skip tiles fully above the causal diagonal
+    live = (iq * bq + bq > ik * bk) if causal else True
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)          # (bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)          # (bk, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+        cols = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = cols < kv_len
+        if causal:
+            rows = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            mask = mask & (rows >= cols)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1)
+        pv = jax.lax.dot_general(
+            p.astype(v_ref.dtype), v_ref[0, 0], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + pv
+        m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        out = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q, k, v, *, scale: float, causal: bool,
+                         kv_len: int, bq: int = 128, bk: int = 128,
+                         interpret: bool = False):
+    """q: (B, H, Sq, D); k/v: (B, Hkv, Sk, D), H = Hkv * groups.
+
+    Sq/Sk must be multiples of bq/bk and D a multiple of 128 on real TPU
+    (ops.py pads); kv_len masks padded key columns.
+    """
+    b, h, sq, d = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    groups = h // hkv
+    nq, nk = sq // bq, sk // bk
+
+    body = functools.partial(_flash_body, scale=scale, bq=bq, bk=bk, nk=nk,
+                             causal=causal, kv_len=kv_len)
+    grid = (b, h, nq, nk)
+    return pl.pallas_call(
+        body,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h_, iq, ik: (b_, h_ // groups, ik, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h_, iq, ik: (b_, h_ // groups, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
+        scratch_shapes=[
+            _vmem((bq,), jnp.float32),      # running max m
+            _vmem((bq,), jnp.float32),      # running denom l
+            _vmem((bq, d), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, dtype)

@@ -1,0 +1,44 @@
+"""Public flash-attention wrapper: layout, GQA, and MXU padding."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+from repro.utils.misc import round_up
+
+LANE = 128
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "scale", "interpret",
+                                             "bq", "bk"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    scale: float | None = None, interpret: bool = False,
+                    bq: int = 128, bk: int = 128):
+    """Model-layout entry point.
+
+    q: (B, S, H, D); k/v: (B, S, Hkv, D) — the layout attention_block
+    produces. Pads D to the 128-lane width and S to the block size, and
+    never materializes the GQA-repeated heads.
+    """
+    b, s, h, dim = q.shape
+    scale = dim ** -0.5 if scale is None else scale
+
+    bq = min(bq, round_up(s, 8))
+    bk = min(bk, round_up(s, 8))
+    d_pad = round_up(dim, LANE)
+    s_pad = round_up(s, max(bq, bk))
+
+    def pad(x):
+        return jnp.pad(x, ((0, 0), (0, s_pad - s), (0, 0),
+                           (0, d_pad - x.shape[-1])))
+
+    qt = pad(q).transpose(0, 2, 1, 3)   # (B, H, S, D)
+    kt = pad(k).transpose(0, 2, 1, 3)
+    vt = pad(v).transpose(0, 2, 1, 3)
+
+    out = flash_attention_bhsd(qt, kt, vt, scale=scale, causal=causal,
+                               kv_len=s, bq=bq, bk=bk, interpret=interpret)
+    return out.transpose(0, 2, 1, 3)[:, :s, :, :dim]

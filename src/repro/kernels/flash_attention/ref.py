@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, scale: float, causal: bool,
+                  kv_len: int | None = None):
+    """q: (B, H, Sq, D); k/v: (B, Hkv, Sk, D). fp32 softmax, exact."""
+    b, h, sq, d = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    groups = h // hkv
+    k = jnp.repeat(k, groups, axis=1)
+    v = jnp.repeat(v, groups, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    cols = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), bool)
+    if kv_len is not None:
+        mask = mask & (cols[None, :] < kv_len)
+    if causal:
+        mask = mask & (jnp.arange(sq)[:, None] >= cols[None, :])
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

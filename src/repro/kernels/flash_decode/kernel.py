@@ -1,0 +1,94 @@
+"""Flash-decode: single-token attention against a long KV cache.
+
+The TPU kernel behind the decode_32k / long_500k serving path (§Perf cells
+A/C established the split-S schedule at the GSPMD level; this is the
+intra-chip version). Grid: (batch, heads, s_blocks) — s_blocks sequential
+with (m, l, acc) VMEM scratch; blocks wholly beyond ``pos`` are skipped
+with pl.when, so decode cost tracks the LIVE context length, not the cache
+allocation. GQA is handled by the K/V index maps (no repeated-head
+materialization).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _decode_body(pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
+                 acc_scr, *, bs: int, ns: int, scale: float):
+    isb = pl.program_id(2)
+    pos = pos_ref[0]
+
+    @pl.when(isb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # skip blocks entirely beyond the live context [0, pos]
+    @pl.when(isb * bs <= pos)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)           # (1, D)
+        k = k_ref[0, 0].astype(jnp.float32)           # (bs, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)[0] * scale
+        idx = isb * bs + jax.lax.broadcasted_iota(jnp.int32, (bs,), 0)
+        s = jnp.where(idx <= pos, s, NEG_INF)         # (bs,)
+
+        m_prev = m_scr[0]
+        m_new = jnp.maximum(m_prev, jnp.max(s))
+        p = jnp.exp(s - m_new)                        # (bs,)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[0] = l_scr[0] * corr + jnp.sum(p)
+        pv = jax.lax.dot_general(
+            p[None, :].astype(v_ref.dtype), v_ref[0, 0],
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)       # (1, D)
+        acc_scr[...] = acc_scr[...] * corr + pv
+        m_scr[0] = m_new
+
+    @pl.when(isb == ns - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[0], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_decode_bhd(q, k, v, pos, *, scale: float, bs: int = 512,
+                     interpret: bool = False):
+    """q: (B, H, 1, D); k/v: (B, Hkv, S, D); pos: () int32 — live length-1.
+
+    Returns (B, H, 1, D). S must divide bs (ops.py pads)."""
+    b, h, _, d = q.shape
+    hkv, s = k.shape[1], k.shape[2]
+    groups = h // hkv
+    ns = s // bs
+    body = functools.partial(_decode_body, bs=bs, ns=ns, scale=scale)
+    return pl.pallas_call(
+        body,
+        grid=(b, h, ns),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b_, h_, i: (0,)),   # pos scalar
+            pl.BlockSpec((1, 1, 1, d), lambda b_, h_, i: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1, bs, d),
+                         lambda b_, h_, i: (b_, h_ // groups, i, 0)),
+            pl.BlockSpec((1, 1, bs, d),
+                         lambda b_, h_, i: (b_, h_ // groups, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, d),
+                               lambda b_, h_, i: (b_, h_, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, 1, d), q.dtype),
+        scratch_shapes=[_vmem((1,), jnp.float32),
+                        _vmem((1,), jnp.float32),
+                        _vmem((1, d), jnp.float32)],
+        interpret=interpret,
+    )(pos[None].astype(jnp.int32), q, k, v)
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, dtype)

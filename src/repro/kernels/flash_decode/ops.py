@@ -1,0 +1,39 @@
+"""Public flash-decode wrapper: model layout, GQA, padding."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_decode.kernel import flash_decode_bhd
+from repro.utils.misc import round_up
+
+LANE = 128
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "bs", "interpret"))
+def flash_decode_attention(q, k_cache, v_cache, pos, *,
+                           scale: float | None = None, bs: int = 512,
+                           interpret: bool = False):
+    """Model layout: q (B, 1, H, D); caches (B, S, Hkv, D); pos scalar.
+
+    Returns (B, 1, H, D). Pads D to the lane width and S to the block."""
+    b, _, h, d = q.shape
+    s = k_cache.shape[1]
+    scale = d ** -0.5 if scale is None else scale
+    bs = min(bs, round_up(s, 8))
+    d_pad = round_up(d, LANE)
+    s_pad = round_up(s, bs)
+
+    qt = jnp.pad(q, ((0, 0), (0, 0), (0, 0), (0, d_pad - d))) \
+        .transpose(0, 2, 1, 3)                       # (B, H, 1, D)
+
+    def pad_cache(c):
+        return jnp.pad(c, ((0, 0), (0, s_pad - s), (0, 0),
+                           (0, d_pad - c.shape[-1]))).transpose(0, 2, 1, 3)
+
+    out = flash_decode_bhd(qt, pad_cache(k_cache), pad_cache(v_cache),
+                           jnp.asarray(pos), scale=scale, bs=bs,
+                           interpret=interpret)
+    return out.transpose(0, 2, 1, 3)[..., :d]

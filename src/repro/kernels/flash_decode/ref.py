@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for flash-decode (mirrors models/attention.py decode)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, pos, *, scale: float):
+    """q: (B, H, 1, D); k/v: (B, Hkv, S, D); pos scalar -> (B, H, 1, D)."""
+    groups = q.shape[1] // k.shape[1]
+    kk = jnp.repeat(k, groups, axis=1).astype(jnp.float32)
+    vv = jnp.repeat(v, groups, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kk) * scale
+    valid = jnp.arange(k.shape[2])[None, None, None, :] <= pos
+    s = jnp.where(valid, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vv).astype(q.dtype)

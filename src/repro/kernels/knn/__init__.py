@@ -1,0 +1,1 @@
+from repro.kernels.knn.ops import knn_predict, pairwise_sq_dists

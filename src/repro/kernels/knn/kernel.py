@@ -1,0 +1,61 @@
+"""Blocked pairwise squared distances for Sizey's k-NN predictor.
+
+TPU adaptation (DESIGN.md §3): sklearn's KDTree is pointer-chasing; at
+workflow history sizes brute force on the MXU wins. The expansion
+|q - x|^2 = |q|^2 + |x|^2 - 2 q.x turns the hot loop into one matmul per
+(query-block x history-block) tile; masked history rows are pushed to +inf
+so the top-k select outside never picks them.
+
+Grid: (query_blocks, history_blocks); tiles live in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INF = 3.4e38  # python float: pallas kernels may not capture traced consts
+
+
+def _dist_body(q_ref, x_ref, mask_ref, o_ref, *, bh: int, n_hist: int):
+    ih = pl.program_id(1)
+    q = q_ref[...].astype(jnp.float32)        # (bq, d)
+    x = x_ref[...].astype(jnp.float32)        # (bh, d)
+    m = mask_ref[...]                         # (bh,)
+
+    cross = jax.lax.dot_general(q, x, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    q2 = jnp.sum(q * q, axis=1, keepdims=True)
+    x2 = jnp.sum(x * x, axis=1, keepdims=True).T
+    d2 = q2 + x2 - 2.0 * cross                # (bq, bh)
+
+    # +inf for masked rows and for padding beyond the real history
+    cols = ih * bh + jax.lax.broadcasted_iota(jnp.int32, d2.shape, 1)
+    valid = (m[None, :] > 0) & (cols < n_hist)
+    o_ref[...] = jnp.where(valid, d2, INF)
+
+
+def pairwise_sq_dists_blocked(queries, hist, mask, *, bq: int = 128,
+                              bh: int = 128, n_hist: int | None = None,
+                              interpret: bool = False):
+    """queries: (Q, d); hist: (T, d); mask: (T,) -> (Q, T) fp32 distances.
+
+    Q and T must be multiples of bq/bh (ops.py pads)."""
+    q_n, d = queries.shape
+    t = hist.shape[0]
+    n_hist = t if n_hist is None else n_hist
+    body = functools.partial(_dist_body, bh=bh, n_hist=n_hist)
+    return pl.pallas_call(
+        body,
+        grid=(q_n // bq, t // bh),
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda iq, ih: (iq, 0)),
+            pl.BlockSpec((bh, d), lambda iq, ih: (ih, 0)),
+            pl.BlockSpec((bh,), lambda iq, ih: (ih,)),
+        ],
+        out_specs=pl.BlockSpec((bq, bh), lambda iq, ih: (iq, ih)),
+        out_shape=jax.ShapeDtypeStruct((q_n, t), jnp.float32),
+        interpret=interpret,
+    )(queries, hist, mask)

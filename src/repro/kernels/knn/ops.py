@@ -1,0 +1,35 @@
+"""Public k-NN wrapper: padding + top-k average."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.knn.kernel import pairwise_sq_dists_blocked
+from repro.utils.misc import round_up
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bh", "interpret"))
+def pairwise_sq_dists(queries, hist, mask, *, bq: int = 128, bh: int = 128,
+                      interpret: bool = False):
+    q_n, d = queries.shape
+    t = hist.shape[0]
+    qp, tp = round_up(q_n, bq), round_up(t, bh)
+    queries = jnp.pad(queries, ((0, qp - q_n), (0, 0)))
+    hist = jnp.pad(hist, ((0, tp - t), (0, 0)))
+    mask = jnp.pad(mask, (0, tp - t))
+    out = pairwise_sq_dists_blocked(queries, hist, mask, bq=bq, bh=bh,
+                                    n_hist=t, interpret=interpret)
+    return out[:q_n, :t]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def knn_predict(queries, hist, ys, mask, *, k: int = 5,
+                interpret: bool = False):
+    """Batched k-NN regression: mean target of the k nearest history rows."""
+    d2 = pairwise_sq_dists(queries, hist, mask, interpret=interpret)
+    neg, idx = jax.lax.top_k(-d2, min(k, d2.shape[-1]))
+    valid = -neg < 3.3e38
+    n = jnp.maximum(jnp.sum(valid, -1), 1)
+    return jnp.sum(jnp.where(valid, ys[idx], 0.0), -1) / n

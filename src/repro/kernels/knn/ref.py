@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the k-NN kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pairwise_sq_dists_ref(queries, hist, mask):
+    """(Q, d), (T, d), (T,) -> (Q, T), masked rows at +inf."""
+    d2 = jnp.sum((queries[:, None, :].astype(jnp.float32)
+                  - hist[None, :, :].astype(jnp.float32)) ** 2, -1)
+    return jnp.where(mask[None, :] > 0, d2, jnp.float32(3.4e38))
+
+
+def knn_predict_ref(queries, hist, ys, mask, k: int):
+    d2 = pairwise_sq_dists_ref(queries, hist, mask)
+    neg, idx = jax.lax.top_k(-d2, k)
+    valid = -neg < 3.3e38
+    n = jnp.maximum(jnp.sum(valid, -1), 1)
+    return jnp.sum(jnp.where(valid, ys[idx], 0.0), -1) / n

@@ -1,0 +1,101 @@
+"""Mamba2 SSD chunked scan as a Pallas TPU kernel.
+
+Grid: (batch, heads, chunks) — chunks innermost and sequential; the (P, N)
+recurrent state lives in VMEM scratch and is carried across chunk steps
+(the TPU-native replacement for the GPU kernel's warp-parallel scan:
+sequential grid + MXU quadratic intra-chunk term).
+
+Per chunk of Q tokens (head h, batch b):
+    da   = dt * A[h]                        (Q,)
+    cum  = cumsum(da)                       (Q,)
+    Ydiag[q] = sum_{t<=q} e^{cum_q - cum_t} (C_q . B_t) dt_t x_t
+    Yoff[q]  = e^{cum_q} C_q . state
+    state'   = e^{cum_Q} state + sum_t e^{cum_Q - cum_t} B_t dt_t x_t
+
+dt arrives pre-softplused; x is (Q, P); B/C are (Q, N) shared across heads
+(ngroups=1, indexed by the (b, c) block map).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_body(x_ref, dt_ref, b_ref, c_ref, a_ref, y_ref, state_scr, *,
+              q_chunk: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0, 0].astype(jnp.float32)        # (Q, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)      # (Q,)
+    bm = b_ref[0].astype(jnp.float32)          # (Q, N)
+    cm = c_ref[0].astype(jnp.float32)          # (Q, N)
+    a = a_ref[0]                               # scalar A (negative)
+
+    da = dt * a                                # (Q,)
+    cum = jnp.cumsum(da)                       # (Q,)
+    xs = x * dt[:, None]                       # (Q, P)
+
+    # intra-chunk quadratic term
+    diff = cum[:, None] - cum[None, :]         # (Q, Q) target q, source t
+    rows = jax.lax.broadcasted_iota(jnp.int32, (q_chunk, q_chunk), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (q_chunk, q_chunk), 1)
+    decay = jnp.where(rows >= cols, jnp.exp(diff), 0.0)
+    g = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (Q, Q)
+    y_diag = jax.lax.dot_general(g * decay, xs, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+
+    # contribution of the carried state
+    state = state_scr[...]                     # (P, N)
+    y_off = jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        cm, state, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)    # (Q, P)
+
+    y_ref[0, 0] = (y_diag + y_off).astype(y_ref.dtype)
+
+    # state update: decay + within-chunk outer products
+    w_end = jnp.exp(cum[-1] - cum)             # (Q,)
+    new_state = jnp.exp(cum[-1]) * state + jax.lax.dot_general(
+        xs * w_end[:, None], bm, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)    # (P, N)
+    state_scr[...] = new_state
+
+
+def ssd_scan_bhsp(x, dt, bmat, cmat, a, *, q_chunk: int = 128,
+                  interpret: bool = False):
+    """x: (B, H, S, P); dt: (B, H, S); bmat/cmat: (B, S, N); a: (H,).
+
+    Returns y: (B, H, S, P) fp32. S must divide by q_chunk (ops.py pads).
+    """
+    b, h, s, p = x.shape
+    n = bmat.shape[-1]
+    nc = s // q_chunk
+    body = functools.partial(_ssd_body, q_chunk=q_chunk)
+    return pl.pallas_call(
+        body,
+        grid=(b, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, q_chunk, p), lambda b_, h_, c: (b_, h_, c, 0)),
+            pl.BlockSpec((1, 1, q_chunk), lambda b_, h_, c: (b_, h_, c)),
+            pl.BlockSpec((1, q_chunk, n), lambda b_, h_, c: (b_, c, 0)),
+            pl.BlockSpec((1, q_chunk, n), lambda b_, h_, c: (b_, c, 0)),
+            pl.BlockSpec((1,), lambda b_, h_, c: (h_,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, q_chunk, p),
+                               lambda b_, h_, c: (b_, h_, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, p), jnp.float32),
+        scratch_shapes=[_vmem((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, bmat, cmat, a)
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, dtype)

@@ -1,0 +1,31 @@
+"""Public SSD-scan wrapper: padding + layout."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.kernel import ssd_scan_bhsp
+from repro.utils.misc import round_up
+
+
+@functools.partial(jax.jit, static_argnames=("q_chunk", "interpret"))
+def ssd_scan(x, dt, bmat, cmat, a, *, q_chunk: int = 128,
+             interpret: bool = False):
+    """x: (B,H,S,P); dt: (B,H,S) pre-softplused; bmat/cmat: (B,S,N); a: (H,).
+
+    Pads S up to a q_chunk multiple (dt=0 padding rows are exact no-ops:
+    decay=e^0=1, update=0) and slices the result back.
+    """
+    b, h, s, p = x.shape
+    s_pad = round_up(s, q_chunk)
+    if s_pad != s:
+        pad = ((0, 0), (0, 0), (0, s_pad - s), (0, 0))
+        x = jnp.pad(x, pad)
+        dt = jnp.pad(dt, ((0, 0), (0, 0), (0, s_pad - s)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, s_pad - s), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, s_pad - s), (0, 0)))
+    y = ssd_scan_bhsp(x, dt, bmat, cmat, a, q_chunk=q_chunk,
+                      interpret=interpret)
+    return y[:, :, :s, :]

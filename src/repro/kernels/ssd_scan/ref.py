@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the SSD scan: the literal O(S) recurrence.
+
+    state_t = exp(dt_t * A) state_{t-1} + dt_t * (B_t outer x_t)
+    y_t     = C_t . state_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(x, dt, bmat, cmat, a):
+    """x: (B,H,S,P); dt: (B,H,S); bmat/cmat: (B,S,N); a: (H,) -> (B,H,S,P)."""
+    x = x.astype(jnp.float32)
+    dt = dt.astype(jnp.float32)
+    bmat = bmat.astype(jnp.float32)
+    cmat = cmat.astype(jnp.float32)
+    bsz, h, s, p = x.shape
+    n = bmat.shape[-1]
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp     # (B,H,P), (B,H), (B,N), (B,N)
+        decay = jnp.exp(dtt * a[None, :])            # (B,H)
+        upd = (xt * dtt[..., None])[..., None] * bt[:, None, None, :]
+        state = state * decay[..., None, None] + upd  # (B,H,P,N)
+        y = jnp.einsum("bhpn,bn->bhp", state, ct)
+        return state, y
+
+    state0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    _, ys = jax.lax.scan(
+        step, state0,
+        (jnp.moveaxis(x, 2, 0), jnp.moveaxis(dt, 2, 0),
+         jnp.moveaxis(bmat, 1, 0), jnp.moveaxis(cmat, 1, 0)))
+    return jnp.moveaxis(ys, 0, 2)     # (B,H,S,P)

@@ -1,0 +1,64 @@
+"""Elastic scaling: rebuild the mesh from the live device count and
+reshard the training state onto it.
+
+On a real pod, device loss surfaces as a changed ``jax.devices()`` set
+after a restart; the controller picks the largest usable mesh, reshards
+the last checkpoint, and resumes. Tested by shrinking/growing a forced
+host-device set (8 -> 4 -> 8).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from repro.distributed.sharding import param_specs
+
+
+def largest_mesh(devices=None, *, model_axis: int | None = None) -> Mesh:
+    """Largest (data, model) mesh for the available devices.
+
+    Prefers the widest model axis that divides the device count (capped at
+    16 to match the production sharding rules)."""
+    devices = list(jax.devices()) if devices is None else list(devices)
+    n = len(devices)
+    if model_axis is None:
+        model_axis = 1
+        for m in (16, 8, 4, 2):
+            if n % m == 0 and n >= m:
+                model_axis = m
+                break
+    data = n // model_axis
+    arr = np.array(devices[: data * model_axis]).reshape(data, model_axis)
+    return Mesh(arr, ("data", "model"))
+
+
+def reshard(tree, mesh: Mesh, specs=None):
+    """device_put a state pytree onto a (possibly different) mesh."""
+    specs = param_specs(tree, mesh) if specs is None else specs
+    shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                             is_leaf=lambda x: hasattr(x, "_normalized_spec")
+                             or type(x).__name__ == "PartitionSpec")
+    return jax.device_put(tree, shardings)
+
+
+class ElasticController:
+    """Watches the device count; on change, rebuilds mesh + reshards."""
+
+    def __init__(self, state, mesh: Mesh | None = None):
+        self.mesh = mesh or largest_mesh()
+        self.state = reshard(state, self.mesh)
+        self.events: list[tuple[int, int]] = []
+
+    def maybe_rescale(self, devices=None):
+        devices = list(jax.devices()) if devices is None else list(devices)
+        if len(devices) == self.mesh.size:
+            return False
+        old = self.mesh.size
+        # pull to host (survives arbitrary topology change), then reshard
+        host_state = jax.device_get(self.state)
+        self.mesh = largest_mesh(devices)
+        self.state = reshard(host_state, self.mesh)
+        self.events.append((old, self.mesh.size))
+        return True

@@ -1,0 +1,60 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run pattern).
+
+``input_specs(cfg, shape)`` returns (step_kind, batch_spec_tree):
+  * train   -> the train_step batch {tokens[, patch_embeds]}
+  * prefill -> the prefill batch (same contents, no labels needed — labels
+               are derived by shifting inside the loss)
+  * decode  -> {"tokens": (B, 1)} + the KV/SSM cache tree for seq_len
+               context (``decode_*``/``long_*`` lower serve_step, NOT
+               train_step, per the assignment).
+
+All leaves are ShapeDtypeStructs: weak-type-correct, shardable, and never
+allocated.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.layers import dtype_of
+from repro.models.model import init_cache
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def token_batch_spec(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    """Token (+ stub-frontend) inputs for a full-sequence step."""
+    spec = {}
+    if cfg.family == "vlm":
+        # the InternViT frontend is a stub: precomputed patch embeddings
+        # occupy the first n_patches positions of the sequence budget
+        text = seq - cfg.n_patches
+        spec["patch_embeds"] = _sds((batch, cfg.n_patches, cfg.d_model),
+                                    dtype_of(cfg.compute_dtype))
+        spec["tokens"] = _sds((batch, text), jnp.int32)
+    else:
+        spec["tokens"] = _sds((batch, seq), jnp.int32)
+    return spec
+
+
+def cache_spec(cfg: ModelConfig, batch: int, max_seq: int):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_seq))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """(step_kind, spec_tree) for one (arch x shape) cell."""
+    if shape.kind == "train":
+        return "train", token_batch_spec(cfg, shape.global_batch,
+                                         shape.seq_len)
+    if shape.kind == "prefill":
+        return "prefill", token_batch_spec(cfg, shape.global_batch,
+                                           shape.seq_len)
+    if shape.kind == "decode":
+        return "decode", {
+            "tokens": _sds((shape.global_batch, 1), jnp.int32),
+            "cache": cache_spec(cfg, shape.global_batch, shape.seq_len),
+        }
+    raise ValueError(shape.kind)

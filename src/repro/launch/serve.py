@@ -1,0 +1,55 @@
+"""Batched serving driver.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch musicgen-large \
+        --requests 16 --max-new 24
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import SizeyConfig
+from repro.launch.sizing import KVCacheSizer
+from repro.models import build_model
+from repro.serving.engine import Request, ServeEngine
+
+
+def main(argv=None) -> ServeEngine:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="musicgen-large")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--temperature", type=float, default=0.8)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(model, params, max_batch=args.batch, max_seq=256,
+                         temperature=args.temperature,
+                         sizer=KVCacheSizer(SizeyConfig(min_history=2)))
+
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab,
+                                        rng.integers(8, 32)).astype(np.int32),
+                    max_new_tokens=args.max_new)
+            for i in range(args.requests)]
+
+    t0 = time.time()
+    completions = engine.serve(reqs)
+    dt = time.time() - t0
+    tok = sum(len(c.tokens) for c in completions)
+    print(f"{len(completions)} completions, {tok} tokens in {dt:.1f}s "
+          f"({tok/dt:.1f} tok/s), {engine.stats['batches']} batches, "
+          f"last KV cache {engine.stats['kv_bytes']/1024**2:.1f} MiB")
+    return engine
+
+
+if __name__ == "__main__":
+    main()

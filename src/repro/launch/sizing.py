@@ -1,0 +1,96 @@
+"""Sizey <-> framework integration: online HBM sizing for LM jobs.
+
+The paper sizes black-box workflow tasks; here the SAME predictor sizes
+(arch x shape x mesh) jobs on the TPU fleet. A job's features are cheap,
+deployment-known scalars (parameter GB, tokens per step, context length);
+the target is peak per-chip HBM. Ground truth comes from
+compiled.memory_analysis() (dry-run) or the trainer's live footprint —
+Sizey itself still only sees (features -> peak GB) pairs, preserving the
+paper's black-box assumptions A1-A3.
+
+An OOM-killed job follows the paper's §II-E ladder: retry at the max peak
+ever observed for the job type, then doubling, while the driver restarts
+from the latest checkpoint — the paper's failure handling becomes the
+framework's fault-tolerance policy.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core import SizeyConfig
+from repro.core.predictor import SizeyPredictor, SizingDecision
+from repro.launch.mesh import HBM_PER_CHIP_GB
+
+
+def job_features(cfg: ModelConfig, shape: ShapeConfig, chips: int):
+    """Deployment-known scalars describing one job, per chip."""
+    param_gb = cfg.param_count() * 4 / 1024**3 / chips
+    tokens_m = shape.global_batch * shape.seq_len / 1e6 / chips
+    ctx_k = shape.seq_len / 1024.0
+    return (param_gb, tokens_m, ctx_k)
+
+
+@dataclasses.dataclass
+class JobDecision:
+    sizing: SizingDecision
+    arch: str
+    shape: str
+    mesh: str
+
+
+class SizeyJobSizer:
+    """Sizes LM jobs' per-chip HBM with the paper's predictor."""
+
+    def __init__(self, cfg: SizeyConfig | None = None,
+                 hbm_cap_gb: float = HBM_PER_CHIP_GB,
+                 preset_gb: float = HBM_PER_CHIP_GB):
+        self.predictor = SizeyPredictor(
+            cfg or SizeyConfig(min_history=2), n_features=3,
+            default_machine_cap_gb=hbm_cap_gb)
+        self.preset_gb = preset_gb
+        self.hbm_cap_gb = hbm_cap_gb
+
+    def size_job(self, arch: str, cfg: ModelConfig, shape: ShapeConfig,
+                 mesh_name: str, chips: int) -> JobDecision:
+        feats = job_features(cfg, shape, chips)
+        dec = self.predictor.predict(
+            task_type=f"{arch}/{shape.kind}", machine=mesh_name,
+            features=feats, user_preset_gb=self.preset_gb,
+            machine_cap_gb=self.hbm_cap_gb)
+        return JobDecision(dec, arch, shape.name, mesh_name)
+
+    def observe_job(self, job: JobDecision, peak_gb: float,
+                    runtime_h: float = 1.0, attempts: int = 1):
+        self.predictor.observe(job.sizing, peak_gb, runtime_h, attempts,
+                               workflow=job.mesh)
+
+    def retry_allocation(self, job: JobDecision, attempt: int,
+                         last_alloc_gb: float) -> float:
+        return self.predictor.retry_allocation(job.sizing, attempt,
+                                               last_alloc_gb)
+
+
+class KVCacheSizer:
+    """ServeEngine hook: sizes a batch's KV cache online."""
+
+    def __init__(self, cfg: SizeyConfig | None = None,
+                 cap_gb: float = HBM_PER_CHIP_GB):
+        self.predictor = SizeyPredictor(
+            cfg or SizeyConfig(min_history=2), n_features=2,
+            default_machine_cap_gb=cap_gb)
+        self.decisions: list[SizingDecision] = []
+        self._pending: SizingDecision | None = None
+
+    def before_batch(self, batch: int, max_seq: int):
+        self._pending = self.predictor.predict(
+            "kv_cache", "serve", (batch / 8.0, max_seq / 1024.0),
+            user_preset_gb=4.0)
+        self.decisions.append(self._pending)
+        return self._pending.allocation_gb
+
+    def after_batch(self, batch: int, max_seq: int, kv_bytes: int):
+        if self._pending is not None:
+            self.predictor.observe(self._pending, kv_bytes / 1024**3,
+                                   runtime_h=0.01)
+            self._pending = None

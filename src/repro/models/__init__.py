@@ -1,0 +1,9 @@
+"""LM substrate: pure-JAX model zoo for the 10 assigned architectures.
+
+No flax — parameters are nested dicts of jnp arrays; blocks are pure
+functions; stacks scan over stacked per-layer weights (compact HLO, fast
+512-device dry-run compiles). Logical sharding annotations come from
+repro.distributed.sharding and are no-ops without an active mesh.
+"""
+from repro.models.model import (Model, build_model, init_params,
+                                params_shape)

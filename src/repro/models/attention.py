@@ -1,0 +1,205 @@
+"""GQA attention: full (train/prefill), cached decode, and hooks for the
+Pallas flash kernel (TPU) / sequence-sharded flash-decode (shard_map).
+
+Projections are stored flattened (d_model, n_heads*head_dim) — that product
+divides the 16-way model axis for every assigned arch while n_heads alone
+does not (qwen1.5 has 40 heads); heads are reshaped *inside* the step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models.layers import apply_rope, dense_init, rope_angles, INIT_STD
+
+_NEG = -1e9
+
+
+def attention_params(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    qd = cfg.n_heads * cfg.head_dim
+    kvd = cfg.n_kv * cfg.head_dim
+    p = {
+        "wq": dense_init(ks[0], (d, qd), dtype),
+        "wk": dense_init(ks[1], (d, kvd), dtype),
+        "wv": dense_init(ks[2], (d, kvd), dtype),
+        "wo": dense_init(ks[3], (qd, d), dtype,
+                         std=INIT_STD / (2 * max(cfg.n_layers, 1)) ** 0.5),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((qd,), dtype)
+        p["bk"] = jnp.zeros((kvd,), dtype)
+        p["bv"] = jnp.zeros((kvd,), dtype)
+    return p
+
+
+def _project_qkv(params, x, cfg: ModelConfig, positions):
+    """x: (B, S, d) -> q (B,S,H,D), k/v (B,S,Hkv,D) with RoPE applied."""
+    b, s, _ = x.shape
+    cd = x.dtype
+    q = x @ params["wq"].astype(cd)
+    k = x @ params["wk"].astype(cd)
+    v = x @ params["wv"].astype(cd)
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(cd)
+        k = k + params["bk"].astype(cd)
+        v = v + params["bv"].astype(cd)
+    q = q.reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(b, s, cfg.n_kv, cfg.head_dim)
+    v = v.reshape(b, s, cfg.n_kv, cfg.head_dim)
+    cos, sin = rope_angles(positions, cfg.head_dim, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def _repeat_kv(k: jnp.ndarray, groups: int):
+    """(B, S, Hkv, D) -> (B, S, Hkv*groups, D)."""
+    if groups == 1:
+        return k
+    b, s, hkv, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, hkv, groups, d)) \
+        .reshape(b, s, hkv * groups, d)
+
+
+# above this sequence length the chunked online-softmax path is used so the
+# (B,H,S,S) score tensor is never materialized (flash-attention memory
+# behaviour in pure jnp; the Pallas kernel is the TPU implementation)
+CHUNKED_THRESHOLD = 4096
+Q_BLOCK = 1024
+KV_BLOCK = 1024
+
+
+def naive_causal_attention(q, k, v, scale: float):
+    """Reference full attention (oracle for the flash kernel).
+
+    q: (B,S,H,D), k/v already head-repeated to (B,S,H,D).
+    """
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) * scale
+    s = q.shape[1]
+    causal = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(causal[None, None], scores.astype(jnp.float32), _NEG)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def chunked_causal_attention(q, k, v, scale: float,
+                             q_block: int = Q_BLOCK,
+                             kv_block: int = KV_BLOCK):
+    """Online-softmax attention in q/kv blocks: O(S * block) live memory.
+
+    Causality is enforced by masking inside each (q_block x kv_block) tile;
+    fully-masked tiles are still computed (XLA cannot skip inside scan), so
+    the compute term this contributes to the roofline is the same 2x-masked
+    upper bound as dense masked attention — the Pallas kernel skips them.
+    """
+    b, s, h, d = q.shape
+    nq, nk = s // q_block, s // kv_block
+    qb = jnp.moveaxis(q.reshape(b, nq, q_block, h, d), 1, 0)
+    kb = jnp.moveaxis(k.reshape(b, nk, kv_block, h, d), 1, 0)
+    vb = jnp.moveaxis(v.reshape(b, nk, kv_block, h, d), 1, 0)
+
+    def per_q_block(args):
+        qi, q_tile = args  # (), (b, q_block, h, d)
+        q_pos = qi * q_block + jnp.arange(q_block)
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            kj, k_tile, v_tile = inp
+            k_pos = kj * kv_block + jnp.arange(kv_block)
+            st = jnp.einsum("bqhd,bkhd->bhqk", q_tile, k_tile) * scale
+            st = st.astype(jnp.float32)
+            mask = q_pos[:, None] >= k_pos[None, :]
+            st = jnp.where(mask[None, None], st, _NEG)
+            m_new = jnp.maximum(m, jnp.max(st, axis=-1))
+            p = jnp.exp(st - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p.astype(v_tile.dtype), v_tile)
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((b, h, q_block), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, h, q_block), jnp.float32)
+        a0 = jnp.zeros((b, h, q_block, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nk), kb, vb))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return jnp.moveaxis(out, 1, 2)  # (b, q_block, h, d)
+
+    out = jax.lax.map(per_q_block, (jnp.arange(nq), qb))
+    return jnp.moveaxis(out, 0, 1).reshape(b, s, h, d).astype(q.dtype)
+
+
+def causal_attention(q, k, v, cfg: ModelConfig):
+    """Dispatch: naive for short sequences, chunked beyond the threshold."""
+    groups = cfg.n_heads // cfg.n_kv
+    k = _repeat_kv(k, groups)
+    v = _repeat_kv(v, groups)
+    scale = cfg.head_dim ** -0.5
+    s = q.shape[1]
+    use_chunked = (cfg.attn_impl == "chunked"
+                   or (cfg.attn_impl == "auto" and s > CHUNKED_THRESHOLD))
+    if use_chunked and s % Q_BLOCK == 0 and s % KV_BLOCK == 0:
+        return chunked_causal_attention(q, k, v, scale)
+    return naive_causal_attention(q, k, v, scale)
+
+
+def attention_block(params, x, cfg: ModelConfig, positions):
+    """Full self-attention sublayer (pre-norm residual handled by caller).
+
+    Returns (out, (k, v)) so prefill can collect the cache.
+    """
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    q = shard(q, ("batch", None, "heads", None))
+    k = shard(k, ("batch", None, "heads", None))
+    v = shard(v, ("batch", None, "heads", None))
+    o = causal_attention(q, k, v, cfg)
+    b, s = x.shape[:2]
+    o = o.reshape(b, s, cfg.n_heads * cfg.head_dim)
+    return o @ params["wo"].astype(x.dtype), (k, v)
+
+
+def decode_attention_block(params, x, cfg: ModelConfig, k_cache, v_cache,
+                           pos):
+    """Single-token decode against a KV cache.
+
+    x: (B, 1, d); k_cache/v_cache: (B, S_max, Hkv, D); pos: scalar int —
+    number of tokens already in the cache. Returns (out, k_new, v_new) where
+    k_new/v_new are the (B, 1, Hkv, D) entries to insert at ``pos``.
+    """
+    b = x.shape[0]
+    s_max = k_cache.shape[1]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(params, x, cfg, positions)
+
+    # insert at ``pos`` with an elementwise select instead of a dynamic
+    # scatter: a dynamic-update-slice on the seq-SHARDED cache dim forces
+    # GSPMD into a full gather/re-shard round trip (§Perf cell A finding);
+    # the where keeps every shard local.
+    sel = (jnp.arange(s_max) == pos)[None, :, None, None]
+    k_cache = jnp.where(sel, k_new.astype(k_cache.dtype), k_cache)
+    v_cache = jnp.where(sel, v_new.astype(v_cache.dtype), v_cache)
+    k_cache = shard(k_cache, ("batch", "kv_seq", None, None))
+    v_cache = shard(v_cache, ("batch", "kv_seq", None, None))
+
+    groups = cfg.n_heads // cfg.n_kv
+    # cast on read (fp8 KV caches): XLA fuses the convert into the dot
+    kk = _repeat_kv(k_cache, groups).astype(q.dtype)
+    vv = _repeat_kv(v_cache, groups).astype(q.dtype)
+    scale = cfg.head_dim ** -0.5
+    # q: (B,1,H,D) x kk: (B,S,H,D) -> (B,H,S). Constrain the scores to
+    # stay sequence-sharded: XLA then computes flash-decode style (psum of
+    # softmax stats + partial PV) instead of re-sharding the cache to
+    # head-sharding (which would move the whole cache every token).
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, kk)[:, :, 0, :] * scale
+    scores = shard(scores, ("batch", None, "kv_seq"))
+    valid = jnp.arange(s_max)[None, None, :] <= pos
+    scores = jnp.where(valid, scores.astype(jnp.float32), _NEG)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bhk,bkhd->bhd", probs, vv)
+    o = o.reshape(b, 1, cfg.n_heads * cfg.head_dim)
+    return o @ params["wo"].astype(x.dtype), k_cache, v_cache

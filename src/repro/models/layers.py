@@ -1,0 +1,107 @@
+"""Shared layers: RMSNorm, RoPE, SwiGLU MLP, embeddings, init helpers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+INIT_STD = 0.02
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16,
+            "float8_e4m3fn": jnp.float8_e4m3fn}[name]
+
+
+def dense_init(key, shape, dtype, std: float = INIT_STD):
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+# ----------------------------------------------------------------- RMSNorm
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6):
+    """fp32-accumulated RMS norm, output in x.dtype."""
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# -------------------------------------------------------------------- RoPE
+def rope_angles(positions: jnp.ndarray, head_dim: int, theta: float):
+    """positions: (...,) int -> (cos, sin) of shape (..., head_dim/2)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray):
+    """x: (..., S, H, D); cos/sin: (S, D/2) or broadcastable (..., S, D/2).
+
+    Rotation runs in fp32 and casts back to x.dtype (keeps the bf16
+    residual stream stable through the scan carry)."""
+    half = x.shape[-1] // 2
+    x32 = x.astype(jnp.float32)
+    x1, x2 = x32[..., :half], x32[..., half:]
+    # broadcast (S, D/2) over heads: (..., S, 1, D/2)
+    c = cos[..., :, None, :]
+    s = sin[..., :, None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------- SwiGLU MLP
+def mlp_params(key, cfg: ModelConfig, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "w_gate": dense_init(k1, (d, f), dtype),
+        "w_up": dense_init(k2, (d, f), dtype),
+        "w_down": dense_init(k3, (f, d), dtype,
+                             std=INIT_STD / (2 * max(cfg.n_layers, 1)) ** 0.5),
+    }
+
+
+def mlp(params, x: jnp.ndarray, compute_dtype):
+    from repro.distributed.sharding import shard
+    h = jax.nn.silu(x @ params["w_gate"].astype(compute_dtype)) \
+        * (x @ params["w_up"].astype(compute_dtype))
+    h = shard(h, ("batch", None, "ff"))
+    return h @ params["w_down"].astype(compute_dtype)
+
+
+# -------------------------------------------------------------- embeddings
+def embedding_params(key, cfg: ModelConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "embed": dense_init(k1, (cfg.padded_vocab, cfg.d_model), dtype),
+        "lm_head": dense_init(k2, (cfg.d_model, cfg.padded_vocab), dtype),
+    }
+
+
+def embed_tokens(params, tokens: jnp.ndarray, compute_dtype):
+    return params["embed"].astype(compute_dtype)[tokens]
+
+
+def logits_fn(params, x: jnp.ndarray, cfg: ModelConfig):
+    """Final logits in fp32 with the padded-vocab tail masked to -inf."""
+    from repro.distributed.sharding import shard
+    logits = (x @ params["lm_head"].astype(x.dtype)).astype(jnp.float32)
+    logits = shard(logits, ("batch", None, "vocab"))
+    if cfg.padded_vocab != cfg.vocab:
+        pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab
+        logits = jnp.where(pad_mask[None, None, :], -1e9, logits)
+    return logits
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: jnp.ndarray | None = None):
+    """Mean CE over valid positions; logits fp32 (B, S, V), labels (B, S)."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if mask is None:
+        return -jnp.mean(ll)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return -jnp.sum(ll * mask) / denom

@@ -1,0 +1,475 @@
+"""Model assembly for all 6 families (dense / moe / ssm / hybrid / vlm /
+audio): parameter init, forward, loss, prefill and single-token decode.
+
+Layer stacks scan over stacked per-layer parameter pytrees — the lowered
+HLO contains ONE block body regardless of depth, which keeps the 512-device
+dry-run compiles fast and makes remat policies explicit. The hybrid
+(zamba2) stack scans over *groups* of (attn_every-1) Mamba2 layers followed
+by the single shared attention block (closure-captured, weights reused —
+the Zamba scheme).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (cross_entropy, dense_init, dtype_of,
+                                 embed_tokens, embedding_params, logits_fn,
+                                 mlp, mlp_params, rmsnorm)
+
+
+# ----------------------------------------------------------------- blocks
+def _attn_mlp_block_params(key, cfg: ModelConfig, dtype, use_moe: bool):
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "attn": attn.attention_params(k1, cfg, dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+    }
+    if use_moe:
+        p["moe"] = moe_mod.moe_params(k2, cfg, dtype)
+    else:
+        p["mlp"] = mlp_params(k2, cfg, dtype)
+    return p
+
+
+def _attn_mlp_block(params, x, cfg: ModelConfig, positions, use_moe: bool):
+    """Pre-norm transformer block. Returns (x, (k, v), aux)."""
+    h = rmsnorm(x, params["ln1"])
+    a, (k, v) = attn.attention_block(params["attn"], h, cfg, positions)
+    x = x + a
+    h = rmsnorm(x, params["ln2"])
+    if use_moe:
+        m, aux = moe_mod.moe_block(params["moe"], h, cfg)
+    else:
+        m, aux = mlp(params["mlp"], h, dtype_of(cfg.compute_dtype)), 0.0
+    x = shard(x + m, ("batch", "seq_sp" if cfg.seq_shard else None,
+                      "embed"))
+    return x, (k, v), aux
+
+
+def _attn_mlp_decode(params, x, cfg, k_cache, v_cache, pos, use_moe: bool):
+    h = rmsnorm(x, params["ln1"])
+    a, k_cache, v_cache = attn.decode_attention_block(
+        params["attn"], h, cfg, k_cache, v_cache, pos)
+    x = x + a
+    h = rmsnorm(x, params["ln2"])
+    if use_moe:
+        m, _ = moe_mod.moe_block(params["moe"], h, cfg)
+    else:
+        m = mlp(params["mlp"], h, dtype_of(cfg.compute_dtype))
+    return x + m, k_cache, v_cache
+
+
+def _ssm_block_params(key, cfg: ModelConfig, dtype):
+    return {
+        "ln": jnp.ones((cfg.d_model,), dtype),
+        "ssm": ssm_mod.ssm_params(key, cfg, dtype),
+    }
+
+
+def _ssm_block(params, x, cfg: ModelConfig):
+    h = rmsnorm(x, params["ln"])
+    return shard(x + ssm_mod.ssm_block(params["ssm"], h, cfg),
+                 ("batch", "seq_sp" if cfg.seq_shard else None, "embed"))
+
+
+def _ssm_block_decode(params, x, cfg, state, conv):
+    h = rmsnorm(x, params["ln"])
+    y, state, conv = ssm_mod.ssm_decode_block(params["ssm"], h, cfg, state,
+                                              conv)
+    return x + y, state, conv
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(fn)  # "block": full recompute
+
+
+# ------------------------------------------------------------------- init
+def _stack_init(key, n: int, fn: Callable):
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    dtype = dtype_of(cfg.param_dtype)
+    k_emb, k_blocks, k_shared = jax.random.split(key, 3)
+    params: dict[str, Any] = embedding_params(k_emb, cfg, dtype)
+    params["ln_f"] = jnp.ones((cfg.d_model,), dtype)
+
+    if cfg.family in ("dense", "vlm", "audio", "moe"):
+        use_moe = cfg.family == "moe"
+        params["blocks"] = _stack_init(
+            k_blocks, cfg.n_layers,
+            lambda k: _attn_mlp_block_params(k, cfg, dtype, use_moe))
+    elif cfg.family == "ssm":
+        params["blocks"] = _stack_init(
+            k_blocks, cfg.n_layers,
+            lambda k: _ssm_block_params(k, cfg, dtype))
+    elif cfg.family == "hybrid":
+        params["mamba"] = _stack_init(
+            k_blocks, cfg.n_ssm_layers(),
+            lambda k: _ssm_block_params(k, cfg, dtype))
+        params["shared"] = _attn_mlp_block_params(k_shared, cfg, dtype,
+                                                  use_moe=False)
+    else:
+        raise ValueError(f"unknown family {cfg.family}")
+    return params
+
+
+def params_shape(cfg: ModelConfig):
+    """abstract parameter pytree (no allocation) — dry-run input."""
+    return jax.eval_shape(
+        functools.partial(init_params, cfg), jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------- forward
+def _inputs_to_h(params, batch, cfg: ModelConfig):
+    """Embed tokens (+ prepend stub-frontend patch embeddings for VLM)."""
+    cd = dtype_of(cfg.compute_dtype)
+    h = embed_tokens(params, batch["tokens"], cd)
+    if cfg.family == "vlm":
+        h = jnp.concatenate([batch["patch_embeds"].astype(cd), h], axis=1)
+    return shard(h, ("batch", None, "embed"))
+
+
+def forward(params, batch, cfg: ModelConfig):
+    """Full-sequence forward -> (logits fp32 (B,S,V), aux_loss)."""
+    h = _inputs_to_h(params, batch, cfg)
+    b, s, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+    if cfg.family in ("dense", "vlm", "audio", "moe"):
+        use_moe = cfg.family == "moe"
+
+        def body(carry, bp):
+            x, aux = carry
+            x, _, a = _attn_mlp_block(bp, x, cfg, positions, use_moe)
+            return (x, aux + a), None
+        body = _remat(body, cfg)
+        (h, aux), _ = jax.lax.scan(body, (h, 0.0), params["blocks"])
+
+    elif cfg.family == "ssm":
+        def body(x, bp):
+            return _ssm_block(bp, x, cfg), None
+        body = _remat(body, cfg)
+        h, _ = jax.lax.scan(body, h, params["blocks"])
+        aux = 0.0
+
+    elif cfg.family == "hybrid":
+        per = cfg.attn_every - 1
+        groups = cfg.n_attn_layers()
+        mamba = jax.tree.map(
+            lambda a: a.reshape(groups, per, *a.shape[1:]), params["mamba"])
+        shared = params["shared"]
+
+        def body(x, gp):
+            for i in range(per):
+                x = _ssm_block(jax.tree.map(lambda a: a[i], gp), x, cfg)
+            x, _, _ = _attn_mlp_block(shared, x, cfg, positions, False)
+            return x, None
+        body = _remat(body, cfg)
+        h, _ = jax.lax.scan(body, h, mamba)
+        aux = 0.0
+    else:
+        raise ValueError(cfg.family)
+
+    h = rmsnorm(h, params["ln_f"])
+    return logits_fn(params, h, cfg), aux
+
+
+AUX_WEIGHT = 0.01
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    """Next-token CE (+ MoE aux). VLM: loss only on text positions."""
+    logits, aux = forward(params, batch, cfg)
+    tokens = batch["tokens"]
+    b, st = tokens.shape
+    if cfg.family == "vlm":
+        # patches occupy the first n_patches positions; predict text only
+        np_ = cfg.n_patches
+        logits_text = logits[:, np_ - 1: np_ - 1 + st, :]
+        labels = tokens
+        mask = jnp.ones((b, st), jnp.float32).at[:, -1].set(0.0)
+        labels = jnp.roll(labels, -1, axis=1)
+        ce = cross_entropy(logits_text, labels, mask)
+    else:
+        labels = jnp.roll(tokens, -1, axis=1)
+        mask = jnp.ones((b, st), jnp.float32).at[:, -1].set(0.0)
+        ce = cross_entropy(logits, labels, mask)
+    return ce + AUX_WEIGHT * aux / max(cfg.n_layers, 1)
+
+
+# ---------------------------------------------------------------- decode
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    """KV / SSM decode cache sized for ``max_seq`` context."""
+    cd = dtype_of(cfg.compute_dtype)
+    kvd = cd if cfg.kv_dtype == "compute" else dtype_of(cfg.kv_dtype)
+    cache: dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+    n_attn, n_ssm = cfg.n_attn_layers(), cfg.n_ssm_layers()
+    if cfg.family in ("dense", "vlm", "audio", "moe", "hybrid"):
+        kv = (batch, max_seq, cfg.n_kv, cfg.head_dim)
+        cache["k"] = jnp.zeros((n_attn, *kv), kvd)
+        cache["v"] = jnp.zeros((n_attn, *kv), kvd)
+    if cfg.family in ("ssm", "hybrid"):
+        cache["ssm"] = ssm_mod.ssm_cache_init(cfg, batch, n_ssm, cd)
+    return cache
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig):
+    """One decode step. tokens: (B, 1) -> (logits (B, 1, V), cache').
+
+    Two cache plumbing modes (cfg.decode_carry_cache, §Perf):
+      * xs/ys (default): the cache streams through the scan as inputs and
+        restacked outputs — simple, but XLA stages ~2 extra full copies;
+      * carry: the whole (L, ...) cache rides in the scan CARRY and each
+        layer dynamic-updates its slice in place — while-loop carries alias
+        buffers, eliminating the staging copies.
+    """
+    cd = dtype_of(cfg.compute_dtype)
+    h = embed_tokens(params, tokens, cd)
+    h = shard(h, ("batch", None, "embed"))
+    pos = cache["pos"]
+
+    if cfg.family in ("dense", "vlm", "audio", "moe"):
+        use_moe = cfg.family == "moe"
+
+        if cfg.decode_carry_cache and cfg.n_layers > 0:
+            n = cfg.n_layers
+
+            def body(carry, inp):
+                x, k_all, v_all = carry
+                bp, li = inp
+                kc = jax.lax.dynamic_index_in_dim(k_all, li, 0,
+                                                  keepdims=False)
+                vc = jax.lax.dynamic_index_in_dim(v_all, li, 0,
+                                                  keepdims=False)
+                x, kc, vc = _attn_mlp_decode(bp, x, cfg, kc, vc, pos,
+                                             use_moe)
+                k_all = jax.lax.dynamic_update_index_in_dim(
+                    k_all, kc.astype(k_all.dtype), li, 0)
+                v_all = jax.lax.dynamic_update_index_in_dim(
+                    v_all, vc.astype(v_all.dtype), li, 0)
+                return (x, k_all, v_all), None
+
+            (h, k_new, v_new), _ = jax.lax.scan(
+                body, (h, cache["k"], cache["v"]),
+                (params["blocks"], jnp.arange(n)))
+        else:
+            def body(x, inp):
+                bp, kc, vc = inp
+                x, kc, vc = _attn_mlp_decode(bp, x, cfg, kc, vc, pos,
+                                             use_moe)
+                return x, (kc, vc)
+
+            h, (k_new, v_new) = jax.lax.scan(
+                body, h, (params["blocks"], cache["k"], cache["v"]))
+        cache = dict(cache, k=k_new, v=v_new, pos=pos + 1)
+
+    elif cfg.family == "ssm":
+        if cfg.decode_carry_cache and cfg.n_layers > 0:
+            n = cfg.n_layers
+
+            def body(carry, inp):
+                x, st_all, cv_all = carry
+                bp, li = inp
+                st = jax.lax.dynamic_index_in_dim(st_all, li, 0, False)
+                cv = jax.lax.dynamic_index_in_dim(cv_all, li, 0, False)
+                x, st, cv = _ssm_block_decode(bp, x, cfg, st, cv)
+                st_all = jax.lax.dynamic_update_index_in_dim(
+                    st_all, st, li, 0)
+                cv_all = jax.lax.dynamic_update_index_in_dim(
+                    cv_all, cv.astype(cv_all.dtype), li, 0)
+                return (x, st_all, cv_all), None
+
+            (h, st, cv), _ = jax.lax.scan(
+                body, (h, cache["ssm"]["state"], cache["ssm"]["conv"]),
+                (params["blocks"], jnp.arange(n)))
+        else:
+            def body(x, inp):
+                bp, st, cv = inp
+                x, st, cv = _ssm_block_decode(bp, x, cfg, st, cv)
+                return x, (st, cv)
+
+            h, (st, cv) = jax.lax.scan(
+                body, h, (params["blocks"], cache["ssm"]["state"],
+                          cache["ssm"]["conv"]))
+        cache = dict(cache, ssm={"state": st, "conv": cv}, pos=pos + 1)
+
+    elif cfg.family == "hybrid":
+        per = cfg.attn_every - 1
+        groups = cfg.n_attn_layers()
+        mamba = jax.tree.map(
+            lambda a: a.reshape(groups, per, *a.shape[1:]), params["mamba"])
+        shared = params["shared"]
+
+        if cfg.decode_carry_cache and groups > 0:
+            def body(carry, inp):
+                x, k_all, v_all, st_all, cv_all = carry
+                gp, gi = inp
+                for i in range(per):
+                    li = gi * per + i
+                    st = jax.lax.dynamic_index_in_dim(st_all, li, 0, False)
+                    cv = jax.lax.dynamic_index_in_dim(cv_all, li, 0, False)
+                    x, st, cv = _ssm_block_decode(
+                        jax.tree.map(lambda a: a[i], gp), x, cfg, st, cv)
+                    st_all = jax.lax.dynamic_update_index_in_dim(
+                        st_all, st, li, 0)
+                    cv_all = jax.lax.dynamic_update_index_in_dim(
+                        cv_all, cv.astype(cv_all.dtype), li, 0)
+                kc = jax.lax.dynamic_index_in_dim(k_all, gi, 0, False)
+                vc = jax.lax.dynamic_index_in_dim(v_all, gi, 0, False)
+                x, kc, vc = _attn_mlp_decode(shared, x, cfg, kc, vc, pos,
+                                             False)
+                k_all = jax.lax.dynamic_update_index_in_dim(
+                    k_all, kc.astype(k_all.dtype), gi, 0)
+                v_all = jax.lax.dynamic_update_index_in_dim(
+                    v_all, vc.astype(v_all.dtype), gi, 0)
+                return (x, k_all, v_all, st_all, cv_all), None
+
+            (h, k_new, v_new, st, cv), _ = jax.lax.scan(
+                body, (h, cache["k"], cache["v"], cache["ssm"]["state"],
+                       cache["ssm"]["conv"]),
+                (mamba, jnp.arange(groups)))
+            cache = dict(cache, k=k_new, v=v_new, pos=pos + 1,
+                         ssm={"state": st, "conv": cv})
+        else:
+            sst = cache["ssm"]["state"].reshape(
+                groups, per, *cache["ssm"]["state"].shape[1:])
+            scv = cache["ssm"]["conv"].reshape(
+                groups, per, *cache["ssm"]["conv"].shape[1:])
+
+            def body(x, inp):
+                gp, st, cv, kc, vc = inp
+                sts, cvs = [], []
+                for i in range(per):
+                    x, st_i, cv_i = _ssm_block_decode(
+                        jax.tree.map(lambda a: a[i], gp), x, cfg,
+                        st[i], cv[i])
+                    sts.append(st_i)
+                    cvs.append(cv_i)
+                x, kc, vc = _attn_mlp_decode(shared, x, cfg, kc, vc, pos,
+                                             False)
+                return x, (jnp.stack(sts), jnp.stack(cvs), kc, vc)
+
+            h, (st, cv, k_new, v_new) = jax.lax.scan(
+                body, h, (mamba, sst, scv, cache["k"], cache["v"]))
+            cache = dict(
+                cache, k=k_new, v=v_new, pos=pos + 1,
+                ssm={"state": st.reshape(-1, *st.shape[2:]),
+                     "conv": cv.reshape(-1, *cv.shape[2:])})
+    else:
+        raise ValueError(cfg.family)
+
+    h = rmsnorm(h, params["ln_f"])
+    return logits_fn(params, h, cfg), cache
+
+
+def prefill(params, batch, cfg: ModelConfig, max_seq: int | None = None):
+    """Prompt ingestion: forward + cache construction.
+
+    Lowered for the ``prefill_32k`` cells. Collects per-layer K/V from the
+    scan (attention families); SSM families replay the recurrence once to
+    produce the final state (cheap relative to the forward).
+    """
+    cd = dtype_of(cfg.compute_dtype)
+    h = _inputs_to_h(params, batch, cfg)
+    b, s, _ = h.shape
+    max_seq = max_seq or s
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    cache = init_cache(cfg, b, max_seq)
+
+    if cfg.family in ("dense", "vlm", "audio", "moe"):
+        use_moe = cfg.family == "moe"
+
+        def body(x, bp):
+            x, (k, v), _ = _attn_mlp_block(bp, x, cfg, positions, use_moe)
+            return x, (k, v)
+
+        h, (ks, vs) = jax.lax.scan(body, h, params["blocks"])
+        cache["k"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], ks.astype(cache["k"].dtype), 0, axis=2)
+        cache["v"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], vs.astype(cache["v"].dtype), 0, axis=2)
+
+    elif cfg.family == "ssm":
+        def body(x, bp):
+            h_in = rmsnorm(x, bp["ln"])
+            y, state, conv = ssm_mod.ssm_block(bp["ssm"], h_in, cfg,
+                                               return_cache=True)
+            return x + y, (state, conv)
+
+        h, (states, convs) = jax.lax.scan(body, h, params["blocks"])
+        cache["ssm"] = {"state": states, "conv": convs.astype(cd)}
+
+    elif cfg.family == "hybrid":
+        per = cfg.attn_every - 1
+        groups = cfg.n_attn_layers()
+        mamba = jax.tree.map(
+            lambda a: a.reshape(groups, per, *a.shape[1:]), params["mamba"])
+        shared = params["shared"]
+
+        def body(x, gp):
+            sts, cvs = [], []
+            for i in range(per):
+                bp = jax.tree.map(lambda a: a[i], gp)
+                h_in = rmsnorm(x, bp["ln"])
+                y, st, cv = ssm_mod.ssm_block(bp["ssm"], h_in, cfg,
+                                              return_cache=True)
+                x = x + y
+                sts.append(st)
+                cvs.append(cv)
+            x, (k, v), _ = _attn_mlp_block(shared, x, cfg, positions, False)
+            return x, (jnp.stack(sts), jnp.stack(cvs), k, v)
+
+        h, (st, cv, ks, vs) = jax.lax.scan(body, h, mamba)
+        cache["ssm"] = {"state": st.reshape(-1, *st.shape[2:]),
+                        "conv": cv.reshape(-1, *cv.shape[2:]).astype(cd)}
+        cache["k"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], ks.astype(cache["k"].dtype), 0, axis=2)
+        cache["v"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], vs.astype(cache["v"].dtype), 0, axis=2)
+    else:
+        raise ValueError(cfg.family)
+
+    cache["pos"] = jnp.asarray(s, jnp.int32)
+    h = rmsnorm(h, params["ln_f"])
+    return logits_fn(params, h[:, -1:, :], cfg), cache
+
+
+# ------------------------------------------------------------------ model
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable
+    forward: Callable
+    loss: Callable
+    prefill: Callable
+    decode_step: Callable
+    init_cache: Callable
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(
+        cfg=cfg,
+        init=functools.partial(init_params, cfg),
+        forward=functools.partial(forward, cfg=cfg),
+        loss=functools.partial(loss_fn, cfg=cfg),
+        prefill=functools.partial(prefill, cfg=cfg),
+        decode_step=functools.partial(decode_step, cfg=cfg),
+        init_cache=functools.partial(init_cache, cfg),
+    )

@@ -1,0 +1,166 @@
+"""Top-k routed Mixture-of-Experts (grok-1, phi3.5-moe).
+
+TPU adaptation (DESIGN.md §5): the default dispatch is *TP-MoE* — expert
+FFN weights shard their d_ff over the "model" axis (E=8/16 does not divide
+the 16-way axis, d_ff always does) and tokens stay on their data shard, so
+the collective pattern equals a dense MLP (all-gather in / reduce-scatter
+out) plus purely local scatter/gather. An EP variant with shard_map
+all_to_all is provided for the §Perf study (see distributed/ep_moe.py).
+
+Dispatch is capacity-based: tokens are scattered into an (E, C, d) buffer
+with position-in-expert computed by a one-hot cumsum; overflowing tokens
+are dropped (their combine weight is zero) — standard Switch semantics.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models.layers import dense_init, INIT_STD
+from repro.utils.misc import ceil_div
+
+
+def moe_params(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 4)
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "w_router": dense_init(ks[0], (d, e), jnp.float32),
+        "we_gate": dense_init(ks[1], (e, d, f), dtype),
+        "we_up": dense_init(ks[2], (e, d, f), dtype),
+        "we_out": dense_init(ks[3], (e, f, d), dtype,
+                             std=INIT_STD / (2 * max(cfg.n_layers, 1)) ** 0.5),
+    }
+
+
+def router(params, x, cfg: ModelConfig):
+    """x: (T, d) -> top-k (idx (T,k), weights (T,k) fp32, aux loss)."""
+    logits = (x.astype(jnp.float32) @ params["w_router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, cfg.top_k)
+    top_w = top_w / jnp.maximum(jnp.sum(top_w, -1, keepdims=True), 1e-9)
+    # Switch-style load-balance auxiliary loss
+    e = cfg.n_experts
+    me = jnp.mean(jax.nn.one_hot(top_i[:, 0], e), axis=0)  # fraction routed
+    pe = jnp.mean(probs, axis=0)                           # router mass
+    aux = e * jnp.sum(me * pe)
+    return top_i, top_w, aux
+
+
+def _positions_flat(flat_e, e):
+    """Global exclusive cumsum over the flattened (token,slot) dim.
+
+    Simple, but that dim is batch-SHARDED under pjit: the cross-shard scan
+    lowers to a collective-permute chain (the §Perf grok/phi bottleneck)."""
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)     # (TK, E)
+    pos = jnp.cumsum(onehot, axis=0) - onehot               # exclusive count
+    return jnp.take_along_axis(pos, flat_e[:, None], 1)[:, 0]
+
+
+def _positions_rowwise(top_i, b, s, e, k):
+    """Per-sequence cumsum (unsharded S dim) + a tiny (B,E) row-offset
+    scan — same dispatch semantics, collective traffic drops from
+    O(T*E*int32) permutes to O(B*E) (§Perf optimization)."""
+    rows = top_i.reshape(b, s * k)
+    onehot = jax.nn.one_hot(rows, e, dtype=jnp.int32)       # (B, S*k, E)
+    pos_in_row = jnp.cumsum(onehot, axis=1) - onehot
+    row_counts = jnp.sum(onehot, axis=1)                    # (B, E)
+    row_offsets = jnp.cumsum(row_counts, axis=0) - row_counts
+    pos = pos_in_row + row_offsets[:, None, :]
+    flat = jnp.take_along_axis(pos.reshape(b * s * k, e),
+                               rows.reshape(-1)[:, None], 1)[:, 0]
+    return flat
+
+
+def moe_block(params, x, cfg: ModelConfig):
+    """x: (B, S, d) -> (y, aux_loss). Dispatch mode per cfg.moe_dispatch."""
+    if cfg.moe_dispatch == "grouped":
+        return _moe_block_grouped(params, x, cfg)
+    b, s, d = x.shape
+    cd = x.dtype
+    t = b * s
+    xf = x.reshape(t, d)
+    top_i, top_w, aux = router(params, xf, cfg)
+
+    k = cfg.top_k
+    e = cfg.n_experts
+    cap = ceil_div(int(cfg.capacity_factor * k * t), e)
+
+    # flatten (token, slot) pairs and compute position-in-expert
+    flat_e = top_i.reshape(t * k)                     # (TK,)
+    flat_w = top_w.reshape(t * k).astype(cd)
+    if cfg.moe_dispatch == "rowwise":
+        flat_pos = _positions_rowwise(top_i, b, s, e, k)
+    else:
+        flat_pos = _positions_flat(flat_e, e)
+    keep = flat_pos < cap
+    flat_w = jnp.where(keep, flat_w, 0.0)
+    safe_pos = jnp.where(keep, flat_pos, cap - 1)
+
+    # scatter tokens into the (E, C, d) buffer
+    tok_idx = jnp.repeat(jnp.arange(t), k)
+    buf = jnp.zeros((e, cap, d), cd)
+    buf = buf.at[flat_e, safe_pos].add(
+        xf[tok_idx] * keep[:, None].astype(cd))
+    buf = shard(buf, ("experts", "batch", None))
+
+    # expert SwiGLU: (E,C,d) x (E,d,f) -> (E,C,f), ff sharded over "model"
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf,
+                               params["we_gate"].astype(cd)))
+    u = jnp.einsum("ecd,edf->ecf", buf, params["we_up"].astype(cd))
+    h = shard(g * u, ("experts", "batch", "ff"))
+    out = jnp.einsum("ecf,efd->ecd", h, params["we_out"].astype(cd))
+
+    # combine: gather each (token, slot) row back, weight, and sum slots
+    y = out[flat_e, safe_pos] * flat_w[:, None]
+    y = jnp.sum(y.reshape(t, k, d), axis=1)
+    return y.reshape(b, s, d), aux
+
+
+def _moe_block_grouped(params, x, cfg: ModelConfig):
+    """Grouped dispatch (§Perf finding F2): capacity is per sequence row
+    (the GShard/Switch "group" = batch row), so every scatter/gather is
+    LOCAL to the row's data shard. The flat global-capacity dispatch makes
+    tokens target capacity slots owned by other shards, which GSPMD
+    realizes as all-reduces of the full (E, C, d) buffer (~8 GB x 6 per
+    grok layer). Here the buffer is (B, E, C_row, d) with B data-sharded:
+    zero cross-shard dispatch traffic; the collective pattern reduces to
+    the dense-MLP all-gather/reduce-scatter of activations.
+    """
+    b, s, d = x.shape
+    cd = x.dtype
+    k, e = cfg.top_k, cfg.n_experts
+    # at least k slots per row: single-token decode (s=1) must never drop
+    cap = max(ceil_div(int(cfg.capacity_factor * k * s), e), k)
+
+    top_i, top_w, aux = router(params, x.reshape(b * s, d), cfg)
+    rows_e = top_i.reshape(b, s * k)                  # expert per (tok,slot)
+    rows_w = top_w.reshape(b, s * k).astype(cd)
+
+    onehot = jax.nn.one_hot(rows_e, e, dtype=jnp.int32)    # (B, S*k, E)
+    pos = jnp.cumsum(onehot, axis=1) - onehot              # within-row
+    row_pos = jnp.take_along_axis(pos, rows_e[..., None], 2)[..., 0]
+    keep = row_pos < cap
+    rows_w = jnp.where(keep, rows_w, 0.0)
+    safe_pos = jnp.where(keep, row_pos, cap - 1)
+
+    # row-local scatter into (B, E, C_row, d)
+    tok_idx = jnp.repeat(jnp.arange(s), k)[None, :].repeat(b, 0)
+    xf = x  # (B, S, d)
+    buf = jnp.zeros((b, e, cap, d), cd)
+    bidx = jnp.arange(b)[:, None].repeat(s * k, 1)
+    buf = buf.at[bidx, rows_e, safe_pos].add(
+        jnp.take_along_axis(xf, tok_idx[..., None], 1)
+        * keep[..., None].astype(cd))
+    buf = shard(buf, ("batch", "experts", None, None))
+
+    g = jax.nn.silu(jnp.einsum("becd,edf->becf", buf,
+                               params["we_gate"].astype(cd)))
+    u = jnp.einsum("becd,edf->becf", buf, params["we_up"].astype(cd))
+    h = shard(g * u, ("batch", "experts", None, "ff"))
+    out = jnp.einsum("becf,efd->becd", h, params["we_out"].astype(cd))
+
+    y = out[bidx, rows_e, safe_pos] * rows_w[..., None]   # (B, S*k, d)
+    y = jnp.sum(y.reshape(b, s, k, d), axis=2)
+    return y, aux

@@ -1,0 +1,191 @@
+"""Mamba2 blocks via SSD — state-space duality (arXiv:2405.21060).
+
+The training/prefill path uses the chunked SSD algorithm: the sequence is
+split into chunks of Q tokens; within a chunk the recurrence is computed as
+a masked quadratic form (MXU-friendly), across chunks a linear scan carries
+the (H, P, N) state. Decode keeps an O(1) recurrent state — this is what
+makes the ``long_500k`` cell feasible for mamba2/zamba2.
+
+Layout: d_inner = expand * d_model, split into H = d_inner / P heads of
+width P; B/C are shared across heads (ngroups=1). A is scalar-per-head.
+All SSD math runs in fp32 and casts back to the compute dtype.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models.layers import dense_init, rmsnorm, INIT_STD
+
+CHUNK = 128
+
+
+def ssm_params(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 3)
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_ch = di + 2 * n
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di + 2 * n + h), dtype),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv, conv_ch), dtype, std=0.1),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "a_log": jnp.zeros((h,), jnp.float32),          # A = -exp(a_log)=-1
+        "dt_bias": jnp.full((h,), -2.0, jnp.float32),   # softplus ~ 0.12
+        "ssm_d": jnp.ones((h,), jnp.float32),
+        "norm_scale": jnp.ones((di,), dtype),
+        "out_proj": dense_init(ks[2], (di, d), dtype,
+                               std=INIT_STD / (2 * max(cfg.n_layers, 1)) ** 0.5),
+    }
+
+
+def _split_proj(params, x, cfg: ModelConfig):
+    """x (B,S,d) -> z (B,S,di), xBC (B,S,di+2N), dt (B,S,H)."""
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    zxbcdt = x @ params["in_proj"].astype(x.dtype)
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di: 2 * di + 2 * n]
+    dt = zxbcdt[..., 2 * di + 2 * n:]
+    return z, xbc, dt
+
+
+def _causal_conv(params, xbc, cfg: ModelConfig):
+    """Depthwise causal conv, kernel K (train/prefill path)."""
+    k = cfg.ssm_conv
+    w = params["conv_w"].astype(xbc.dtype)  # (K, C)
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    s = xbc.shape[1]
+    y = sum(pad[:, i: i + s, :] * w[i][None, None, :] for i in range(k))
+    return jax.nn.silu(y + params["conv_b"].astype(xbc.dtype))
+
+
+def _ssd_chunked(xh, dt, a_log, bmat, cmat):
+    """Chunked SSD scan.
+
+    xh: (B,S,H,P) head inputs;  dt: (B,S,H) fp32;  a_log: (H,);
+    bmat/cmat: (B,S,N). Returns (y (B,S,H,P) fp32,
+    final_state (B,H,P,N) fp32) — the final state seeds decode caches.
+    """
+    b, s, h, p = xh.shape
+    n = bmat.shape[-1]
+    q = min(CHUNK, s)
+    assert s % q == 0, f"seq {s} not divisible by chunk {q}"
+    nc = s // q
+
+    xh = xh.astype(jnp.float32).reshape(b, nc, q, h, p)
+    dt = dt.reshape(b, nc, q, h)
+    bm = bmat.astype(jnp.float32).reshape(b, nc, q, n)
+    cm = cmat.astype(jnp.float32).reshape(b, nc, q, n)
+
+    a = -jnp.exp(a_log)                      # (H,) negative
+    da = dt * a[None, None, None, :]         # (B,nc,Q,H)
+    cum = jnp.cumsum(da, axis=2)             # inclusive
+    xs = xh * dt[..., None]                  # dt-scaled inputs
+
+    # ---- intra-chunk (quadratic, masked) ----
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,Q,Q,H) q,k
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    decay = jnp.where(mask[None, None, :, :, None], jnp.exp(diff), 0.0)
+    g = jnp.einsum("bcqn,bckn->bcqk", cm, bm)              # (B,nc,Q,Q)
+    m = g[..., None] * decay                               # (B,nc,Q,Q,H)
+    y_diag = jnp.einsum("bcqkh,bckhp->bcqhp", m, xs)
+
+    # ---- chunk states ----
+    w_end = jnp.exp(cum[:, :, -1:, :] - cum)               # (B,nc,Q,H)
+    states = jnp.einsum("bckn,bckh,bckhp->bchpn", bm, w_end, xs)
+
+    # ---- inter-chunk linear scan ----
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                # (B,nc,H)
+
+    def scan_fn(carry, inp):
+        dec, st = inp                                      # (B,H), (B,H,P,N)
+        prev = carry
+        carry = carry * dec[..., None, None] + st
+        return carry, prev
+
+    init = jnp.zeros((b, h, p, n), jnp.float32)
+    final, prev = jax.lax.scan(
+        scan_fn, init,
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(states, 1, 0)))
+    prev = jnp.moveaxis(prev, 0, 1)                        # (B,nc,H,P,N)
+
+    y_off = jnp.einsum("bcqn,bcqh,bchpn->bcqhp", cm, jnp.exp(cum), prev)
+    return (y_diag + y_off).reshape(b, s, h, p), final
+
+
+def ssm_block(params, x, cfg: ModelConfig, return_cache: bool = False):
+    """Full-sequence Mamba2 block body. x: (B,S,d) -> (B,S,d).
+
+    With ``return_cache`` also returns (final_state (B,H,P,N) fp32,
+    conv_tail (B,K-1,C)) to seed decode after a prefill.
+    """
+    b, s, _ = x.shape
+    di, n, h, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    cd = x.dtype
+
+    z, xbc_raw, dt = _split_proj(params, x, cfg)
+    xbc = _causal_conv(params, xbc_raw, cfg)
+    xc, bmat, cmat = xbc[..., :di], xbc[..., di:di + n], xbc[..., di + n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"][None, None, :])
+
+    xh = xc.reshape(b, s, h, p)
+    xh = shard(xh, ("batch", None, "ssm_heads", None))
+    y, final_state = _ssd_chunked(xh, dt, params["a_log"], bmat, cmat)
+    y = y + params["ssm_d"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, s, di).astype(cd)
+
+    y = rmsnorm(y * jax.nn.silu(z), params["norm_scale"])
+    out = y @ params["out_proj"].astype(cd)
+    if return_cache:
+        conv_tail = xbc_raw[:, s - (cfg.ssm_conv - 1):, :]
+        return out, final_state, conv_tail
+    return out
+
+
+# ------------------------------------------------------------------ decode
+def ssm_cache_init(cfg: ModelConfig, batch: int, n_layers: int, dtype):
+    """Recurrent decode state for ``n_layers`` SSM layers."""
+    di, n = cfg.d_inner, cfg.ssm_state
+    return {
+        "state": jnp.zeros((n_layers, batch, cfg.ssm_heads,
+                            cfg.ssm_head_dim, n), jnp.float32),
+        "conv": jnp.zeros((n_layers, batch, cfg.ssm_conv - 1, di + 2 * n),
+                          dtype),
+    }
+
+
+def ssm_decode_block(params, x, cfg: ModelConfig, state, conv_state):
+    """One-token step. x: (B,1,d); state: (B,H,P,N); conv: (B,K-1,C).
+
+    Returns (out (B,1,d), state', conv_state').
+    """
+    b = x.shape[0]
+    di, n, h, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    cd = x.dtype
+
+    z, xbc, dt = _split_proj(params, x, cfg)      # (B,1,*)
+    window = jnp.concatenate([conv_state, xbc.astype(conv_state.dtype)], 1)
+    w = params["conv_w"].astype(cd)               # (K, C)
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(cd), w) \
+        + params["conv_b"].astype(cd)
+    conv_out = jax.nn.silu(conv_out)
+    new_conv = window[:, 1:, :]
+
+    xc, bmat, cmat = (conv_out[:, :di], conv_out[:, di:di + n],
+                      conv_out[:, di + n:])
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                         + params["dt_bias"][None, :])      # (B,H)
+    a = -jnp.exp(params["a_log"])                           # (H,)
+    da = jnp.exp(dt * a[None, :])                           # (B,H)
+
+    xh = xc.reshape(b, h, p).astype(jnp.float32)
+    dtx = xh * dt[..., None]                                # (B,H,P)
+    state = state * da[..., None, None] \
+        + dtx[..., None] * bmat.astype(jnp.float32)[:, None, None, :]
+    y = jnp.einsum("bhpn,bn->bhp", state, cmat.astype(jnp.float32))
+    y = y + params["ssm_d"][None, :, None] * xh
+    y = y.reshape(b, 1, di).astype(cd)
+
+    y = rmsnorm(y * jax.nn.silu(z), params["norm_scale"])
+    return y @ params["out_proj"].astype(cd), state, new_conv

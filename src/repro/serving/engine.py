@@ -1,0 +1,113 @@
+"""Batched serving engine: slot-based prefill + decode.
+
+Requests are grouped into fixed-size batches of slots; each batch shares
+one KV cache (the decode_32k/long_500k cells lower exactly this step). The
+engine tracks per-slot done-flags (EOS or max tokens) and retires a batch
+when all slots finish. Sizey integration: the engine asks a SizeyPredictor
+for the KV-cache memory of each batch (features: batch x context length)
+and records the actual bytes after retirement, so cache sizing improves
+online exactly like workflow-task sizing does.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+from repro.utils.misc import tree_bytes
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray          # (prompt_len,) int32
+    max_new_tokens: int = 32
+    eos_id: int | None = None
+
+
+@dataclasses.dataclass
+class Completion:
+    rid: int
+    tokens: np.ndarray
+    prompt_len: int
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params, *, max_batch: int = 8,
+                 max_seq: int = 512, temperature: float = 0.0,
+                 sizer=None, seed: int = 0):
+        self.model = model
+        self.params = params
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.temperature = temperature
+        self.sizer = sizer
+        self._key = jax.random.PRNGKey(seed)
+        self._prefill = jax.jit(
+            lambda p, b, ms: model.prefill(p, b, max_seq=ms),
+            static_argnums=(2,))
+        self._decode = jax.jit(model.decode_step)
+        self.stats = {"batches": 0, "requests": 0, "tokens": 0,
+                      "kv_bytes": 0}
+
+    def _sample(self, logits) -> jnp.ndarray:
+        if self.temperature <= 0.0:
+            return jnp.argmax(logits[:, -1, :], axis=-1)
+        self._key, sub = jax.random.split(self._key)
+        return jax.random.categorical(sub,
+                                      logits[:, -1, :] / self.temperature)
+
+    def serve(self, requests: list[Request]) -> list[Completion]:
+        out: list[Completion] = []
+        for i in range(0, len(requests), self.max_batch):
+            out.extend(self._serve_batch(requests[i: i + self.max_batch]))
+        return out
+
+    def _serve_batch(self, batch: list[Request]) -> list[Completion]:
+        b = len(batch)
+        plen = max(len(r.prompt) for r in batch)
+        budget = max(r.max_new_tokens for r in batch)
+        max_seq = min(self.max_seq, plen + budget)
+        # right-pad shorter prompts with their own last token
+        prompts = np.stack([
+            np.pad(r.prompt, (0, plen - len(r.prompt)), mode="edge")
+            for r in batch]).astype(np.int32)
+
+        if self.sizer is not None:
+            self.sizer.before_batch(b, max_seq)
+
+        logits, cache = self._prefill(self.params,
+                                      {"tokens": jnp.asarray(prompts)},
+                                      max_seq)
+        kv_bytes = tree_bytes(cache)
+        tok = self._sample(logits)
+        produced = [[int(t)] for t in np.asarray(tok)]
+        done = np.zeros(b, bool)
+
+        for _ in range(budget - 1):
+            logits, cache = self._decode(self.params, cache, tok[:, None])
+            tok = self._sample(logits)
+            for i, r in enumerate(batch):
+                if done[i]:
+                    continue
+                t = int(np.asarray(tok)[i])
+                if r.eos_id is not None and t == r.eos_id:
+                    done[i] = True
+                elif len(produced[i]) >= r.max_new_tokens:
+                    done[i] = True
+                else:
+                    produced[i].append(t)
+            if bool(done.all()):
+                break
+
+        self.stats["batches"] += 1
+        self.stats["requests"] += b
+        self.stats["tokens"] += sum(len(p) for p in produced)
+        self.stats["kv_bytes"] = kv_bytes
+        if self.sizer is not None:
+            self.sizer.after_batch(b, max_seq, kv_bytes)
+        return [Completion(r.rid, np.asarray(p, np.int32), len(r.prompt))
+                for r, p in zip(batch, produced)]

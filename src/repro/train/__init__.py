@@ -1,0 +1,4 @@
+"""Training runtime: optimizers, fused train step, checkpointing, loops."""
+from repro.train.optimizer import (adamw_init, adamw_update, adafactor_init,
+                                   adafactor_update, make_optimizer)
+from repro.train.step import make_train_step

@@ -1,0 +1,119 @@
+"""Optimizers in pure jnp: AdamW (default) and Adafactor (memory-lean
+option for the largest MoE cells).
+
+Moments inherit the parameters' sharding (param_specs applies to the whole
+opt-state pytree), so AdamW state is fully ZeRO-3 distributed over
+(pod, data, model). Adafactor keeps only row/col second-moment factors —
+~N/d the memory of AdamW — and is the documented fallback where AdamW
+states push past HBM (EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptimizerDef(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., tuple[Any, Any]]   # (grads, state, params) -> ...
+    name: str
+
+
+# ---------------------------------------------------------------- AdamW
+def adamw_init(params):
+    moments = jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return {"m": moments, "v": jax.tree.map(jnp.zeros_like, moments),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(grads, state, params, *, lr=3e-4, b1=0.9, b2=0.95,
+                 eps=1e-8, weight_decay=0.1):
+    step = state["step"] + 1
+    b1c = 1 - b1 ** step.astype(jnp.float32)
+    b2c = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g32
+        v = b2 * v + (1 - b2) * g32 * g32
+        u = (m / b1c) / (jnp.sqrt(v / b2c) + eps)
+        p32 = p.astype(jnp.float32)
+        p32 = p32 - lr * (u + weight_decay * p32)
+        return p32.astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, {"m": new_m, "v": new_v, "step": step}
+
+
+# ------------------------------------------------------------- Adafactor
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def adafactor_init(params):
+    """Factored state: two parallel trees (vr over rows, vc over cols);
+    unfactored (<=1D) leaves keep a full second moment in ``vr`` and a
+    zero-size placeholder in ``vc`` (keeps tree structures identical)."""
+    def vr_of(p):
+        return jnp.zeros(p.shape[:-1] if _factored(p.shape) else p.shape,
+                         jnp.float32)
+
+    def vc_of(p):
+        return jnp.zeros((*p.shape[:-2], p.shape[-1])
+                         if _factored(p.shape) else (0,), jnp.float32)
+
+    return {"vr": jax.tree.map(vr_of, params),
+            "vc": jax.tree.map(vc_of, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(grads, state, params, *, lr=3e-4, decay=0.8,
+                     eps=1e-30, clip=1.0, weight_decay=0.0):
+    step = state["step"] + 1
+    beta = 1.0 - step.astype(jnp.float32) ** -decay
+
+    def upd(p, g, vr, vc):
+        g32 = g.astype(jnp.float32)
+        g2 = g32 * g32 + eps
+        if _factored(p.shape):
+            vr = beta * vr + (1 - beta) * jnp.mean(g2, axis=-1)
+            vc = beta * vc + (1 - beta) * jnp.mean(g2, axis=-2)
+            denom = jnp.maximum(jnp.mean(vr, -1, keepdims=True), eps)
+            u = g32 * jax.lax.rsqrt(vr / denom)[..., None] \
+                * jax.lax.rsqrt(vc[..., None, :])
+        else:
+            vr = beta * vr + (1 - beta) * g2
+            u = g32 * jax.lax.rsqrt(vr)
+        # update clipping (RMS <= clip)
+        rms = jnp.sqrt(jnp.mean(u * u) + 1e-12)
+        u = u / jnp.maximum(1.0, rms / clip)
+        p32 = p.astype(jnp.float32) - lr * (u + weight_decay
+                                            * p.astype(jnp.float32))
+        return p32.astype(p.dtype), vr, vc
+
+    out = jax.tree.map(upd, params, grads, state["vr"], state["vc"])
+    pick = lambda i: jax.tree.map(lambda t: t[i], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+    return pick(0), {"vr": pick(1), "vc": pick(2), "step": step}
+
+
+def make_optimizer(name: str, **hyper) -> OptimizerDef:
+    if name == "adamw":
+        return OptimizerDef(adamw_init,
+                            functools.partial(adamw_update, **hyper),
+                            "adamw")
+    if name == "adafactor":
+        return OptimizerDef(adafactor_init,
+                            functools.partial(adafactor_update, **hyper),
+                            "adafactor")
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,65 @@
+"""Fused train step: grad (+ optional microbatch accumulation, gradient
+clipping, gradient compression hook) + optimizer update in one jit."""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import loss_fn
+from repro.train.optimizer import OptimizerDef
+
+
+def _clip_by_global_norm(grads, max_norm: float):
+    gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                         for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-6))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), gnorm
+
+
+def make_train_step(cfg: ModelConfig, opt: OptimizerDef,
+                    *, microbatches: int = 1, max_grad_norm: float = 1.0,
+                    grad_transform: Callable | None = None):
+    """Build train_step(params, opt_state, batch) -> (metrics, params, opt).
+
+    ``microbatches`` > 1 accumulates gradients over equal splits of the
+    leading batch dim via lax.scan (activation memory / throughput knob).
+    ``grad_transform`` hooks in gradient compression (train/compression.py).
+    """
+    loss = functools.partial(loss_fn, cfg=cfg)
+
+    def grads_of(params, batch):
+        if microbatches == 1:
+            return jax.value_and_grad(loss)(params, batch)
+
+        def split(x):
+            b = x.shape[0]
+            assert b % microbatches == 0
+            return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+        micro = jax.tree.map(split, batch)
+
+        def body(acc, mb):
+            l, g = jax.value_and_grad(loss)(params, mb)
+            return jax.tree.map(jnp.add, acc, (l, g)), None
+
+        zero = (jnp.zeros(()),
+                jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params))
+        (l, g), _ = jax.lax.scan(body, zero, micro)
+        inv = 1.0 / microbatches
+        return l * inv, jax.tree.map(lambda x: x * inv, g)
+
+    def train_step(params, opt_state, batch):
+        l, grads = grads_of(params, batch)
+        grads, gnorm = _clip_by_global_norm(grads, max_grad_norm)
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        params, opt_state = opt.update(grads, opt_state, params)
+        metrics = {"loss": l, "grad_norm": gnorm}
+        return metrics, params, opt_state
+
+    return train_step

@@ -1,0 +1,1 @@
+from repro.utils.misc import GB, MB, ceil_div, round_up, tree_bytes, stable_hash

@@ -1,0 +1,30 @@
+"""Small shared utilities."""
+from __future__ import annotations
+
+import hashlib
+
+import jax
+import numpy as np
+
+GB = 1024**3
+MB = 1024**2
+
+
+def ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(x: int, m: int) -> int:
+    """Round x up to the next multiple of m."""
+    return ceil_div(x, m) * m
+
+
+def tree_bytes(tree) -> int:
+    """Total bytes of all arrays / ShapeDtypeStructs in a pytree."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return sum(int(np.prod(l.shape)) * l.dtype.itemsize for l in leaves)
+
+
+def stable_hash(s: str) -> int:
+    """Deterministic 63-bit hash (python's hash() is salted per-process)."""
+    return int.from_bytes(hashlib.sha256(s.encode()).digest()[:8], "big") >> 1

@@ -1,0 +1,6 @@
+"""Workflow substrate: DAGs, synthetic nf-core-calibrated traces, and the
+online execution simulator with time-to-failure semantics (paper §III-A)."""
+from repro.workflow.trace import TaskInstance, WorkflowTrace
+from repro.workflow.dag import WorkflowDAG
+from repro.workflow.generators import WORKFLOWS, generate_workflow
+from repro.workflow.simulator import SimResult, simulate

@@ -1,0 +1,52 @@
+"""Minimal workflow DAG (paper §I: B task types, E edges).
+
+The simulator only needs a submission order consistent with the dependency
+structure; the DAG provides staged topological ordering plus validation.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class WorkflowDAG:
+    """DAG over task *types*; each type expands to many physical instances."""
+    name: str
+    task_types: list[str]
+    edges: list[tuple[str, str]]  # (upstream, downstream)
+
+    def __post_init__(self):
+        types = set(self.task_types)
+        for a, b in self.edges:
+            if a not in types or b not in types:
+                raise ValueError(f"edge ({a},{b}) references unknown task type")
+        if self.stages() is None:
+            raise ValueError(f"workflow {self.name} has a dependency cycle")
+
+    def stages(self) -> dict[str, int] | None:
+        """Longest-path stage per task type (None if cyclic)."""
+        indeg = {t: 0 for t in self.task_types}
+        adj: dict[str, list[str]] = {t: [] for t in self.task_types}
+        for a, b in self.edges:
+            adj[a].append(b)
+            indeg[b] += 1
+        stage = {t: 0 for t in self.task_types}
+        queue = [t for t in self.task_types if indeg[t] == 0]
+        done = 0
+        while queue:
+            t = queue.pop()
+            done += 1
+            for d in adj[t]:
+                stage[d] = max(stage[d], stage[t] + 1)
+                indeg[d] -= 1
+                if indeg[d] == 0:
+                    queue.append(d)
+        return stage if done == len(self.task_types) else None
+
+    @staticmethod
+    def chain_of(task_types: list[str], width: int = 3) -> "WorkflowDAG":
+        """Typical nf-core shape: stages of ~``width`` parallel types."""
+        edges = []
+        for i in range(width, len(task_types)):
+            edges.append((task_types[i - width], task_types[i]))
+        return WorkflowDAG("chain", list(task_types), edges)

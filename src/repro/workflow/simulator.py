@@ -1,0 +1,116 @@
+"""Online execution simulator (paper §III-A).
+
+Replays a trace in submission order against a sizing method. Semantics:
+
+  * strict memory limits (assumption A3): allocation < actual peak => the
+    task is killed;
+  * time-to-failure ``ttf``: a killed attempt runs for ttf * runtime before
+    dying, burning its whole allocation for that long (nothing useful was
+    produced), exactly the paper's simulation parameter;
+  * a successful attempt wastes (allocation - actual) * runtime GBh;
+  * failed attempts follow the method's own retry policy until the machine
+    capacity is reached; if even the capacity cannot fit the task the task
+    is aborted (never happens with the shipped generators).
+
+The method interface is minimal so Sizey, all baselines, and the LM-job
+sizer share it: allocate / retry / complete.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Protocol
+
+from repro.workflow.trace import TaskInstance, WorkflowTrace
+
+
+class SizingMethod(Protocol):
+    name: str
+
+    def allocate(self, task: TaskInstance) -> float:
+        """First-attempt allocation in GB."""
+
+    def retry(self, task: TaskInstance, attempt: int,
+              last_alloc_gb: float) -> float:
+        """Allocation for retry ``attempt`` (1-based) after a failure."""
+
+    def complete(self, task: TaskInstance, first_alloc_gb: float,
+                 attempts: int) -> None:
+        """Task finished successfully; actual peak may now be observed."""
+
+
+@dataclasses.dataclass
+class TaskOutcome:
+    task: TaskInstance
+    first_alloc_gb: float
+    final_alloc_gb: float
+    attempts: int
+    failures: int
+    wastage_gbh: float
+    runtime_h: float            # wall time incl. failed attempts
+    aborted: bool = False
+
+
+@dataclasses.dataclass
+class SimResult:
+    workflow: str
+    method: str
+    ttf: float
+    outcomes: list[TaskOutcome]
+
+    @property
+    def wastage_gbh(self) -> float:
+        return sum(o.wastage_gbh for o in self.outcomes)
+
+    @property
+    def total_runtime_h(self) -> float:
+        return sum(o.runtime_h for o in self.outcomes)
+
+    @property
+    def n_failures(self) -> int:
+        return sum(o.failures for o in self.outcomes)
+
+    def failures_by_type(self) -> dict[str, int]:
+        out: dict[str, int] = {}
+        for o in self.outcomes:
+            out[o.task.task_type] = out.get(o.task.task_type, 0) + o.failures
+        return out
+
+    def wastage_over_time(self) -> list[tuple[float, float]]:
+        """Cumulative (elapsed_h, wastage_gbh) curve (Fig. 8a/8b x-axis)."""
+        t = w = 0.0
+        curve = []
+        for o in self.outcomes:
+            t += o.runtime_h
+            w += o.wastage_gbh
+            curve.append((t, w))
+        return curve
+
+
+MAX_ATTEMPTS = 16  # safety valve; the doubling ladder reaches any cap first
+
+
+def simulate(trace: WorkflowTrace, method: SizingMethod,
+             ttf: float = 1.0) -> SimResult:
+    outcomes: list[TaskOutcome] = []
+    for task in trace.tasks:
+        alloc = first_alloc = float(method.allocate(task))
+        attempts, failures, waste, wall = 1, 0, 0.0, 0.0
+        aborted = False
+        while alloc < task.actual_peak_gb:
+            # killed attempt: whole allocation burned for ttf * runtime
+            waste += alloc * ttf * task.runtime_h
+            wall += ttf * task.runtime_h
+            failures += 1
+            if alloc >= trace.machine_cap_gb or attempts >= MAX_ATTEMPTS:
+                aborted = True
+                break
+            alloc = min(float(method.retry(task, failures, alloc)),
+                        trace.machine_cap_gb)
+            attempts += 1
+        if not aborted:
+            waste += (alloc - task.actual_peak_gb) * task.runtime_h
+            wall += task.runtime_h
+            method.complete(task, first_alloc, attempts)
+        outcomes.append(TaskOutcome(task, first_alloc, alloc, attempts,
+                                    failures, waste, wall, aborted))
+    return SimResult(trace.name, method.name, ttf, outcomes)

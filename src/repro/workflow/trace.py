@@ -1,0 +1,45 @@
+"""Trace schema: physical task instances of black-box task types."""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskInstance:
+    """One physical task execution record (ground truth from the trace)."""
+    workflow: str
+    task_type: str
+    machine: str
+    input_size_gb: float
+    actual_peak_gb: float     # ground-truth peak memory (known to simulator only)
+    runtime_h: float          # successful-run wall time
+    user_preset_gb: float     # workflow developer's static estimate
+    stage: int                # DAG stage (drives submission order)
+    index: int                # instance number within the task type
+
+    @property
+    def features(self) -> tuple[float, ...]:
+        return (self.input_size_gb,)
+
+
+@dataclasses.dataclass
+class WorkflowTrace:
+    name: str
+    tasks: list[TaskInstance]
+    machine_cap_gb: float = 128.0
+
+    @property
+    def task_types(self) -> list[str]:
+        seen: dict[str, None] = {}
+        for t in self.tasks:
+            seen.setdefault(t.task_type, None)
+        return list(seen)
+
+    def summary(self) -> dict:
+        types = self.task_types
+        return {
+            "workflow": self.name,
+            "n_task_types": len(types),
+            "n_tasks": len(self.tasks),
+            "avg_instances_per_type": round(len(self.tasks) / max(len(types), 1)),
+        }

@@ -1,0 +1,112 @@
+"""Per-architecture smoke tests (assignment requirement).
+
+Each assigned architecture instantiates a REDUCED same-family config and
+runs one forward/loss/grad step on CPU asserting output shapes and no NaNs.
+The FULL configs are exercised only via the dry-run (ShapeDtypeStruct, no
+allocation) — here we only check their abstract parameter tree against the
+analytic parameter count.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import build_model, init_params, params_shape
+from repro.utils.misc import tree_bytes
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, b=2, s=32):
+    rng = np.random.default_rng(0)
+    batch = {}
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jnp.asarray(
+            rng.normal(0, 1, (b, cfg.n_patches, cfg.d_model)), jnp.float32)
+        batch["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab, (b, s - cfg.n_patches)), jnp.int32)
+    else:
+        batch["tokens"] = jnp.asarray(rng.integers(0, cfg.vocab, (b, s)),
+                                      jnp.int32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_and_grad_step(arch):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(KEY)
+    batch = _batch(cfg)
+
+    logits, aux = jax.jit(model.forward)(params, batch)
+    b = batch["tokens"].shape[0]
+    assert logits.shape == (b, 32, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+    loss, grads = jax.jit(jax.value_and_grad(model.loss))(params, batch)
+    assert bool(jnp.isfinite(loss)) and float(loss) > 0
+    gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                         for g in jax.tree.leaves(grads)))
+    assert bool(jnp.isfinite(gnorm)) and float(gnorm) > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_matches_forward(arch):
+    """Token-by-token decode reproduces the full-sequence forward —
+    validates KV caching, RoPE offsets, and the SSD<->recurrence duality.
+
+    MoE archs run with capacity_factor = n_experts so no token is dropped:
+    with finite capacity, drop patterns legitimately differ between a
+    full-sequence dispatch and a single-token dispatch (Switch semantics).
+    """
+    import dataclasses
+    cfg = get_config(arch).reduced()
+    if cfg.family == "moe":
+        cfg = dataclasses.replace(cfg, capacity_factor=float(cfg.n_experts))
+    model = build_model(cfg)
+    params = model.init(KEY)
+    s, pre = 16, 8
+    batch = _batch(cfg, b=2, s=s)
+    full_logits, _ = jax.jit(model.forward)(params, batch)
+
+    tokens = batch["tokens"]
+    n_front = cfg.n_patches if cfg.family == "vlm" else 0
+    pre_batch = dict(batch, tokens=tokens[:, : pre - n_front]) \
+        if cfg.family == "vlm" else {"tokens": tokens[:, :pre]}
+    logits_p, cache = jax.jit(lambda p, bt: model.prefill(p, bt, max_seq=s))(
+        params, pre_batch)
+    np.testing.assert_allclose(np.asarray(logits_p[:, 0]),
+                               np.asarray(full_logits[:, pre - 1]),
+                               rtol=2e-3, atol=2e-3)
+
+    decode = jax.jit(model.decode_step)
+    for t in range(pre, s):
+        tok = tokens[:, t - n_front][:, None]
+        logits_d, cache = decode(params, cache, tok)
+        np.testing.assert_allclose(np.asarray(logits_d[:, 0]),
+                                   np.asarray(full_logits[:, t]),
+                                   rtol=2e-3, atol=2e-3,
+                                   err_msg=f"{arch} decode pos {t}")
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_param_count(arch):
+    """Abstract (never-allocated) full-size parameter tree matches the
+    analytic parameter count within 2%."""
+    cfg = get_config(arch)
+    shapes = params_shape(cfg)
+    n_actual = tree_bytes(shapes) / np.dtype(np.float32).itemsize
+    n_est = cfg.param_count()
+    assert abs(n_actual - n_est) / n_est < 0.02, (n_actual, n_est)
+
+
+def test_known_param_counts():
+    """Sanity: full configs land near their advertised sizes."""
+    expected = {
+        "qwen1.5-32b": 32e9, "yi-9b": 9e9, "grok-1-314b": 314e9,
+        "mamba2-780m": 0.78e9, "zamba2-7b": 7e9,
+    }
+    for arch, n in expected.items():
+        got = get_config(arch).param_count()
+        assert 0.6 * n < got < 1.45 * n, f"{arch}: {got/1e9:.1f}B vs {n/1e9}B"

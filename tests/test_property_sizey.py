@@ -1,0 +1,112 @@
+"""Property-based tests (hypothesis) for the system's invariants."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.failure import retry_allocation
+from repro.core.gating import gate_weights
+from repro.core.offsets import candidate_offsets, select_offset
+from repro.core.raq import accuracy_score, efficiency_scores, raq_scores
+
+floats = st.floats(min_value=0.01, max_value=1e3, allow_nan=False,
+                   allow_infinity=False)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(floats, min_size=2, max_size=16))
+def test_efficiency_scores_bounded_and_max_is_zero(preds):
+    es = np.asarray(efficiency_scores(jnp.asarray(preds, jnp.float32)))
+    assert np.all(es >= -1e-6) and np.all(es <= 1.0 + 1e-6)
+    assert es[int(np.argmax(preds))] <= 1e-6
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(floats, min_size=1, max_size=32),
+       st.lists(floats, min_size=1, max_size=32))
+def test_accuracy_score_in_unit_interval(preds, actuals):
+    n = min(len(preds), len(actuals))
+    p = jnp.asarray(preds[:n], jnp.float32)[None, :]
+    a = jnp.asarray(actuals[:n], jnp.float32)
+    acc = np.asarray(accuracy_score(p, a, jnp.ones(n)))
+    assert np.all(acc >= -1e-6) and np.all(acc <= 1.0 + 1e-6)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.floats(min_value=0, max_value=1), min_size=2, max_size=8),
+       st.lists(st.floats(min_value=0, max_value=1), min_size=2, max_size=8),
+       st.floats(min_value=0, max_value=1))
+def test_raq_stays_in_unit_interval(acc, eff, alpha):
+    n = min(len(acc), len(eff))
+    raq = np.asarray(raq_scores(jnp.asarray(acc[:n]), jnp.asarray(eff[:n]),
+                                alpha))
+    assert np.all(raq >= -1e-6) and np.all(raq <= 1 + 1e-6)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.floats(min_value=0, max_value=1), min_size=2, max_size=8),
+       st.floats(min_value=1, max_value=100))
+def test_gate_weights_are_a_distribution(raq, beta):
+    for strategy in ("argmax", "interpolation"):
+        w = np.asarray(gate_weights(jnp.asarray(raq, jnp.float32), strategy,
+                                    beta))
+        assert abs(w.sum() - 1.0) < 1e-5
+        assert np.all(w >= -1e-7)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.floats(min_value=-50, max_value=50), min_size=1,
+                max_size=64))
+def test_candidate_offsets_nonnegative(errors):
+    e = jnp.asarray(errors, jnp.float32)
+    offs = np.asarray(candidate_offsets(e, jnp.ones(len(errors))))
+    assert offs.shape == (4,)
+    assert np.all(offs >= 0.0)
+    assert np.all(np.isfinite(offs))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(min_value=4, max_value=40), st.integers(min_value=0,
+                                                           max_value=2 ** 31))
+def test_selected_offset_is_retrospectively_optimal_among_candidates(n, seed):
+    """The dynamic selector returns the least-wasteful member of its
+    candidate set (paper §II-E statistics x the multiplier grid). Note a
+    zero offset is deliberately NOT a candidate — see offsets.py."""
+    rng = np.random.default_rng(seed)
+    actual = rng.uniform(1, 10, n).astype(np.float32)
+    pred = actual + rng.normal(0, 1, n).astype(np.float32)
+    rt = rng.uniform(0.1, 1.0, n).astype(np.float32)
+    mask = np.ones(n, np.float32)
+    from repro.core.offsets import (OFFSET_MULTIPLIERS, candidate_offsets,
+                                    retrospective_wastage)
+    err = jnp.asarray(actual - pred)
+    off, _ = select_offset(err, jnp.asarray(pred), jnp.asarray(actual),
+                           jnp.asarray(rt), jnp.asarray(mask))
+
+    def waste(o):
+        return float(retrospective_wastage(
+            jnp.asarray(o), jnp.asarray(pred), jnp.asarray(actual),
+            jnp.asarray(rt), jnp.asarray(mask), jnp.asarray(actual.max())))
+
+    w_sel = waste(float(off))
+    cands = np.asarray(candidate_offsets(err, jnp.asarray(mask)))
+    for c in cands:
+        for m in OFFSET_MULTIPLIERS:
+            assert w_sel <= waste(float(c) * m) + 1e-2
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.floats(min_value=0.1, max_value=64), st.floats(min_value=0.1,
+                                                         max_value=64),
+       st.integers(min_value=1, max_value=10))
+def test_retry_ladder_semantics(last, max_seen, attempt):
+    """Paper §II-E: retry 1 = max ever observed, then doubling, capped."""
+    cap = 128.0
+    alloc = retry_allocation(attempt, last, max_seen, cap)
+    assert alloc <= cap
+    if attempt == 1 and max_seen > last:
+        assert alloc == min(max_seen, cap)
+    else:
+        assert alloc == min(last * 2.0, cap)
+    # the ladder always makes progress (until the cap)
+    assert alloc > last or alloc == cap

@@ -1,0 +1,80 @@
+"""Unit tests for RAQ scores (paper Eq. 1-3) and gating (Eq. 4)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.gating import gate_predictions, gate_weights
+from repro.core.raq import accuracy_score, efficiency_scores, raq_scores
+
+
+def test_accuracy_perfect_prediction_scores_one():
+    preds = jnp.asarray([[2.0, 4.0, 6.0]])
+    actuals = jnp.asarray([2.0, 4.0, 6.0])
+    mask = jnp.ones(3)
+    assert float(accuracy_score(preds, actuals, mask)[0]) == pytest.approx(1.0)
+
+
+def test_accuracy_error_bounded_at_one():
+    # 10x overestimate: relative error 9, bounded to 1 -> AS contribution 0
+    preds = jnp.asarray([[20.0, 4.0]])
+    actuals = jnp.asarray([2.0, 4.0])
+    mask = jnp.ones(2)
+    # one perfect (1.0), one fully wrong (0.0) -> mean 0.5
+    assert float(accuracy_score(preds, actuals, mask)[0]) == pytest.approx(0.5)
+
+
+def test_accuracy_respects_mask():
+    preds = jnp.asarray([[2.0, 999.0]])
+    actuals = jnp.asarray([2.0, 1.0])
+    mask = jnp.asarray([1.0, 0.0])
+    assert float(accuracy_score(preds, actuals, mask)[0]) == pytest.approx(1.0)
+
+
+def test_accuracy_empty_history_is_neutral():
+    preds = jnp.zeros((3, 4))
+    actuals = jnp.zeros(4)
+    mask = jnp.zeros(4)
+    np.testing.assert_allclose(accuracy_score(preds, actuals, mask), 1.0)
+
+
+def test_efficiency_largest_estimate_scores_zero():
+    es = efficiency_scores(jnp.asarray([1.0, 2.0, 4.0]))
+    assert float(es[2]) == pytest.approx(0.0)
+    assert float(es[0]) == pytest.approx(0.75)
+    assert float(es[1]) == pytest.approx(0.5)
+
+
+def test_efficiency_negative_preds_clamped():
+    es = efficiency_scores(jnp.asarray([-5.0, 2.0]))
+    assert float(es[0]) == pytest.approx(1.0)  # clamped to 0 -> max ES
+
+
+def test_raq_alpha_interpolates():
+    acc = jnp.asarray([0.9, 0.5])
+    eff = jnp.asarray([0.1, 0.7])
+    np.testing.assert_allclose(raq_scores(acc, eff, 0.0), acc)
+    np.testing.assert_allclose(raq_scores(acc, eff, 1.0), eff)
+    np.testing.assert_allclose(raq_scores(acc, eff, 0.5),
+                               0.5 * acc + 0.5 * eff, rtol=1e-6)
+
+
+def test_argmax_gating_selects_best():
+    preds = jnp.asarray([1.0, 5.0, 3.0])
+    raq = jnp.asarray([0.2, 0.9, 0.5])
+    assert float(gate_predictions(preds, raq, "argmax", 4.0)) == pytest.approx(5.0)
+
+
+def test_interpolation_weights_sum_to_one_and_order():
+    raq = jnp.asarray([0.2, 0.9, 0.5])
+    w = gate_weights(raq, "interpolation", 8.0)
+    assert float(jnp.sum(w)) == pytest.approx(1.0, abs=1e-6)
+    assert int(jnp.argmax(w)) == 1
+
+
+def test_interpolation_beta_sharpens_to_argmax():
+    raq = jnp.asarray([0.2, 0.9, 0.5])
+    preds = jnp.asarray([1.0, 5.0, 3.0])
+    soft = gate_predictions(preds, raq, "interpolation", 1.0)
+    sharp = gate_predictions(preds, raq, "interpolation", 200.0)
+    assert abs(float(sharp) - 5.0) < 1e-3
+    assert abs(float(soft) - 5.0) > abs(float(sharp) - 5.0)

@@ -1,0 +1,83 @@
+"""Simulator semantics: strict limits, ttf accounting, retry ladders."""
+import pytest
+
+from repro.baselines import make_method
+from repro.workflow import generate_workflow, simulate
+from repro.workflow.simulator import simulate as _sim
+from repro.workflow.trace import TaskInstance, WorkflowTrace
+
+
+class FixedMethod:
+    """Always allocates a fixed amount; doubles on failure."""
+    name = "fixed"
+
+    def __init__(self, gb):
+        self.gb = gb
+        self.completed = []
+
+    def allocate(self, task):
+        return self.gb
+
+    def retry(self, task, attempt, last):
+        return last * 2
+
+    def complete(self, task, first_alloc, attempts):
+        self.completed.append((task.task_type, attempts))
+
+
+def _one_task_trace(actual=10.0, runtime=1.0):
+    t = TaskInstance("wf", "A", "m", 1.0, actual, runtime, 64.0, 0, 0)
+    return WorkflowTrace("wf", [t], machine_cap_gb=128.0)
+
+
+def test_success_wastage_is_overshoot_times_runtime():
+    r = _sim(_one_task_trace(actual=10.0, runtime=2.0), FixedMethod(16.0))
+    assert r.wastage_gbh == pytest.approx((16 - 10) * 2.0)
+    assert r.n_failures == 0
+    assert r.total_runtime_h == pytest.approx(2.0)
+
+
+def test_failure_burns_alloc_for_ttf_runtime():
+    # 8 < 10 fails once; retry 16 succeeds
+    r = _sim(_one_task_trace(actual=10.0, runtime=2.0), FixedMethod(8.0),
+             ttf=0.5)
+    # failed attempt: 8 GB * (0.5 * 2 h) = 8 GBh; success: (16-10)*2 = 12
+    assert r.wastage_gbh == pytest.approx(8 * 1.0 + 12.0)
+    assert r.n_failures == 1
+    assert r.total_runtime_h == pytest.approx(1.0 + 2.0)
+
+
+def test_doubling_ladder_reaches_success():
+    r = _sim(_one_task_trace(actual=100.0, runtime=1.0), FixedMethod(4.0))
+    # 4, 8, 16, 32, 64 fail (5 failures), 128 succeeds
+    assert r.n_failures == 5
+    assert r.outcomes[0].final_alloc_gb == 128.0
+
+
+def test_ttf_one_matches_paper_semantics():
+    r10 = _sim(_one_task_trace(), FixedMethod(8.0), ttf=1.0)
+    r05 = _sim(_one_task_trace(), FixedMethod(8.0), ttf=0.5)
+    assert r10.wastage_gbh > r05.wastage_gbh  # earlier failures waste less
+
+
+def test_presets_never_fail_on_generated_traces():
+    trace = generate_workflow("chipseq", scale=0.1)
+    r = simulate(trace, make_method("workflow_presets"))
+    assert r.n_failures == 0
+
+
+def test_generated_trace_matches_table1_shape():
+    trace = generate_workflow("mag", scale=1.0)
+    s = trace.summary()
+    assert s["n_task_types"] == 8
+    assert 500 <= s["avg_instances_per_type"] <= 940  # Table I: 720 +/- 30%
+    for t in trace.tasks:
+        assert 0 < t.actual_peak_gb < trace.machine_cap_gb
+        assert t.user_preset_gb >= t.actual_peak_gb  # presets conservative
+
+
+def test_wastage_over_time_monotone():
+    trace = generate_workflow("iwd", scale=0.1)
+    r = simulate(trace, make_method("witt_lr"))
+    curve = r.wastage_over_time()
+    assert all(b[1] >= a[1] for a, b in zip(curve, curve[1:]))
