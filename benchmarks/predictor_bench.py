@@ -1,0 +1,120 @@
+"""Throughput microbenchmark for the Sizey decision loop.
+
+Measures predictions/sec and observes/sec of the fused single-dispatch
+predictor against the pre-fusion per-model-loop reference, at history
+sizes 10/100/1000, single-task and batched (the batched scheduler API).
+
+    PYTHONPATH=src python -m benchmarks.predictor_bench [--scale 1.0]
+                          [--out BENCH_predictor.json]
+
+``--scale`` shrinks repetition counts (and drops the 1000-row history below
+0.25) so ``--scale 0.05`` is a seconds-long smoke run that still exercises
+the fused path end-to-end; scale 1.0 produces the numbers quoted in
+CHANGES.md. Writes a JSON report with per-size throughput and the
+fused-over-loop speedup ratios.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.core import SizeyConfig
+from repro.core.predictor import SizeyPredictor, TaskQuery
+
+HISTORY_SIZES = (10, 100, 1000)
+BATCH = 64
+
+
+def _make_predictor(n_history: int, *, fused: bool,
+                    incremental: bool) -> SizeyPredictor:
+    cfg = SizeyConfig(incremental=incremental, mlp_train_steps=50)
+    p = SizeyPredictor(cfg, fused=fused)
+    rng = np.random.default_rng(0)
+    xs = rng.uniform(0.5, 8.0, n_history)
+    ys = 2.0 * xs + rng.normal(0.0, 0.2, n_history)
+    for x, y in zip(xs, ys):
+        d = p.predict("bench", "m", (float(x),), 32.0)
+        p.observe(d, float(max(y, 0.1)), 0.5)
+    return p
+
+
+def _time_per_call(fn, reps: int) -> float:
+    fn()  # warmup (compile)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps
+
+
+def run(scale: float = 1.0, out_path: str = "BENCH_predictor.json") -> dict:
+    sizes = [n for n in HISTORY_SIZES if scale >= 0.25 or n <= 100]
+    reps = max(int(200 * scale), 3)
+    obs_reps = max(int(50 * scale), 3)
+    report: dict = {"scale": scale, "batch": BATCH, "history": {}}
+
+    for n in sizes:
+        row: dict = {}
+        for label, fused in (("loop", False), ("fused", True)):
+            p = _make_predictor(n, fused=fused, incremental=True)
+            t = _time_per_call(
+                lambda: p.predict("bench", "m", (3.0,), 32.0), reps)
+            row[f"predict_{label}_per_s"] = 1.0 / t
+
+            queries = [TaskQuery("bench", "m", (float(v),), 32.0)
+                       for v in np.linspace(0.5, 8.0, BATCH)]
+            t = _time_per_call(lambda: p.predict_batch(queries), reps)
+            row[f"predict_batch_{label}_per_s"] = BATCH / t
+
+            def one_observe(p=p):
+                d = p.predict("bench", "m", (3.0,), 32.0)
+                p.observe(d, 6.0, 0.5)
+                # rewind the appended history + log row (count AND mask) so
+                # every timed iteration sees the identical n-row pool
+                pool = p.db.pool("bench", "m")
+                pool.count = n
+                pool.mask = pool.mask.at[n].set(0.0)
+                pool.log_count -= 1
+                pool.log_mask = pool.log_mask.at[pool.log_count].set(0.0)
+
+            t = _time_per_call(one_observe, obs_reps)
+            row[f"observe_{label}_per_s"] = 1.0 / t
+
+        row["predict_speedup"] = (row["predict_fused_per_s"]
+                                  / row["predict_loop_per_s"])
+        row["predict_batch_speedup"] = (row["predict_batch_fused_per_s"]
+                                        / row["predict_batch_loop_per_s"])
+        row["observe_speedup"] = (row["observe_fused_per_s"]
+                                  / row["observe_loop_per_s"])
+        report["history"][n] = row
+        print(f"history={n:5d} "
+              f"predict {row['predict_loop_per_s']:8.0f}/s -> "
+              f"{row['predict_fused_per_s']:8.0f}/s "
+              f"({row['predict_speedup']:.1f}x)  "
+              f"batch {row['predict_batch_loop_per_s']:8.0f}/s -> "
+              f"{row['predict_batch_fused_per_s']:8.0f}/s "
+              f"({row['predict_batch_speedup']:.1f}x)  "
+              f"observe {row['observe_loop_per_s']:7.0f}/s -> "
+              f"{row['observe_fused_per_s']:7.0f}/s "
+              f"({row['observe_speedup']:.1f}x)", flush=True)
+
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"wrote {out_path}")
+    return report
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=1.0,
+                    help="0.05 = smoke mode (seconds); 1.0 = full numbers")
+    ap.add_argument("--out", default="BENCH_predictor.json")
+    args = ap.parse_args()
+    run(scale=args.scale, out_path=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -229,7 +229,15 @@ def main() -> None:
     ap.add_argument("--ttf", type=float, nargs="+", default=[1.0, 0.5])
     ap.add_argument("--skip-sims", action="store_true",
                     help="only the roofline table")
+    ap.add_argument("--smoke", action="store_true",
+                    help="smoke mode: --scale 0.05, ttf=1.0 only, plus the "
+                         "predictor microbenchmark at the same scale — a "
+                         "minutes-long end-to-end pass over every bench "
+                         "path for the fast test loop")
     args = ap.parse_args()
+    if args.smoke:
+        args.scale = 0.05
+        args.ttf = [1.0]
 
     out: dict = {"scale": args.scale}
     t0 = time.time()
@@ -245,6 +253,10 @@ def main() -> None:
         bench_fig10(args.scale, out)
         bench_fig11(grid, out)
         bench_fig12(max(args.scale, 0.3), out)
+    if args.smoke:
+        from benchmarks.predictor_bench import run as predictor_bench_run
+        out["predictor_bench"] = predictor_bench_run(scale=args.scale,
+                                                     out_path="")
     bench_roofline(out)
 
     os.makedirs("results", exist_ok=True)

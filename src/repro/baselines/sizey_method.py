@@ -8,26 +8,42 @@ from repro.workflow.trace import TaskInstance
 
 class SizeyMethod:
     def __init__(self, cfg: SizeyConfig | None = None, *, ttf: float = 1.0,
-                 machine_cap_gb: float = 128.0, name: str = "sizey"):
+                 machine_cap_gb: float = 128.0, name: str = "sizey",
+                 fused: bool = True):
         self.name = name
         self.predictor = SizeyPredictor(cfg, ttf=ttf,
-                                        default_machine_cap_gb=machine_cap_gb)
-        self._pending: SizingDecision | None = None
+                                        default_machine_cap_gb=machine_cap_gb,
+                                        fused=fused)
+        # decisions for in-flight tasks, keyed by task object identity so a
+        # whole burst can be pending at once (batched scheduler API)
+        self._pending: dict[int, SizingDecision] = {}
 
     def allocate(self, task: TaskInstance) -> float:
-        self._pending = self.predictor.predict(
+        decision = self.predictor.predict(
             task.task_type, task.machine, task.features, task.user_preset_gb)
-        return self._pending.allocation_gb
+        self._pending[id(task)] = decision
+        return decision.allocation_gb
+
+    def allocate_batch(self, tasks: list[TaskInstance]) -> list[float]:
+        """Decide a burst of submissions with one fused dispatch per pool."""
+        decisions = self.predictor.predict_batch(tasks)
+        for task, decision in zip(tasks, decisions):
+            self._pending[id(task)] = decision
+        return [d.allocation_gb for d in decisions]
 
     def retry(self, task: TaskInstance, attempt: int,
               last_alloc_gb: float) -> float:
-        assert self._pending is not None
-        return self.predictor.retry_allocation(self._pending, attempt,
+        decision = self._pending[id(task)]
+        return self.predictor.retry_allocation(decision, attempt,
                                                last_alloc_gb)
 
     def complete(self, task: TaskInstance, first_alloc_gb: float,
                  attempts: int) -> None:
-        assert self._pending is not None
-        self.predictor.observe(self._pending, task.actual_peak_gb,
+        decision = self._pending.pop(id(task))
+        self.predictor.observe(decision, task.actual_peak_gb,
                                task.runtime_h, attempts, task.workflow)
-        self._pending = None
+
+    def abandon(self, task: TaskInstance) -> None:
+        """Task aborted (cap/attempt limit): drop its pending decision so
+        the in-flight map cannot grow without bound."""
+        self._pending.pop(id(task), None)

@@ -9,5 +9,5 @@ from repro.core.config import SizeyConfig
 from repro.core.raq import accuracy_score, efficiency_scores, raq_scores
 from repro.core.gating import gate_predictions
 from repro.core.offsets import OFFSET_STRATEGIES, select_offset
-from repro.core.predictor import SizeyPredictor
+from repro.core.predictor import SizeyPredictor, TaskQuery
 from repro.core.provenance import ProvenanceDB, TaskRecord

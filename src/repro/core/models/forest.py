@@ -34,6 +34,11 @@ class ForestState(NamedTuple):
     global_mean: jnp.ndarray
 
 
+# state fields predict() never reads — dropped (set to None) from the
+# hot-path dispatch pytree by the fused predictor
+PREDICT_DROP = ("global_mean",)
+
+
 def init(d: int, cfg: SizeyConfig) -> ForestState:
     t, dep = cfg.forest_trees, cfg.forest_depth
     return ForestState(jnp.zeros((t, dep), jnp.int32),
@@ -143,3 +148,8 @@ def predict(state: ForestState, x: jnp.ndarray) -> jnp.ndarray:
 
     preds = jax.vmap(one)(state.feat, state.thresh, state.leaf_vals)
     return jnp.mean(preds)
+
+
+def predict_batch(state: ForestState, xs: jnp.ndarray) -> jnp.ndarray:
+    """Vectorized predict over a (K, d) feature block -> (K,)."""
+    return jax.vmap(lambda x: predict(state, x))(xs)

@@ -25,6 +25,9 @@ class KNNState(NamedTuple):
     scale: jnp.ndarray  # (d,) per-feature std for distance normalization
 
 
+PREDICT_DROP: tuple[str, ...] = ()  # instance-based: predict reads it all
+
+
 def init(d: int, cfg: SizeyConfig) -> KNNState:
     return KNNState(jnp.zeros((0, d)), jnp.zeros((0,)), jnp.zeros((0,)),
                     jnp.ones((d,)))
@@ -47,6 +50,12 @@ def update(state: KNNState, xs: jnp.ndarray, ys: jnp.ndarray,
            cfg: SizeyConfig) -> KNNState:
     # KNN is instance-based: "update" = take the refreshed buffers.
     return KNNState(xs, ys, mask, _feature_scale(xs, mask))
+
+
+def predict_batch(state: KNNState, xs: jnp.ndarray, *,
+                  k: int = 5) -> jnp.ndarray:
+    """Vectorized predict over a (K, d) feature block -> (K,)."""
+    return jax.vmap(lambda x: predict(state, x, k=k))(xs)
 
 
 def predict(state: KNNState, x: jnp.ndarray, *, k: int = 5) -> jnp.ndarray:

@@ -20,6 +20,11 @@ class LinearState(NamedTuple):
     w: jnp.ndarray    # (d+1,) solved ridge weights (bias last)
 
 
+# state fields predict() never reads — dropped (set to None) from the
+# hot-path dispatch pytree by the fused predictor
+PREDICT_DROP = ("xtx", "xty")
+
+
 def _aug(xs: jnp.ndarray) -> jnp.ndarray:
     """Append the bias column."""
     return jnp.concatenate([xs, jnp.ones((*xs.shape[:-1], 1), xs.dtype)], -1)
@@ -62,3 +67,8 @@ def update(state: LinearState, xs: jnp.ndarray, ys: jnp.ndarray,
 
 def predict(state: LinearState, x: jnp.ndarray) -> jnp.ndarray:
     return _aug(x[None, :])[0] @ state.w
+
+
+def predict_batch(state: LinearState, xs: jnp.ndarray) -> jnp.ndarray:
+    """Vectorized predict over a (K, d) feature block -> (K,)."""
+    return _aug(xs) @ state.w

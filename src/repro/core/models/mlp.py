@@ -37,6 +37,11 @@ class MLPState(NamedTuple):
     lr: jnp.ndarray   # winning learning rate from HPO
 
 
+# state fields predict() never reads — dropped (set to None) from the
+# hot-path dispatch pytree by the fused predictor
+PREDICT_DROP = ("m", "v", "step", "lr")
+
+
 def _params(state: MLPState):
     return (state.w1, state.b1, state.w2, state.b2)
 
@@ -138,4 +143,23 @@ def update(state: MLPState, xs: jnp.ndarray, ys: jnp.ndarray,
 def predict(state: MLPState, x: jnp.ndarray) -> jnp.ndarray:
     xn = (x - state.mu_x) / state.sd_x
     yn = _forward(_params(state), xn[None, :])[0]
+    return yn * state.sd_y + state.mu_y
+
+
+def predict_batch(state: MLPState, xs: jnp.ndarray, *,
+                  use_pallas: bool = False) -> jnp.ndarray:
+    """Vectorized predict over a (K, d) feature block -> (K,).
+
+    ``use_pallas`` routes the forward through the fused ensemble-MLP Pallas
+    kernel (repro/kernels/ensemble_mlp) — the compiled path on TPU/GPU. The
+    plain-jnp path computes the identical fp32 math and is the right choice
+    on CPU, where Pallas only runs in (slow) interpret mode.
+    """
+    xn = (xs - state.mu_x) / state.sd_x
+    if use_pallas:
+        from repro.kernels.ensemble_mlp.ops import ensemble_mlp_forward
+        yn = ensemble_mlp_forward(xn[None], state.w1[None], state.b1[None],
+                                  state.w2[None], state.b2[None])[0]
+    else:
+        yn = _forward(_params(state), xn)
     return yn * state.sd_y + state.mu_y

@@ -75,7 +75,10 @@ def retrospective_wastage(offset: jnp.ndarray, preds: jnp.ndarray,
     ok = alloc >= actuals
     waste_ok = (alloc - actuals) * runtimes
     waste_fail = alloc * (ttf * runtimes) + jnp.maximum(max_seen - actuals, 0.0) * runtimes
-    return jnp.sum(jnp.where(ok, waste_ok, waste_fail) * mask)
+    # summing over the trailing (history) axis keeps the function usable
+    # both per-candidate ((CAP,) -> scalar) and batched over a whole
+    # candidate grid ((C, CAP) -> (C,)) in one vectorized evaluation
+    return jnp.sum(jnp.where(ok, waste_ok, waste_fail) * mask, axis=-1)
 
 
 # magnitude grid applied to every candidate strategy: the paper's dynamic
@@ -104,10 +107,9 @@ def select_offset(errors: jnp.ndarray, preds: jnp.ndarray, actuals: jnp.ndarray,
     cands = offs[:, None] * mults[None, :]  # (4, M)
     max_seen = jnp.max(jnp.where(mask > 0, actuals, 0.0))
     flat = cands.reshape(-1)
-    wastes = jnp.stack([
-        retrospective_wastage(flat[i], preds, actuals, runtimes, mask,
-                              max_seen, ttf)
-        for i in range(flat.shape[0])
-    ])
+    # one vectorized replay over the whole candidate grid
+    wastes = retrospective_wastage(flat[:, None], preds[None, :],
+                                   actuals[None, :], runtimes[None, :],
+                                   mask[None, :], max_seen, ttf)
     idx = jnp.argmin(wastes)
     return flat[idx], idx // mults.shape[0]

@@ -7,12 +7,41 @@ Pipeline per submitted task (paper Fig. 3):
   3  on completion, the provenance DB and all models are updated online
      (full retrain or incremental, cfg.incremental).
 
-All numeric work is jitted; buffers live on host as numpy and are handed to
-a bounded set of compiled functions (shapes grow geometrically, so each
-model compiles O(log history) times per feature dimension).
+Performance architecture (single-dispatch decision loop)
+--------------------------------------------------------
+The decision loop is the system's hottest path: every submission runs a
+multi-model predict -> RAQ gate -> offset selection, and every completion a
+retrain. Both halves are collapsed to **one jitted device dispatch each**:
+
+  * Provenance buffers (``repro.core.provenance``) are device-resident jax
+    arrays appended in place by donated-buffer jitted setters — the history
+    is never re-uploaded from the host on the hot path.
+  * ``predict`` calls one fused compiled function per (config, shape
+    bucket): all model forwards (the MLP routed through the Pallas
+    ``ensemble_mlp`` kernel on TPU/GPU, identical-numerics jnp on CPU), the
+    RAQ gate, and the offset selector run as a single XLA program; a single
+    ``device_get`` brings back the packed scalars of the decision.
+  * ``observe`` fuses the all-model fit/update AND the in-sample prediction
+    refresh (Eq. 1 inputs) into one compiled call — no intermediate
+    ``np.stack`` host round-trip.
+  * ``predict_batch`` vmaps the fused decision over K same-pool submissions
+    (grouped across pools, K padded to power-of-two buckets) so a burst of
+    task submissions costs one dispatch per pool, not one per task.
+
+Compile-count guarantee: buffers grow geometrically (doubling, provenance
+GROWTH), batch sizes are bucketed to powers of two, and every fused builder
+is lru-cached on the frozen config — each pool compiles O(log history) +
+O(log max-batch) times per feature dimension, independent of the number of
+decisions served.
+``TRACE_COUNTS`` records retraces so tests can assert the bound.
+
+The pre-fusion per-model-loop implementation is retained behind
+``SizeyPredictor(fused=False)`` as a numerical reference and benchmark
+baseline (see ``benchmarks/predictor_bench.py``).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
 import time
@@ -29,6 +58,16 @@ from repro.core.offsets import select_offset
 from repro.core.provenance import ProvenanceDB, TaskRecord
 from repro.core.raq import accuracy_score, efficiency_scores, raq_scores
 from repro.utils.misc import stable_hash
+
+# retrace observability: bumped at trace time by every fused builder, so
+# tests can assert the O(log history) compile-count guarantee.
+TRACE_COUNTS: collections.Counter = collections.Counter()
+
+
+def pallas_available() -> bool:
+    """Compiled Pallas kernels only make sense on an accelerator backend;
+    on CPU Pallas runs in interpret mode, far slower than plain jnp."""
+    return jax.default_backend() in ("tpu", "gpu")
 
 
 @dataclasses.dataclass
@@ -48,6 +87,24 @@ class SizingDecision:
     offset_gb: float = 0.0
     offset_idx: int = -1
 
+
+@dataclasses.dataclass(frozen=True)
+class TaskQuery:
+    """One pending submission for the batched scheduler API.
+
+    Any object with these attributes (e.g. ``workflow.trace.TaskInstance``)
+    is accepted by ``SizeyPredictor.predict_batch`` — this class is the
+    minimal standalone carrier.
+    """
+    task_type: str
+    machine: str
+    features: tuple[float, ...]
+    user_preset_gb: float
+    machine_cap_gb: float | None = None
+
+
+# ------------------------------------------------------------------ legacy
+# Per-model jitted helpers: the pre-fusion reference path (fused=False).
 
 @functools.lru_cache(maxsize=None)
 def _jit_fit(model: str, cfg: SizeyConfig):
@@ -111,52 +168,197 @@ def _select_alpha(acc, log_model_preds, log_actual, log_runtime, log_mask,
     return alphas[jnp.argmin(wastes)]
 
 
+def _decision_cache_core(strategy: str, alpha: float, beta: float,
+                         ttf: float, adaptive_alpha: bool, insample_preds,
+                         ys, runtimes, mask, log_agg, log_actual,
+                         log_runtime, log_mask, log_model_preds):
+    """The task-INDEPENDENT half of the decision: accuracy scores (Eq. 1),
+    the effective alpha, and the dynamic offset (§II-E).
+
+    Everything here depends only on pool state (history buffers, in-sample
+    predictions, prequential log), which changes exclusively at observe
+    time — so the fused path computes it once per completion inside the
+    observe dispatch and caches (acc, alpha, offset, offset_idx), keeping
+    the per-prediction program free of the O(CAP log CAP) offset-selector
+    sorts. Returns (acc (N,), alpha_eff, offset, offset_idx).
+    """
+    # AS from the models' in-sample predictions over the history buffer
+    # (refreshed after every fit/update).
+    acc = accuracy_score(insample_preds, ys, mask)
+    if adaptive_alpha:
+        a = _select_alpha(acc, log_model_preds, log_actual, log_runtime,
+                          log_mask, strategy, beta, ttf)
+        a = jnp.where(jnp.sum(log_mask) >= 5, a, alpha)
+    else:
+        a = jnp.asarray(alpha, jnp.float32)
+    # offset from the *prequential* aggregate errors actually experienced;
+    # while the log is young (< 5 predictions) fall back to the in-sample
+    # errors of an accuracy-weighted aggregate so the very first model
+    # predictions already carry a fault-tolerance offset (§II-E).
+    off_log, idx_log = select_offset(log_actual - log_agg, log_agg,
+                                     log_actual, log_runtime, log_mask,
+                                     ttf)
+    acc_w = gate_weights(raq_scores(acc, jnp.zeros_like(acc), 0.0),
+                         strategy, beta)
+    ins_agg = acc_w @ insample_preds
+    off_ins, idx_ins = select_offset(ys - ins_agg, ins_agg, ys, runtimes,
+                                     mask, ttf)
+    young = jnp.sum(log_mask) < 5
+    offset = jnp.where(young, jnp.maximum(off_ins, off_log), off_log)
+    off_idx = jnp.where(young, idx_ins, idx_log)
+    return acc, a, offset, off_idx
+
+
+def _apply_gate(strategy: str, beta: float, model_preds, acc, alpha_eff):
+    """The task-DEPENDENT half: ES from the current predictions, RAQ, and
+    the gated aggregate (Eq. 2-4)."""
+    eff = efficiency_scores(model_preds)
+    raq = raq_scores(acc, eff, alpha_eff)
+    weights = gate_weights(raq, strategy, beta)
+    agg = gate_predictions(model_preds, raq, strategy, beta)
+    return agg, raq, weights
+
+
+def _combine_core(strategy: str, alpha: float, beta: float, ttf: float,
+                  adaptive_alpha: bool, model_preds, insample_preds, ys,
+                  runtimes, mask, log_agg, log_actual, log_runtime, log_mask,
+                  log_model_preds):
+    """RAQ -> gating -> offset (Eq. 1-4 + §II-E), recomputed inline — the
+    legacy per-model-loop formulation. The fused path splits this into
+    ``_decision_cache_core`` (at observe) + ``_apply_gate`` (at predict);
+    both paths share those helpers so their numerics are identical."""
+    acc, a, offset, off_idx = _decision_cache_core(
+        strategy, alpha, beta, ttf, adaptive_alpha, insample_preds, ys,
+        runtimes, mask, log_agg, log_actual, log_runtime, log_mask,
+        log_model_preds)
+    agg, raq, weights = _apply_gate(strategy, beta, model_preds, acc, a)
+    return agg, raq, weights, offset, off_idx
+
+
 @functools.lru_cache(maxsize=None)
 def _jit_combine(strategy: str, alpha: float, beta: float, ttf: float,
                  adaptive_alpha: bool = False):
-    """RAQ -> gating -> offset, one fused jitted function (Eq. 1-4 + §II-E)."""
+    """Legacy standalone combine (one of the N+1 dispatches of the
+    per-model-loop path)."""
 
     def combine(model_preds, insample_preds, ys, runtimes, mask, log_agg,
                 log_actual, log_runtime, log_mask, log_model_preds):
-        # AS from the models' in-sample predictions over the history buffer
-        # (refreshed after every fit/update); ES from the current outputs.
-        acc = accuracy_score(insample_preds, ys, mask)
-        eff = efficiency_scores(model_preds)
-        if adaptive_alpha:
-            a = _select_alpha(acc, log_model_preds, log_actual, log_runtime,
-                              log_mask, strategy, beta, ttf)
-            a = jnp.where(jnp.sum(log_mask) >= 5, a, alpha)
-        else:
-            a = alpha
-        raq = raq_scores(acc, eff, a)
-        weights = gate_weights(raq, strategy, beta)
-        agg = gate_predictions(model_preds, raq, strategy, beta)
-        # offset from the *prequential* aggregate errors actually experienced;
-        # while the log is young (< 5 predictions) fall back to the in-sample
-        # errors of an accuracy-weighted aggregate so the very first model
-        # predictions already carry a fault-tolerance offset (§II-E).
-        off_log, idx_log = select_offset(log_actual - log_agg, log_agg,
-                                         log_actual, log_runtime, log_mask,
-                                         ttf)
-        acc_w = gate_weights(raq_scores(acc, jnp.zeros_like(acc), 0.0),
-                             strategy, beta)
-        ins_agg = acc_w @ insample_preds
-        off_ins, idx_ins = select_offset(ys - ins_agg, ins_agg, ys, runtimes,
-                                         mask, ttf)
-        young = jnp.sum(log_mask) < 5
-        offset = jnp.where(young, jnp.maximum(off_ins, off_log), off_log)
-        off_idx = jnp.where(young, idx_ins, idx_log)
-        return agg, raq, weights, offset, off_idx
+        return _combine_core(strategy, alpha, beta, ttf, adaptive_alpha,
+                             model_preds, insample_preds, ys, runtimes, mask,
+                             log_agg, log_actual, log_runtime, log_mask,
+                             log_model_preds)
 
     return jax.jit(combine)
 
 
+# ------------------------------------------------------------------- fused
+def _pool_model_preds(models: tuple[str, ...], cfg: SizeyConfig,
+                      use_pallas: bool, states, xb):
+    """All models' predictions over a (K, d) feature block -> (N, K).
+
+    The model states are heterogeneous pytrees, so the "vmap over models"
+    of the paper's loop is realized as compiler-level fusion: each model's
+    batched forward is emitted into ONE XLA program (one dispatch), with the
+    MLP routed through the fused Pallas ensemble kernel on accelerators.
+    """
+    cols = []
+    for i, m in enumerate(models):
+        mod = MODEL_MODULES[m]
+        if m == "knn":
+            cols.append(mod.predict_batch(states[i], xb, k=cfg.knn_k))
+        elif m == "mlp":
+            cols.append(mod.predict_batch(states[i], xb,
+                                          use_pallas=use_pallas))
+        else:
+            cols.append(mod.predict_batch(states[i], xb))
+    return jnp.stack(cols)
+
+
+@functools.lru_cache(maxsize=None)
+def _fused_predict(models: tuple[str, ...], cfg: SizeyConfig, ttf: float,
+                   use_pallas: bool):
+    """One compiled function = the whole decision for K same-pool tasks.
+
+    Consumes the per-pool decision cache (acc, alpha, offset, offset_idx)
+    precomputed by the observe dispatch, so the per-prediction program is
+    just the model forwards + the RAQ gate. Input and output are each ONE
+    array so a decision costs exactly one host->device upload (features ||
+    cap) and one device->host fetch.
+
+    ``xc`` is (K, d+1): features with the machine cap appended per row.
+    Returns (K, 5 + 3N) rows of
+    [allocation, agg, offset, offset_idx, best_model, preds, raq, weights].
+    """
+
+    def fn(states, xc, acc, alpha_eff, offset, off_idx):
+        TRACE_COUNTS["predict"] += 1
+        xb, caps = xc[:, :-1], xc[:, -1]
+        preds = _pool_model_preds(models, cfg, use_pallas, states, xb)
+
+        def one(p, cap):
+            agg, raq, weights = _apply_gate(cfg.strategy, cfg.beta, p, acc,
+                                            alpha_eff)
+            alloc = jnp.clip(agg + offset, cfg.min_alloc_gb, cap)
+            head = jnp.stack([alloc, agg, offset,
+                              off_idx.astype(jnp.float32),
+                              jnp.argmax(raq).astype(jnp.float32)])
+            return jnp.concatenate([head, p, raq, weights])
+
+        return jax.vmap(one, in_axes=(1, 0))(preds, caps)
+
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=None)
+def _fused_observe_all(models: tuple[str, ...], cfg: SizeyConfig,
+                       ttf: float, use_pallas: bool, incremental: bool):
+    """All-model fit (or incremental update) + in-sample refresh + decision
+    cache, one dispatch. ``incremental=False`` is the paper's default
+    full-retrain mode (incl. MLP HPO); ``incremental=True`` takes the
+    previous states and the newest buffer slot."""
+
+    def observe_fn(states, xs, ys, runtimes, mask, new_idx, seed, log_agg,
+                   log_actual, log_runtime, log_mask, log_model_preds):
+        TRACE_COUNTS["update" if incremental else "fit"] += 1
+        rng = jax.random.PRNGKey(seed)
+        if incremental:
+            new_states = tuple(
+                MODEL_MODULES[m].update(states[i], xs, ys, mask, new_idx,
+                                        rng, cfg)
+                for i, m in enumerate(models))
+        else:
+            new_states = tuple(MODEL_MODULES[m].fit(xs, ys, mask, rng, cfg)
+                               for m in models)
+        insample = _pool_model_preds(models, cfg, use_pallas, new_states, xs)
+        cache = _decision_cache_core(
+            cfg.strategy, cfg.alpha, cfg.beta, ttf, cfg.adaptive_alpha,
+            insample, ys, runtimes, mask, log_agg, log_actual, log_runtime,
+            log_mask, log_model_preds)
+        return new_states, insample, cache
+
+    return jax.jit(observe_fn)
+
+
+def _batch_bucket(k: int) -> int:
+    """Round a batch size up to the next power of two (bounds compiles)."""
+    b = 1
+    while b < k:
+        b *= 2
+    return b
+
+
 class SizeyPredictor:
-    """Online multi-model memory predictor (the paper's contribution)."""
+    """Online multi-model memory predictor (the paper's contribution).
+
+    ``fused=True`` (default) runs the single-dispatch decision loop;
+    ``fused=False`` keeps the pre-fusion per-model-loop path for numerical
+    reference and benchmarking.
+    """
 
     def __init__(self, cfg: SizeyConfig | None = None,
                  db: ProvenanceDB | None = None, *, n_features: int = 1,
-                 ttf: float = 1.0, default_machine_cap_gb: float = 128.0):
+                 ttf: float = 1.0, default_machine_cap_gb: float = 128.0,
+                 fused: bool = True, use_pallas: bool | None = None):
         self.cfg = cfg or SizeyConfig()
         self.n_features = n_features
         self.models = tuple(self.cfg.model_classes)
@@ -164,8 +366,19 @@ class SizeyPredictor:
                                      n_models=len(self.models))
         self.ttf = float(ttf)
         self.default_machine_cap_gb = default_machine_cap_gb
-        # per-pool model states: key -> {model_name: state}
-        self.states: dict[tuple[str, str], dict] = {}
+        self.fused = fused
+        self.use_pallas = pallas_available() if use_pallas is None \
+            else use_pallas
+        # per-pool model states: key -> tuple of states in self.models order
+        self.states: dict[tuple[str, str], tuple] = {}
+        # per-pool decision cache (acc, alpha_eff, offset, offset_idx),
+        # refreshed by every fused observe dispatch (task-independent half
+        # of the decision — see _decision_cache_core)
+        self._cache: dict[tuple[str, str], tuple] = {}
+        # predict-view of the states: fields predict() never reads are
+        # dropped (None leaves) so the hot dispatch flattens fewer arrays
+        self._pview: dict[tuple[str, str], tuple] = {}
+        self._predict_fn = None
         self._fit_serial: dict[tuple[str, str], int] = {}
         self.train_times_s: list[float] = []
         self.model_select_counts = np.zeros(len(self.models), np.int64)
@@ -174,36 +387,131 @@ class SizeyPredictor:
     def predict(self, task_type: str, machine: str, features,
                 user_preset_gb: float,
                 machine_cap_gb: float | None = None) -> SizingDecision:
-        cap_gb = machine_cap_gb or self.default_machine_cap_gb
+        cap_gb = (self.default_machine_cap_gb if machine_cap_gb is None
+                  else machine_cap_gb)
         feats = tuple(float(f) for f in np.atleast_1d(features))
         pool = self.db.pool(task_type, machine)
         key = (task_type, machine)
 
         if pool.count < self.cfg.min_history or key not in self.states:
             # unknown/young task type -> user preset straight to the RM (§I)
-            return SizingDecision(task_type, machine, feats, "preset",
-                                  min(user_preset_gb, cap_gb),
-                                  user_preset_gb, cap_gb)
+            return self._preset_decision(task_type, machine, feats,
+                                         user_preset_gb, cap_gb)
+        if not self.fused:
+            return self._predict_loop(key, pool, feats, user_preset_gb,
+                                      cap_gb)
+        return self._predict_pool(
+            key, pool, np.asarray([feats], np.float32),
+            np.asarray([cap_gb], np.float32), [user_preset_gb])[0]
 
+    def predict_batch(self, tasks) -> list[SizingDecision]:
+        """Batched scheduler API: decide a burst of submissions at once.
+
+        ``tasks`` is any sequence of objects exposing ``task_type``,
+        ``machine``, ``features``, ``user_preset_gb`` and (optionally)
+        ``machine_cap_gb`` — e.g. ``TaskQuery`` or ``TaskInstance``.
+        Submissions are grouped per (task_type, machine) pool; each group is
+        decided by ONE fused vmapped dispatch (batch padded to a power-of-
+        two bucket), so K decisions cost one launch per pool instead of K.
+        Decisions are returned in submission order and are numerically
+        identical to calling :meth:`predict` per task.
+        """
+        out: list[SizingDecision | None] = [None] * len(tasks)
+        groups: dict[tuple[str, str], list[int]] = {}
+        for i, t in enumerate(tasks):
+            groups.setdefault((t.task_type, t.machine), []).append(i)
+        for key, idxs in groups.items():
+            pool = self.db.pool(*key)
+            caps = np.asarray(
+                [self.default_machine_cap_gb
+                 if getattr(tasks[i], "machine_cap_gb", None) is None
+                 else tasks[i].machine_cap_gb for i in idxs], np.float32)
+            presets = [float(tasks[i].user_preset_gb) for i in idxs]
+            featrows = [tuple(float(f) for f in
+                              np.atleast_1d(tasks[i].features))
+                        for i in idxs]
+            if pool.count < self.cfg.min_history or key not in self.states:
+                for j, i in enumerate(idxs):
+                    out[i] = self._preset_decision(key[0], key[1],
+                                                   featrows[j], presets[j],
+                                                   float(caps[j]))
+            elif not self.fused:
+                for j, i in enumerate(idxs):
+                    out[i] = self._predict_loop(key, pool, featrows[j],
+                                                presets[j], float(caps[j]))
+            else:
+                xb = np.asarray(featrows, np.float32)
+                for i, d in zip(idxs,
+                                self._predict_pool(key, pool, xb, caps,
+                                                   presets)):
+                    out[i] = d
+        return out  # type: ignore[return-value]
+
+    @staticmethod
+    def _preset_decision(task_type: str, machine: str, feats,
+                         user_preset_gb: float,
+                         cap_gb: float) -> SizingDecision:
+        """Cold pool / young task type: the user preset goes straight to
+        the resource manager, clamped to the machine cap (§I)."""
+        return SizingDecision(task_type, machine, feats, "preset",
+                              min(user_preset_gb, cap_gb), user_preset_gb,
+                              cap_gb)
+
+    def _predict_pool(self, key, pool, xb: np.ndarray, caps: np.ndarray,
+                      presets) -> list[SizingDecision]:
+        """One fused dispatch deciding K tasks of one pool."""
+        k = xb.shape[0]
+        kpad = _batch_bucket(k)
+        if kpad != k:
+            xb = np.concatenate([xb, np.repeat(xb[-1:], kpad - k, axis=0)])
+            caps = np.concatenate([caps, np.repeat(caps[-1:], kpad - k)])
+        fn = self._predict_fn
+        if fn is None:
+            fn = self._predict_fn = _fused_predict(self.models, self.cfg,
+                                                   self.ttf, self.use_pallas)
+        acc, alpha_eff, offset, off_idx = self._cache[key]
+        xc = np.concatenate([xb, caps[:, None]], axis=1)
+        # one upload in, one dispatch, one fetch out
+        out = np.asarray(fn(self._pview[key], jnp.asarray(xc), acc,
+                            alpha_eff, offset, off_idx))
+        n = len(self.models)
+        decisions = []
+        for j in range(k):
+            row = out[j]
+            self.model_select_counts[int(row[4])] += 1
+            decisions.append(SizingDecision(
+                key[0], key[1], tuple(float(v) for v in xb[j]), "model",
+                float(row[0]), float(presets[j]), float(caps[j]),
+                model_preds=row[5:5 + n], raq=row[5 + n:5 + 2 * n],
+                weights=row[5 + 2 * n:5 + 3 * n],
+                agg_pred_gb=float(row[1]), offset_gb=float(row[2]),
+                offset_idx=int(row[3])))
+        return decisions
+
+    def _predict_loop(self, key, pool, feats, user_preset_gb: float,
+                      cap_gb: float) -> SizingDecision:
+        """Pre-fusion reference: one dispatch per model + a combine call,
+        with the full pool re-uploaded from host every prediction (the
+        seed implementation's cost model)."""
         x = jnp.asarray(feats, jnp.float32)
         preds = jnp.stack([
-            _jit_predict(m, self.cfg)(self.states[key][m], x)
-            for m in self.models
+            _jit_predict(m, self.cfg)(self.states[key][i], x)
+            for i, m in enumerate(self.models)
         ])
         combine = _jit_combine(self.cfg.strategy, self.cfg.alpha,
                                self.cfg.beta, self.ttf,
                                self.cfg.adaptive_alpha)
+        up = lambda a: jnp.asarray(np.asarray(a))   # host round-trip
         agg, raq, weights, offset, off_idx = combine(
-            preds, jnp.asarray(pool.insample_preds), jnp.asarray(pool.ys),
-            jnp.asarray(pool.runtimes), jnp.asarray(pool.mask),
-            jnp.asarray(pool.log_agg), jnp.asarray(pool.log_actual),
-            jnp.asarray(pool.log_runtime), jnp.asarray(pool.log_mask),
-            jnp.asarray(pool.log_model_preds))
+            preds, up(pool.insample_preds), up(pool.ys), up(pool.runtimes),
+            up(pool.mask), up(pool.log_agg), up(pool.log_actual),
+            up(pool.log_runtime), up(pool.log_mask),
+            up(pool.log_model_preds))
 
         alloc = float(np.clip(float(agg) + float(offset),
                               self.cfg.min_alloc_gb, cap_gb))
         self.model_select_counts[int(np.argmax(np.asarray(raq)))] += 1
-        return SizingDecision(task_type, machine, feats, "model", alloc,
+        return SizingDecision(key[0], key[1], tuple(feats), "model", alloc,
                               user_preset_gb, cap_gb,
                               model_preds=np.asarray(preds),
                               raq=np.asarray(raq),
@@ -230,37 +538,57 @@ class SizeyPredictor:
                                float(runtime_h), attempts, workflow))
         pool = self.db.pool(*key)
         if decision.source == "model":
-            pool.add_log(decision.model_preds, decision.agg_pred_gb,
-                         float(peak_mem_gb), float(runtime_h))
+            self.db.add_log(decision.task_type, decision.machine,
+                            decision.model_preds, decision.agg_pred_gb,
+                            float(peak_mem_gb), float(runtime_h))
         if pool.count < self.cfg.min_history:
             return
 
         t0 = time.perf_counter()
-        xs = jnp.asarray(pool.xs)
-        ys = jnp.asarray(pool.ys)
-        mask = jnp.asarray(pool.mask)
         serial = self._fit_serial.get(key, 0)
-        rng = jax.random.PRNGKey(
-            (stable_hash(f"{key}") + serial + self.cfg.seed) % (2**31))
-
-        if key not in self.states or not self.cfg.incremental:
-            # full retrain (paper's default evaluation mode, incl. MLP HPO)
-            self.states[key] = {
-                m: _jit_fit(m, self.cfg)(xs, ys, mask, rng)
-                for m in self.models
-            }
+        seed = (stable_hash(f"{key}") + serial + self.cfg.seed) % (2**31)
+        if not self.fused:
+            self._observe_loop(key, pool, seed)
         else:
-            new_idx = jnp.asarray(pool.count - 1)
-            self.states[key] = {
-                m: _jit_update(m, self.cfg)(self.states[key][m], xs, ys,
-                                            mask, new_idx, rng)
-                for m in self.models
-            }
-        # refresh in-sample predictions for the accuracy score (Eq. 1)
-        pool.insample_preds = np.stack([
-            np.asarray(_jit_predict_batch(m, self.cfg)(self.states[key][m], xs))
-            for m in self.models
-        ])
-        jax.block_until_ready(self.states[key])
+            incremental = key in self.states and self.cfg.incremental
+            fn = _fused_observe_all(self.models, self.cfg, self.ttf,
+                                    self.use_pallas, incremental)
+            states, insample, cache = fn(
+                self.states[key] if incremental else None, pool.xs, pool.ys,
+                pool.runtimes, pool.mask, pool.count - 1, seed,
+                pool.log_agg, pool.log_actual, pool.log_runtime,
+                pool.log_mask, pool.log_model_preds)
+            self.states[key] = states
+            self._cache[key] = cache
+            self._pview[key] = tuple(
+                s._replace(**{f: None for f in MODEL_MODULES[m].PREDICT_DROP})
+                if MODEL_MODULES[m].PREDICT_DROP else s
+                for m, s in zip(self.models, states))
+            pool.insample_preds = insample
+            jax.block_until_ready(insample)
         self._fit_serial[key] = serial + 1
         self.train_times_s.append(time.perf_counter() - t0)
+
+    def _observe_loop(self, key, pool, seed: int) -> None:
+        """Pre-fusion reference: per-model fit/update dispatches plus an
+        np.stack host round-trip for the in-sample refresh."""
+        xs = jnp.asarray(np.asarray(pool.xs))
+        ys = jnp.asarray(np.asarray(pool.ys))
+        mask = jnp.asarray(np.asarray(pool.mask))
+        rng = jax.random.PRNGKey(seed)
+        if key not in self.states or not self.cfg.incremental:
+            states = tuple(_jit_fit(m, self.cfg)(xs, ys, mask, rng)
+                           for m in self.models)
+        else:
+            new_idx = jnp.asarray(pool.count - 1)
+            states = tuple(
+                _jit_update(m, self.cfg)(self.states[key][i], xs, ys, mask,
+                                         new_idx, rng)
+                for i, m in enumerate(self.models))
+        self.states[key] = states
+        # refresh in-sample predictions for the accuracy score (Eq. 1)
+        pool.insample_preds = jnp.asarray(np.stack([
+            np.asarray(_jit_predict_batch(m, self.cfg)(states[i], xs))
+            for i, m in enumerate(self.models)
+        ]))
+        jax.block_until_ready(self.states[key])

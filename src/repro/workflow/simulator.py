@@ -89,28 +89,64 @@ class SimResult:
 MAX_ATTEMPTS = 16  # safety valve; the doubling ladder reaches any cap first
 
 
+def _bursts(tasks: list[TaskInstance]):
+    """Group consecutive submissions of the same DAG stage: tasks in one
+    stage are submitted together (no completion can be observed in between),
+    so they form the natural batch of the batched scheduler API."""
+    burst: list[TaskInstance] = []
+    for task in tasks:
+        if burst and task.stage != burst[0].stage:
+            yield burst
+            burst = []
+        burst.append(task)
+    if burst:
+        yield burst
+
+
 def simulate(trace: WorkflowTrace, method: SizingMethod,
-             ttf: float = 1.0) -> SimResult:
+             ttf: float = 1.0, *, batch_stages: bool = False) -> SimResult:
+    """Replay ``trace`` against ``method``.
+
+    ``batch_stages=True`` submits each DAG stage as one burst through the
+    method's ``allocate_batch`` (if it has one) — the realistic cluster
+    scenario where a scheduler dispatches a whole ready stage at once and
+    Sizey amortizes K decisions into one device launch. Completions (and
+    thus model updates) still happen per task, after the burst is sized.
+    """
     outcomes: list[TaskOutcome] = []
-    for task in trace.tasks:
-        alloc = first_alloc = float(method.allocate(task))
-        attempts, failures, waste, wall = 1, 0, 0.0, 0.0
-        aborted = False
-        while alloc < task.actual_peak_gb:
-            # killed attempt: whole allocation burned for ttf * runtime
-            waste += alloc * ttf * task.runtime_h
-            wall += ttf * task.runtime_h
-            failures += 1
-            if alloc >= trace.machine_cap_gb or attempts >= MAX_ATTEMPTS:
-                aborted = True
-                break
-            alloc = min(float(method.retry(task, failures, alloc)),
-                        trace.machine_cap_gb)
-            attempts += 1
-        if not aborted:
-            waste += (alloc - task.actual_peak_gb) * task.runtime_h
-            wall += task.runtime_h
-            method.complete(task, first_alloc, attempts)
-        outcomes.append(TaskOutcome(task, first_alloc, alloc, attempts,
-                                    failures, waste, wall, aborted))
+    batched = batch_stages and hasattr(method, "allocate_batch")
+    bursts = _bursts(trace.tasks) if batched else ([t] for t in trace.tasks)
+    for burst in bursts:
+        if batched:
+            allocs = [float(a) for a in method.allocate_batch(burst)]
+        else:
+            allocs = [float(method.allocate(t)) for t in burst]
+        for task, first_alloc in zip(burst, allocs):
+            outcomes.append(_run_one(trace, method, task, first_alloc, ttf))
     return SimResult(trace.name, method.name, ttf, outcomes)
+
+
+def _run_one(trace: WorkflowTrace, method: SizingMethod, task: TaskInstance,
+             first_alloc: float, ttf: float) -> TaskOutcome:
+    alloc = first_alloc
+    attempts, failures, waste, wall = 1, 0, 0.0, 0.0
+    aborted = False
+    while alloc < task.actual_peak_gb:
+        # killed attempt: whole allocation burned for ttf * runtime
+        waste += alloc * ttf * task.runtime_h
+        wall += ttf * task.runtime_h
+        failures += 1
+        if alloc >= trace.machine_cap_gb or attempts >= MAX_ATTEMPTS:
+            aborted = True
+            break
+        alloc = min(float(method.retry(task, failures, alloc)),
+                    trace.machine_cap_gb)
+        attempts += 1
+    if not aborted:
+        waste += (alloc - task.actual_peak_gb) * task.runtime_h
+        wall += task.runtime_h
+        method.complete(task, first_alloc, attempts)
+    elif hasattr(method, "abandon"):
+        method.abandon(task)  # let the method drop in-flight state
+    return TaskOutcome(task, first_alloc, alloc, attempts, failures, waste,
+                       wall, aborted)

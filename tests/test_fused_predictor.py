@@ -1,0 +1,226 @@
+"""Fused single-dispatch decision loop: equivalence, dispatch-count, and
+persistence guarantees (see predictor.py "Performance architecture")."""
+import numpy as np
+import pytest
+
+import repro.core.predictor as predictor_mod
+import repro.core.provenance as provenance_mod
+from repro.baselines.sizey_method import SizeyMethod
+from repro.core.config import SizeyConfig
+from repro.core.predictor import SizeyPredictor, TaskQuery
+from repro.core.provenance import ProvenanceDB
+from repro.workflow import generate_workflow, simulate
+
+ATOL = 1e-5
+
+
+def _workload(n, seed=0):
+    """Deterministic (x, peak, runtime) stream with a nonlinear memory law."""
+    rng = np.random.default_rng(seed)
+    xs = rng.uniform(0.5, 8.0, n)
+    peaks = 1.0 + 0.4 * xs ** 2 + rng.normal(0.0, 0.15, n)
+    rts = rng.uniform(0.2, 1.0, n)
+    return [(float(x), float(max(p, 0.1)), float(r))
+            for x, p, r in zip(xs, peaks, rts)]
+
+
+def _drive(p: SizeyPredictor, workload, probe_every=4):
+    """Feed the workload; return the decisions taken at probe points."""
+    probes = []
+    for i, (x, peak, rt) in enumerate(workload):
+        d = p.predict("t", "m", (x,), 32.0)
+        if i % probe_every == 0:
+            probes.append(d)
+        p.observe(d, peak, rt)
+    return probes
+
+
+def _assert_decisions_close(a, b):
+    assert a.source == b.source
+    np.testing.assert_allclose(a.allocation_gb, b.allocation_gb, atol=ATOL,
+                               rtol=1e-5)
+    if a.source == "model":
+        np.testing.assert_allclose(np.asarray(a.model_preds),
+                                   np.asarray(b.model_preds), atol=ATOL,
+                                   rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(a.weights),
+                                   np.asarray(b.weights), atol=ATOL,
+                                   rtol=1e-5)
+        np.testing.assert_allclose(a.agg_pred_gb, b.agg_pred_gb, atol=ATOL,
+                                   rtol=1e-5)
+        np.testing.assert_allclose(a.offset_gb, b.offset_gb, atol=ATOL,
+                                   rtol=1e-4)
+        assert a.offset_idx == b.offset_idx
+
+
+@pytest.mark.parametrize("strategy", ["interpolation", "argmax"])
+@pytest.mark.parametrize("adaptive_alpha", [False, True])
+def test_fused_matches_per_model_loop(strategy, adaptive_alpha):
+    """The fused single-dispatch path reproduces the per-model-loop
+    reference decision-for-decision, across gating strategies and the
+    adaptive-alpha extension."""
+    cfg = SizeyConfig(strategy=strategy, adaptive_alpha=adaptive_alpha,
+                      incremental=True, mlp_train_steps=40)
+    workload = _workload(24)
+    probes_fused = _drive(SizeyPredictor(cfg, fused=True), workload)
+    probes_loop = _drive(SizeyPredictor(cfg, fused=False), workload)
+    assert len(probes_fused) == len(probes_loop)
+    for a, b in zip(probes_fused, probes_loop):
+        _assert_decisions_close(a, b)
+
+
+def test_fused_matches_loop_across_growth_boundary(monkeypatch):
+    """Equivalence holds while the pool crosses a geometric-growth
+    boundary (count passing INITIAL_CAP -> buffers re-bucketed)."""
+    monkeypatch.setattr(provenance_mod, "INITIAL_CAP", 8)
+    cfg = SizeyConfig(incremental=True, mlp_train_steps=30)
+    workload = _workload(20)  # crosses cap 8 -> 32
+    probes_fused = _drive(SizeyPredictor(cfg, fused=True), workload,
+                          probe_every=2)
+    probes_loop = _drive(SizeyPredictor(cfg, fused=False), workload,
+                         probe_every=2)
+    for a, b in zip(probes_fused, probes_loop):
+        _assert_decisions_close(a, b)
+
+
+def test_fused_matches_loop_full_retrain():
+    """Same check in the paper's default full-retrain (HPO) mode."""
+    cfg = SizeyConfig(incremental=False, mlp_train_steps=30)
+    workload = _workload(10)
+    for a, b in zip(_drive(SizeyPredictor(cfg, fused=True), workload),
+                    _drive(SizeyPredictor(cfg, fused=False), workload)):
+        _assert_decisions_close(a, b)
+
+
+def test_predict_batch_matches_single_predicts():
+    """K batched decisions == K sequential predicts (no observes between)."""
+    cfg = SizeyConfig(incremental=True, mlp_train_steps=40)
+    p = SizeyPredictor(cfg)
+    for x, peak, rt in _workload(12):
+        d = p.predict("t", "m", (x,), 32.0)
+        p.observe(d, peak, rt)
+    xs = [0.7, 1.9, 3.3, 5.1, 7.7]
+    singles = [p.predict("t", "m", (x,), 32.0) for x in xs]
+    batch = p.predict_batch([TaskQuery("t", "m", (x,), 32.0) for x in xs])
+    for a, b in zip(batch, singles):
+        _assert_decisions_close(a, b)
+
+
+def test_predict_batch_groups_pools_and_handles_young_types():
+    cfg = SizeyConfig(incremental=True, mlp_train_steps=30)
+    p = SizeyPredictor(cfg)
+    for x, peak, rt in _workload(8):
+        d = p.predict("warm", "m", (x,), 32.0)
+        p.observe(d, peak, rt)
+    queries = [TaskQuery("warm", "m", (2.0,), 32.0),
+               TaskQuery("cold", "m", (2.0,), 16.0),
+               TaskQuery("warm", "m", (4.0,), 32.0)]
+    d0, d1, d2 = p.predict_batch(queries)
+    assert d0.source == "model" and d2.source == "model"
+    assert d1.source == "preset" and d1.allocation_gb == 16.0
+    _assert_decisions_close(d0, p.predict("warm", "m", (2.0,), 32.0))
+
+
+def test_predict_is_exactly_one_dispatch_and_traces_are_bounded(monkeypatch):
+    """Acceptance: predict() performs exactly ONE jitted dispatch, and
+    repeated decisions at a fixed shape bucket never retrace."""
+    calls = []
+    orig = predictor_mod._fused_predict
+
+    def counting(*args, **kwargs):
+        fn = orig(*args, **kwargs)
+
+        def wrapped(*a, **k):
+            calls.append(1)
+            return fn(*a, **k)
+
+        return wrapped
+
+    monkeypatch.setattr(predictor_mod, "_fused_predict", counting)
+    cfg = SizeyConfig(incremental=True, mlp_train_steps=30)
+    p = SizeyPredictor(cfg)
+    for x, peak, rt in _workload(8):
+        d = p.predict("t", "m", (x,), 32.0)
+        p.observe(d, peak, rt)
+
+    calls.clear()
+    p.predict("t", "m", (3.0,), 32.0)  # warm the (cfg, bucket) entry
+    assert len(calls) == 1, "predict() must be a single fused dispatch"
+
+    traces_before = predictor_mod.TRACE_COUNTS["predict"]
+    for _ in range(20):
+        p.predict("t", "m", (3.0,), 32.0)
+    assert predictor_mod.TRACE_COUNTS["predict"] == traces_before, \
+        "fixed-shape decisions must not recompile"
+    assert len(calls) == 21
+
+    # a K-task burst is also one dispatch
+    calls.clear()
+    p.predict_batch([TaskQuery("t", "m", (float(v),), 32.0)
+                     for v in np.linspace(1, 7, 6)])
+    assert len(calls) == 1, "a same-pool burst must be a single dispatch"
+
+
+def test_prequential_log_survives_checkpoint_restart(tmp_path):
+    """Satellite: JSONL persistence restores the prequential log, so the
+    offset selector / adaptive alpha resume warm after recovery."""
+    path = str(tmp_path / "prov.jsonl")
+    cfg = SizeyConfig(incremental=True, mlp_train_steps=30)
+    p = SizeyPredictor(cfg, ProvenanceDB(n_features=1, n_models=4,
+                                         persist_path=path))
+    for x, peak, rt in _workload(12):
+        d = p.predict("t", "m", (x,), 32.0)
+        p.observe(d, peak, rt)
+    pool = p.db.pool("t", "m")
+    assert pool.log_count > 0
+
+    db2 = ProvenanceDB(n_features=1, n_models=4, persist_path=path)
+    pool2 = db2.pool("t", "m")
+    assert pool2.count == pool.count
+    assert pool2.log_count == pool.log_count
+    n, ln = pool.count, pool.log_count
+    np.testing.assert_allclose(np.asarray(pool2.ys[:n]),
+                               np.asarray(pool.ys[:n]), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(pool2.log_agg[:ln]),
+                               np.asarray(pool.log_agg[:ln]), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(pool2.log_model_preds[:, :ln]),
+                               np.asarray(pool.log_model_preds[:, :ln]),
+                               rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(pool2.log_actual[:ln]),
+                               np.asarray(pool.log_actual[:ln]), rtol=1e-6)
+
+
+def test_zero_machine_cap_is_respected():
+    """Satellite: a legitimate falsy cap (0.0) must not silently fall back
+    to the default machine cap."""
+    p = SizeyPredictor(SizeyConfig())
+    d = p.predict("t", "m", (1.0,), 8.0, machine_cap_gb=0.0)
+    assert d.machine_cap_gb == 0.0
+    assert d.allocation_gb == 0.0
+
+
+def test_batched_simulation_runs_and_stays_sane():
+    """Stage-batched submission drives predict_batch end to end and keeps
+    Sizey's wastage in the same regime as sequential submission."""
+    trace = generate_workflow("rnaseq", scale=0.08)
+    cfg = SizeyConfig(incremental=True, mlp_train_steps=40)
+    r_seq = simulate(trace, SizeyMethod(cfg, ttf=1.0), ttf=1.0)
+    r_bat = simulate(trace, SizeyMethod(cfg, ttf=1.0), ttf=1.0,
+                     batch_stages=True)
+    assert len(r_bat.outcomes) == len(r_seq.outcomes)
+    assert r_bat.wastage_gbh > 0
+    # batching defers observations within a stage; results differ but must
+    # stay in the same regime
+    assert r_bat.wastage_gbh < 3.0 * r_seq.wastage_gbh + 1.0
+
+
+def test_benchmark_smoke_mode(tmp_path):
+    """The predictor microbenchmark's smoke mode exercises the fused and
+    loop paths end to end and reports speedups."""
+    from benchmarks.predictor_bench import run
+    report = run(scale=0.05, out_path=str(tmp_path / "bench.json"))
+    assert (tmp_path / "bench.json").exists()
+    for n, row in report["history"].items():
+        assert row["predict_fused_per_s"] > 0
+        assert row["predict_batch_fused_per_s"] > 0
+        assert row["observe_fused_per_s"] > 0

@@ -2,6 +2,11 @@
 import numpy as np
 import pytest
 
+# full workflow replays: minutes of wall time — excluded from the fast loop
+# (`pytest -m "not slow"`); the fused decision path is still covered there
+# by test_fused_predictor.py and the benchmark smoke test.
+pytestmark = pytest.mark.slow
+
 from repro.baselines import make_method
 from repro.baselines.sizey_method import SizeyMethod
 from repro.core import SizeyConfig
