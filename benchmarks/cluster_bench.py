@@ -1,0 +1,124 @@
+"""Cluster-engine benchmark: simulated-tasks/sec, decision-dispatch counts,
+and makespan/utilization of the event-driven engine vs the serial replay.
+
+    PYTHONPATH=src python -m benchmarks.cluster_bench [--scale 0.2]
+                          [--workflow mag] [--nodes 8]
+                          [--out BENCH_cluster.json]
+
+Two comparisons:
+
+  * engine overhead — a cheap numpy baseline (witt_lr) through the serial
+    replay vs the event engine (same decisions, so the delta is pure
+    event-queue/placement cost), reported as simulated tasks/sec;
+  * decision dispatches — Sizey serial (one fused device launch per task)
+    vs Sizey on the cluster, where each ready wave is sized by one
+    ``allocate_batch`` burst (one launch per pool per wave), counted via
+    ``repro.core.predictor.DISPATCH_COUNTS``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from repro.baselines import make_method
+from repro.baselines.sizey_method import SizeyMethod
+from repro.core import SizeyConfig
+from repro.core.predictor import DISPATCH_COUNTS
+from repro.workflow import generate_workflow, simulate, simulate_cluster
+
+
+def _dispatch_delta(before: dict, key: str) -> int:
+    return DISPATCH_COUNTS[key] - before.get(key, 0)
+
+
+def run(scale: float = 0.2, workflow: str = "mag", n_nodes: int = 8,
+        ttf: float = 1.0, out_path: str = "BENCH_cluster.json") -> dict:
+    trace = generate_workflow(workflow, scale=scale)
+    n_tasks = len(trace.tasks)
+    n_pools = len({(t.task_type, t.machine) for t in trace.tasks})
+    report: dict = {"workflow": workflow, "scale": scale, "n_tasks": n_tasks,
+                    "n_pools": n_pools, "n_nodes": n_nodes}
+
+    # engine overhead on a cheap method: decisions are numpy, so the wall
+    # clock difference is the event queue + placement machinery itself
+    t0 = time.perf_counter()
+    rs = simulate(trace, make_method("witt_lr"), ttf=ttf)
+    serial_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    rc = simulate_cluster(trace, make_method("witt_lr"), ttf=ttf,
+                          n_nodes=n_nodes)
+    cluster_s = time.perf_counter() - t0
+    util = rc.cluster.node_util
+    report["engine"] = {
+        "serial_tasks_per_s": n_tasks / serial_s,
+        "cluster_tasks_per_s": n_tasks / cluster_s,
+        "serial_makespan_h": rs.total_runtime_h,
+        "cluster_makespan_h": rc.cluster.makespan_h,
+        "makespan_speedup": rs.total_runtime_h
+        / max(rc.cluster.makespan_h, 1e-12),
+        "mean_node_util": sum(util.values()) / max(len(util), 1),
+        "peak_reserved_gb": rc.cluster.peak_reserved_gb,
+        "mean_queue_delay_h": rc.cluster.mean_queue_delay_h,
+        "n_waves": rc.cluster.n_waves,
+    }
+    print(f"cluster_bench/engine,serial_tasks_per_s="
+          f"{report['engine']['serial_tasks_per_s']:.0f},"
+          f"cluster_tasks_per_s={report['engine']['cluster_tasks_per_s']:.0f},"
+          f"makespan_speedup={report['engine']['makespan_speedup']:.2f}x,"
+          f"mean_util={report['engine']['mean_node_util']:.2f}")
+
+    # decision dispatches: serial per-task vs per-(wave x pool) bursts
+    before = dict(DISPATCH_COUNTS)
+    t0 = time.perf_counter()
+    simulate(trace, SizeyMethod(SizeyConfig(), ttf=ttf), ttf=ttf)
+    sizey_serial_s = time.perf_counter() - t0
+    serial_dispatches = _dispatch_delta(before, "predict_pool")
+
+    before = dict(DISPATCH_COUNTS)
+    t0 = time.perf_counter()
+    rz = simulate_cluster(trace, SizeyMethod(SizeyConfig(), ttf=ttf),
+                          ttf=ttf, n_nodes=n_nodes)
+    sizey_cluster_s = time.perf_counter() - t0
+    cluster_dispatches = _dispatch_delta(before, "predict_pool")
+    report["sizey"] = {
+        "serial_s": sizey_serial_s,
+        "cluster_s": sizey_cluster_s,
+        "serial_tasks_per_s": n_tasks / sizey_serial_s,
+        "cluster_tasks_per_s": n_tasks / sizey_cluster_s,
+        "serial_predict_dispatches": serial_dispatches,
+        "cluster_predict_dispatches": cluster_dispatches,
+        "dispatch_bound_waves_x_pools": rz.cluster.n_waves * n_pools,
+        "n_waves": rz.cluster.n_waves,
+        "dispatch_reduction": serial_dispatches
+        / max(cluster_dispatches, 1),
+    }
+    print(f"cluster_bench/sizey,serial_dispatches={serial_dispatches},"
+          f"cluster_dispatches={cluster_dispatches},"
+          f"waves={rz.cluster.n_waves},"
+          f"bound={report['sizey']['dispatch_bound_waves_x_pools']},"
+          f"dispatch_reduction={report['sizey']['dispatch_reduction']:.1f}x,"
+          f"cluster_tasks_per_s="
+          f"{report['sizey']['cluster_tasks_per_s']:.0f}")
+
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"# wrote {out_path}")
+    return report
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.2)
+    ap.add_argument("--workflow", default="mag")
+    ap.add_argument("--nodes", type=int, default=8)
+    ap.add_argument("--ttf", type=float, default=1.0)
+    ap.add_argument("--out", default="BENCH_cluster.json")
+    args = ap.parse_args()
+    run(scale=args.scale, workflow=args.workflow, n_nodes=args.nodes,
+        ttf=args.ttf, out_path=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -17,6 +17,10 @@ suite ~10 minutes on CPU while preserving every qualitative result.
   fig11  model-class selection shares (argmax)
   fig12  relative prediction-error trend over task executions
   roofline  three-term roofline per (arch x shape x mesh) from the dry-run
+
+``--smoke`` additionally runs the predictor and cluster-engine
+microbenchmarks (benchmarks/predictor_bench.py, benchmarks/cluster_bench.py)
+at the same scale.
 """
 from __future__ import annotations
 
@@ -257,6 +261,9 @@ def main() -> None:
         from benchmarks.predictor_bench import run as predictor_bench_run
         out["predictor_bench"] = predictor_bench_run(scale=args.scale,
                                                      out_path="")
+        from benchmarks.cluster_bench import run as cluster_bench_run
+        out["cluster_bench"] = cluster_bench_run(scale=args.scale,
+                                                 out_path="")
     bench_roofline(out)
 
     os.makedirs("results", exist_ok=True)

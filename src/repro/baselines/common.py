@@ -3,6 +3,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.workflow.accounting import doubling_retry
 from repro.workflow.trace import TaskInstance
 
 
@@ -33,7 +34,7 @@ class HistoryMethod:
 
     def retry(self, task: TaskInstance, attempt: int,
               last_alloc_gb: float) -> float:
-        return min(last_alloc_gb * 2.0, self.machine_cap_gb)
+        return doubling_retry(last_alloc_gb, self.machine_cap_gb)
 
     def complete(self, task: TaskInstance, first_alloc_gb: float,
                  attempts: int) -> None:

@@ -63,6 +63,11 @@ from repro.utils.misc import stable_hash
 # tests can assert the O(log history) compile-count guarantee.
 TRACE_COUNTS: collections.Counter = collections.Counter()
 
+# dispatch observability: bumped once per *device launch* on the decision
+# path (each fused pool-predict call sizes a whole batch in one program),
+# so cluster tests/benches can assert the O(waves x pools) dispatch bound.
+DISPATCH_COUNTS: collections.Counter = collections.Counter()
+
 
 def pallas_available() -> bool:
     """Compiled Pallas kernels only make sense on an accelerator backend;
@@ -472,6 +477,8 @@ class SizeyPredictor:
         acc, alpha_eff, offset, off_idx = self._cache[key]
         xc = np.concatenate([xb, caps[:, None]], axis=1)
         # one upload in, one dispatch, one fetch out
+        DISPATCH_COUNTS["predict_pool"] += 1
+        DISPATCH_COUNTS["decisions"] += k
         out = np.asarray(fn(self._pview[key], jnp.asarray(xc), acc,
                             alpha_eff, offset, off_idx))
         n = len(self.models)

@@ -1,6 +1,9 @@
-"""Workflow substrate: DAGs, synthetic nf-core-calibrated traces, and the
-online execution simulator with time-to-failure semantics (paper §III-A)."""
+"""Workflow substrate: DAGs, synthetic nf-core-calibrated traces, the serial
+online execution simulator with time-to-failure semantics (paper §III-A),
+and the event-driven multi-node cluster engine."""
 from repro.workflow.trace import TaskInstance, WorkflowTrace
 from repro.workflow.dag import WorkflowDAG
+from repro.workflow.accounting import MAX_ATTEMPTS, AttemptLedger, TaskOutcome
 from repro.workflow.generators import WORKFLOWS, generate_workflow
-from repro.workflow.simulator import SimResult, simulate
+from repro.workflow.simulator import ClusterMetrics, SimResult, simulate
+from repro.workflow.cluster import Node, simulate_cluster

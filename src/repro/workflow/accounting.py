@@ -1,0 +1,109 @@
+"""Per-attempt waste/retry arithmetic shared by the serial replay and the
+event-driven cluster engine (paper §III-A semantics, one source of truth).
+
+The serial simulator runs a task to completion in one tight loop; the
+cluster engine interleaves attempts of many tasks across an event queue.
+Both step the same ``AttemptLedger`` state machine, so the two paths
+cannot drift apart:
+
+  * a killed attempt burns its whole allocation for ``ttf * runtime``;
+  * a successful attempt wastes ``(allocation - actual) * runtime`` GBh;
+  * retries follow the method's own policy, clamped to the machine/node
+    capacity; a task is aborted once even the capacity fails or the
+    ``MAX_ATTEMPTS`` safety valve trips.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.workflow.trace import TaskInstance
+
+MAX_ATTEMPTS = 16  # safety valve; the doubling ladder reaches any cap first
+
+
+def doubling_retry(last_alloc_gb: float, cap_gb: float) -> float:
+    """The standard resource-manager failure ladder: double, clamp to cap."""
+    return min(last_alloc_gb * 2.0, cap_gb)
+
+
+@dataclasses.dataclass
+class TaskOutcome:
+    task: TaskInstance
+    first_alloc_gb: float
+    final_alloc_gb: float
+    attempts: int
+    failures: int
+    wastage_gbh: float
+    runtime_h: float            # wall time incl. failed attempts
+    aborted: bool = False
+    # event timestamps (filled by the simulators; serial replay uses a
+    # running clock, the cluster engine real event times)
+    submit_h: float = 0.0       # became ready / was submitted
+    start_h: float = 0.0        # first attempt dispatched
+    finish_h: float = 0.0       # completed or aborted
+
+    @property
+    def queue_delay_h(self) -> float:
+        return self.start_h - self.submit_h
+
+
+@dataclasses.dataclass
+class AttemptLedger:
+    """Mutable per-task attempt state, stepped identically by both engines."""
+    task: TaskInstance
+    first_alloc_gb: float
+    cap_gb: float               # machine (serial) or node (cluster) capacity
+    ttf: float
+    alloc_gb: float = dataclasses.field(init=False)
+    attempts: int = 1
+    failures: int = 0
+    wastage_gbh: float = 0.0
+    runtime_h: float = 0.0
+    aborted: bool = False
+
+    def __post_init__(self):
+        self.alloc_gb = self.first_alloc_gb
+
+    @property
+    def will_succeed(self) -> bool:
+        """Strict limits (assumption A3): the attempt survives iff the
+        allocation covers the ground-truth peak."""
+        return self.alloc_gb >= self.task.actual_peak_gb
+
+    @property
+    def attempt_duration_h(self) -> float:
+        """Wall time of the *next* attempt: full runtime on success, the
+        ttf-scaled prefix when the attempt will be OOM-killed."""
+        return (self.task.runtime_h if self.will_succeed
+                else self.ttf * self.task.runtime_h)
+
+    def record_failure(self) -> bool:
+        """Account one killed attempt; returns True when the task must be
+        aborted (capacity exhausted or the safety valve tripped)."""
+        self.wastage_gbh += self.alloc_gb * self.ttf * self.task.runtime_h
+        self.runtime_h += self.ttf * self.task.runtime_h
+        self.failures += 1
+        if self.alloc_gb >= self.cap_gb or self.attempts >= MAX_ATTEMPTS:
+            self.aborted = True
+        return self.aborted
+
+    def apply_retry(self, method) -> float:
+        """Ask the method for the next allocation (clamped to capacity)."""
+        self.alloc_gb = min(
+            float(method.retry(self.task, self.failures, self.alloc_gb)),
+            self.cap_gb)
+        self.attempts += 1
+        return self.alloc_gb
+
+    def record_success(self) -> None:
+        self.wastage_gbh += ((self.alloc_gb - self.task.actual_peak_gb)
+                             * self.task.runtime_h)
+        self.runtime_h += self.task.runtime_h
+
+    def outcome(self, *, submit_h: float = 0.0, start_h: float = 0.0,
+                finish_h: float = 0.0) -> TaskOutcome:
+        return TaskOutcome(self.task, self.first_alloc_gb, self.alloc_gb,
+                           self.attempts, self.failures, self.wastage_gbh,
+                           self.runtime_h, self.aborted,
+                           submit_h=submit_h, start_h=start_h,
+                           finish_h=finish_h)

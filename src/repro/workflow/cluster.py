@@ -1,0 +1,267 @@
+"""Event-driven multi-node cluster simulator (paper's shared-cluster setting).
+
+The serial replay in :mod:`repro.workflow.simulator` runs tasks one at a
+time on a single implicit machine, so throughput and utilization effects of
+over-/under-provisioning — the paper's core trade-off — are invisible. This
+engine executes a trace *concurrently* on a set of nodes with finite memory
+capacity:
+
+  * an event queue advances virtual time between task arrivals and
+    completions (successes and ttf-scaled OOM kills);
+  * tasks occupy their ``allocation_gb`` on one node for the duration of
+    each attempt; an OOM kill frees the node and re-enqueues the task at
+    its original FIFO position with the method's retry allocation;
+  * completions unlock downstream *ready sets* via the instance-level
+    dependency edges on :class:`TaskInstance`; each scheduling round sizes
+    the newly-ready tasks as ONE burst through the method's
+    ``allocate_batch`` (one vmapped device dispatch per pool — the PR 1
+    fast path), then places them with a pluggable FIFO / backfill policy;
+  * per-attempt waste/retry arithmetic is the shared
+    :class:`~repro.workflow.accounting.AttemptLedger`, so the serial
+    simulator is exactly the 1-node / sequential-arrival special case of
+    this engine (asserted in ``tests/test_cluster.py``).
+
+Two deliberate semantics notes. A request larger than every node's
+capacity is rejected *at admission* (aborted without running — a real
+resource manager refuses it); the serial path has no admission check and
+would burn the attempt, but shipped methods clamp to the machine capacity,
+so this only triggers on hand-built traces. And an aborted task *unlocks*
+its dependents rather than failing the subtree: the simulator's job is
+wastage/throughput comparison over the full task population, so every
+instance of the trace gets an outcome — exactly the serial replay's
+behaviour (it ignores dependency edges entirely).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import heapq
+import itertools
+
+from repro.workflow.accounting import AttemptLedger, TaskOutcome
+from repro.workflow.simulator import ClusterMetrics, SimResult, SizingMethod
+from repro.workflow.trace import TaskInstance, WorkflowTrace
+
+__all__ = ["Node", "simulate_cluster", "PLACEMENT_POLICIES"]
+
+_ARRIVE, _FINISH = 0, 1
+
+
+@dataclasses.dataclass
+class Node:
+    """One cluster node: finite memory, reservation-time-integral accounting."""
+    name: str
+    cap_gb: float
+    free_gb: float
+    reserved_gbh: float = 0.0   # integral of reserved GB over time
+    last_t: float = 0.0
+
+    def _advance(self, t: float) -> None:
+        self.reserved_gbh += (self.cap_gb - self.free_gb) * (t - self.last_t)
+        self.last_t = t
+
+    def reserve(self, t: float, gb: float) -> None:
+        self._advance(t)
+        self.free_gb -= gb
+
+    def release(self, t: float, gb: float) -> None:
+        self._advance(t)
+        self.free_gb += gb
+
+
+@dataclasses.dataclass
+class _Queued:
+    """A ready task waiting for (or returning to) the dispatch queue."""
+    seq: int                    # FIFO priority: ready order, kept on retry
+    ready_h: float
+    task: TaskInstance
+    ledger: AttemptLedger | None = None   # None until sized
+    start_h: float | None = None          # first dispatch time
+
+
+def _place_fifo(queue: list[_Queued], nodes: list[Node],
+                depth: int) -> list[tuple[_Queued, Node]]:
+    """Strict FIFO first-fit: stop at the first task that fits nowhere
+    (head-of-line blocking — the behaviour of a plain batch queue)."""
+    return _place(queue, nodes, skip_limit=0)
+
+
+def _place_backfill(queue: list[_Queued], nodes: list[Node],
+                    depth: int) -> list[tuple[_Queued, Node]]:
+    """FIFO with backfill: a blocked head does not stall smaller tasks
+    behind it; up to ``depth`` blocked entries are skipped."""
+    return _place(queue, nodes, skip_limit=depth)
+
+
+def _place(queue: list[_Queued], nodes: list[Node],
+           skip_limit: int) -> list[tuple[_Queued, Node]]:
+    free = {n.name: n.free_gb for n in nodes}
+    placements: list[tuple[_Queued, Node]] = []
+    skipped = 0
+    for entry in queue:
+        alloc = entry.ledger.alloc_gb
+        node = next((n for n in nodes if free[n.name] >= alloc), None)
+        if node is None:
+            skipped += 1
+            if skipped > skip_limit:
+                break
+            continue
+        free[node.name] -= alloc
+        placements.append((entry, node))
+    return placements
+
+
+PLACEMENT_POLICIES = {"fifo": _place_fifo, "backfill": _place_backfill}
+
+
+def simulate_cluster(trace: WorkflowTrace, method: SizingMethod,
+                     ttf: float = 1.0, *, n_nodes: int = 8,
+                     node_cap_gb: float | None = None,
+                     policy: str = "backfill",
+                     backfill_depth: int = 32) -> SimResult:
+    """Execute ``trace`` concurrently on ``n_nodes`` nodes of
+    ``node_cap_gb`` memory each (default: the trace's machine capacity).
+
+    Any :class:`SizingMethod` runs unmodified; methods exposing
+    ``allocate_batch`` (Sizey) get each ready wave as one burst. Returns a
+    :class:`SimResult` whose ``cluster`` field carries makespan, queueing
+    delay, per-node utilization, peak concurrent reservation, and wave /
+    sizing-call counts; ``wastage_over_time()`` is event-timestamped and
+    directly comparable to the serial curve.
+    """
+    if policy not in PLACEMENT_POLICIES:
+        raise ValueError(f"unknown placement policy {policy!r} "
+                         f"(have {sorted(PLACEMENT_POLICIES)})")
+    place = PLACEMENT_POLICIES[policy]
+    cap = trace.machine_cap_gb if node_cap_gb is None else node_cap_gb
+    nodes = [Node(f"node{i:02d}", cap, cap) for i in range(n_nodes)]
+    has_batch = hasattr(method, "allocate_batch")
+
+    by_key = {t.key: t for t in trace.tasks}
+    if len(by_key) != len(trace.tasks):
+        raise ValueError("duplicate (task_type, index) keys in trace")
+    indeg: dict[tuple[str, int], int] = {}
+    children: dict[tuple[str, int], list[TaskInstance]] = \
+        collections.defaultdict(list)
+    for t in trace.tasks:
+        live = [d for d in t.deps if d in by_key]
+        indeg[t.key] = len(live)
+        for d in live:
+            children[d].append(t)
+
+    events: list[tuple[float, int, int, object]] = []
+    eseq = itertools.count()
+    for t in trace.tasks:
+        if indeg[t.key] == 0:
+            heapq.heappush(events, (t.arrival_h, next(eseq), _ARRIVE, t))
+
+    queue: list[_Queued] = []
+    qseq = itertools.count()
+    outcomes: list[TaskOutcome] = []
+    clock = total_reserved = peak_reserved = 0.0
+    n_waves = n_size_calls = 0
+
+    def unlock_children(key: tuple[str, int], t: float) -> None:
+        for child in children[key]:
+            indeg[child.key] -= 1
+            if indeg[child.key] == 0:
+                heapq.heappush(events, (max(t, child.arrival_h),
+                                        next(eseq), _ARRIVE, child))
+
+    def finish_aborted(entry: _Queued, t: float) -> None:
+        if hasattr(method, "abandon"):
+            method.abandon(entry.task)
+        outcomes.append(entry.ledger.outcome(
+            submit_h=entry.ready_h,
+            start_h=entry.start_h if entry.start_h is not None else t,
+            finish_h=t))
+        # an abort does not fail the subtree: dependents still execute, so
+        # every instance of the trace gets an outcome (serial semantics)
+        unlock_children(entry.task.key, t)
+
+    while events or queue:
+        if events:
+            clock = events[0][0]
+            while events and events[0][0] <= clock:
+                _, _, kind, payload = heapq.heappop(events)
+                if kind == _ARRIVE:
+                    task = payload
+                    queue.append(_Queued(next(qseq), clock, task))
+                    continue
+                entry, node = payload
+                node.release(clock, entry.ledger.alloc_gb)
+                total_reserved -= entry.ledger.alloc_gb
+                if entry.ledger.will_succeed:
+                    entry.ledger.record_success()
+                    method.complete(entry.task, entry.ledger.first_alloc_gb,
+                                    entry.ledger.attempts)
+                    outcomes.append(entry.ledger.outcome(
+                        submit_h=entry.ready_h, start_h=entry.start_h,
+                        finish_h=clock))
+                    unlock_children(entry.task.key, clock)
+                elif entry.ledger.record_failure():
+                    finish_aborted(entry, clock)
+                else:
+                    entry.ledger.apply_retry(method)
+                    queue.append(entry)   # keeps its original FIFO seq
+        elif queue:
+            # every queued task is sized, admitted (alloc <= cap), and the
+            # cluster is idle — the scheduling round below must place work,
+            # so reaching here again without events is an engine bug
+            raise RuntimeError("cluster scheduler stalled with "
+                               "placeable tasks queued")
+
+        # ----------------------------------------------- scheduling round
+        queue.sort(key=lambda e: e.seq)
+        unsized = [e for e in queue if e.ledger is None]
+        if unsized:
+            # dynamic ready-set burst: one sizing call for the whole wave
+            # (one fused device dispatch per pool for batched methods)
+            n_waves += 1
+            if has_batch:
+                n_size_calls += 1
+                allocs = method.allocate_batch([e.task for e in unsized])
+            else:
+                n_size_calls += len(unsized)
+                allocs = [method.allocate(e.task) for e in unsized]
+            rejected: set[int] = set()
+            for entry, alloc in zip(unsized, allocs):
+                entry.ledger = AttemptLedger(entry.task, float(alloc), cap,
+                                             ttf)
+                if entry.ledger.alloc_gb > cap:
+                    # no node can ever satisfy the request: reject at
+                    # admission (it would otherwise head-of-line block)
+                    entry.ledger.aborted = True
+                    finish_aborted(entry, clock)
+                    rejected.add(id(entry))
+            if rejected:
+                queue = [e for e in queue if id(e) not in rejected]
+        placements = place(queue, nodes, backfill_depth)
+        if placements:
+            placed = set(map(id, (e for e, _ in placements)))
+            queue = [e for e in queue if id(e) not in placed]
+            for entry, node in placements:
+                alloc = entry.ledger.alloc_gb
+                node.reserve(clock, alloc)
+                total_reserved += alloc
+                peak_reserved = max(peak_reserved, total_reserved)
+                if entry.start_h is None:
+                    entry.start_h = clock
+                heapq.heappush(
+                    events,
+                    (clock + entry.ledger.attempt_duration_h, next(eseq),
+                     _FINISH, (entry, node)))
+
+    makespan = clock
+    for node in nodes:
+        node._advance(makespan)
+    delays = [o.queue_delay_h for o in outcomes]
+    metrics = ClusterMetrics(
+        n_nodes=n_nodes, node_cap_gb=cap, makespan_h=makespan,
+        mean_queue_delay_h=sum(delays) / len(delays) if delays else 0.0,
+        max_queue_delay_h=max(delays, default=0.0),
+        node_util={n.name: (n.reserved_gbh / (n.cap_gb * makespan)
+                            if makespan > 0 else 0.0) for n in nodes},
+        peak_reserved_gb=peak_reserved, n_waves=n_waves,
+        n_size_calls=n_size_calls)
+    return SimResult(trace.name, method.name, ttf, outcomes, cluster=metrics)

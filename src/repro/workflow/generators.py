@@ -153,14 +153,26 @@ def _preset_for(max_actual: float, factor: float) -> float:
 
 def generate_workflow(name: str, seed: int = 0, scale: float = 1.0,
                       machines: tuple[str, ...] = ("epyc128",),
-                      machine_cap_gb: float = 128.0) -> WorkflowTrace:
+                      machine_cap_gb: float = 128.0,
+                      arrival_rate_per_h: float | None = None,
+                      fan_in: int = 2) -> WorkflowTrace:
     """Generate the full trace for one workflow. ``scale`` shrinks instance
-    counts for fast tests (tests use scale=0.1; benchmarks use 1.0)."""
+    counts for fast tests (tests use scale=0.1; benchmarks use 1.0).
+
+    Every instance carries per-instance dependency edges expanded from the
+    type-level DAG (scatter/gather, ``fan_in`` upstream shards), so the
+    event-driven cluster engine can unlock ready sets as upstream
+    instances complete. ``arrival_rate_per_h`` additionally gives the
+    *root* instances (no upstream edges) a Poisson arrival process with
+    that rate — the open-system load model; by default all roots are
+    available at t=0 (closed-system replay, the serial simulator's view).
+    """
     spec = WORKFLOWS[name]
     names = _type_names(spec)
     dag = WorkflowDAG.chain_of(names)
     stages = dag.stages()
     tasks: list[TaskInstance] = []
+    counts: dict[str, int] = {}
 
     for ti, tname in enumerate(names):
         rng = np.random.default_rng(
@@ -173,6 +185,7 @@ def generate_workflow(name: str, seed: int = 0, scale: float = 1.0,
                       in_hi)
         rt_mean = rng.uniform(*spec.runtime_h)
         count = max(3, int(spec.avg_instances * rng.uniform(0.7, 1.3) * scale))
+        counts[tname] = count
         machine = machines[ti % len(machines)]
 
         # input sizes: lognormal clipped into the spec range
@@ -197,4 +210,18 @@ def generate_workflow(name: str, seed: int = 0, scale: float = 1.0,
     # submission order: by DAG stage, interleaved within a stage
     order_rng = np.random.default_rng(seed + stable_hash(name) % (2 ** 31))
     tasks.sort(key=lambda t: (t.stage, order_rng.random()))
-    return WorkflowTrace(name=name, tasks=tasks, machine_cap_gb=machine_cap_gb)
+
+    # instance-level dependency edges + (optional) root arrival process
+    edges = dag.instance_edges(counts, seed=seed, fan_in=fan_in)
+    arrival_rng = np.random.default_rng(
+        (stable_hash(f"arrivals:{name}") + seed) % (2 ** 31))
+    clock = 0.0
+    final: list[TaskInstance] = []
+    for t in tasks:
+        deps = edges.get((t.task_type, t.index), ())
+        arrival = 0.0
+        if arrival_rate_per_h and not deps:
+            clock += float(arrival_rng.exponential(1.0 / arrival_rate_per_h))
+            arrival = clock
+        final.append(dataclasses.replace(t, deps=deps, arrival_h=arrival))
+    return WorkflowTrace(name=name, tasks=final, machine_cap_gb=machine_cap_gb)

@@ -13,14 +13,21 @@ Replays a trace in submission order against a sizing method. Semantics:
     is aborted (never happens with the shipped generators).
 
 The method interface is minimal so Sizey, all baselines, and the LM-job
-sizer share it: allocate / retry / complete.
+sizer share it: allocate / retry / complete. The per-attempt arithmetic
+lives in :mod:`repro.workflow.accounting` and is shared with the
+event-driven multi-node engine (:mod:`repro.workflow.cluster`) — the
+serial replay here is the 1-node special case of the same state machine.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Protocol
 
+from repro.workflow.accounting import MAX_ATTEMPTS, AttemptLedger, TaskOutcome
 from repro.workflow.trace import TaskInstance, WorkflowTrace
+
+__all__ = ["SizingMethod", "TaskOutcome", "ClusterMetrics", "SimResult",
+           "MAX_ATTEMPTS", "simulate"]
 
 
 class SizingMethod(Protocol):
@@ -39,15 +46,17 @@ class SizingMethod(Protocol):
 
 
 @dataclasses.dataclass
-class TaskOutcome:
-    task: TaskInstance
-    first_alloc_gb: float
-    final_alloc_gb: float
-    attempts: int
-    failures: int
-    wastage_gbh: float
-    runtime_h: float            # wall time incl. failed attempts
-    aborted: bool = False
+class ClusterMetrics:
+    """Cluster-level execution metrics (filled by the event-driven engine)."""
+    n_nodes: int
+    node_cap_gb: float
+    makespan_h: float
+    mean_queue_delay_h: float
+    max_queue_delay_h: float
+    node_util: dict[str, float]        # time-averaged reserved fraction
+    peak_reserved_gb: float            # peak concurrent reservation, cluster-wide
+    n_waves: int                       # scheduling rounds that sized >= 1 task
+    n_size_calls: int                  # allocate_batch / allocate-loop calls
 
 
 @dataclasses.dataclass
@@ -56,6 +65,7 @@ class SimResult:
     method: str
     ttf: float
     outcomes: list[TaskOutcome]
+    cluster: ClusterMetrics | None = None
 
     @property
     def wastage_gbh(self) -> float:
@@ -64,6 +74,13 @@ class SimResult:
     @property
     def total_runtime_h(self) -> float:
         return sum(o.runtime_h for o in self.outcomes)
+
+    @property
+    def makespan_h(self) -> float:
+        """Wall time until the last completion event. Equals
+        ``total_runtime_h`` for the serial replay; much smaller for a
+        concurrent cluster run."""
+        return max((o.finish_h for o in self.outcomes), default=0.0)
 
     @property
     def n_failures(self) -> int:
@@ -76,17 +93,19 @@ class SimResult:
         return out
 
     def wastage_over_time(self) -> list[tuple[float, float]]:
-        """Cumulative (elapsed_h, wastage_gbh) curve (Fig. 8a/8b x-axis)."""
-        t = w = 0.0
+        """Cumulative (event_time_h, wastage_gbh) curve (Fig. 8a/8b x-axis).
+
+        Points are ordered by each task's *completion timestamp*, so serial
+        and cluster results plot on the same (wall-clock) axis. For the
+        serial replay the timestamps are the running sum of per-task wall
+        times, i.e. the pre-cluster behaviour is preserved exactly.
+        """
+        w = 0.0
         curve = []
-        for o in self.outcomes:
-            t += o.runtime_h
+        for o in sorted(self.outcomes, key=lambda o: o.finish_h):
             w += o.wastage_gbh
-            curve.append((t, w))
+            curve.append((o.finish_h, w))
         return curve
-
-
-MAX_ATTEMPTS = 16  # safety valve; the doubling ladder reaches any cap first
 
 
 def _bursts(tasks: list[TaskInstance]):
@@ -105,15 +124,19 @@ def _bursts(tasks: list[TaskInstance]):
 
 def simulate(trace: WorkflowTrace, method: SizingMethod,
              ttf: float = 1.0, *, batch_stages: bool = False) -> SimResult:
-    """Replay ``trace`` against ``method``.
+    """Replay ``trace`` against ``method`` on one implicit machine.
 
     ``batch_stages=True`` submits each DAG stage as one burst through the
     method's ``allocate_batch`` (if it has one) — the realistic cluster
     scenario where a scheduler dispatches a whole ready stage at once and
     Sizey amortizes K decisions into one device launch. Completions (and
     thus model updates) still happen per task, after the burst is sized.
+
+    For concurrent multi-node execution with instance-level dependencies
+    use :func:`repro.workflow.cluster.simulate_cluster`.
     """
     outcomes: list[TaskOutcome] = []
+    clock = 0.0
     batched = batch_stages and hasattr(method, "allocate_batch")
     bursts = _bursts(trace.tasks) if batched else ([t] for t in trace.tasks)
     for burst in bursts:
@@ -122,31 +145,24 @@ def simulate(trace: WorkflowTrace, method: SizingMethod,
         else:
             allocs = [float(method.allocate(t)) for t in burst]
         for task, first_alloc in zip(burst, allocs):
-            outcomes.append(_run_one(trace, method, task, first_alloc, ttf))
+            o = _run_one(trace, method, task, first_alloc, ttf, clock)
+            clock = o.finish_h
+            outcomes.append(o)
     return SimResult(trace.name, method.name, ttf, outcomes)
 
 
 def _run_one(trace: WorkflowTrace, method: SizingMethod, task: TaskInstance,
-             first_alloc: float, ttf: float) -> TaskOutcome:
-    alloc = first_alloc
-    attempts, failures, waste, wall = 1, 0, 0.0, 0.0
-    aborted = False
-    while alloc < task.actual_peak_gb:
-        # killed attempt: whole allocation burned for ttf * runtime
-        waste += alloc * ttf * task.runtime_h
-        wall += ttf * task.runtime_h
-        failures += 1
-        if alloc >= trace.machine_cap_gb or attempts >= MAX_ATTEMPTS:
-            aborted = True
+             first_alloc: float, ttf: float, clock: float) -> TaskOutcome:
+    led = AttemptLedger(task, first_alloc, trace.machine_cap_gb, ttf)
+    while not led.will_succeed:
+        if led.record_failure():
             break
-        alloc = min(float(method.retry(task, failures, alloc)),
-                    trace.machine_cap_gb)
-        attempts += 1
-    if not aborted:
-        waste += (alloc - task.actual_peak_gb) * task.runtime_h
-        wall += task.runtime_h
-        method.complete(task, first_alloc, attempts)
-    elif hasattr(method, "abandon"):
-        method.abandon(task)  # let the method drop in-flight state
-    return TaskOutcome(task, first_alloc, alloc, attempts, failures, waste,
-                       wall, aborted)
+        led.apply_retry(method)
+    if led.aborted:
+        if hasattr(method, "abandon"):
+            method.abandon(task)  # let the method drop in-flight state
+    else:
+        led.record_success()
+        method.complete(task, first_alloc, led.attempts)
+    return led.outcome(submit_h=clock, start_h=clock,
+                       finish_h=clock + led.runtime_h)

@@ -16,6 +16,15 @@ class TaskInstance:
     user_preset_gb: float     # workflow developer's static estimate
     stage: int                # DAG stage (drives submission order)
     index: int                # instance number within the task type
+    arrival_h: float = 0.0    # submission time (event-driven cluster engine)
+    # instance-level dependency edges: (task_type, index) keys of upstream
+    # instances that must complete before this one may start
+    deps: tuple[tuple[str, int], ...] = ()
+
+    @property
+    def key(self) -> tuple[str, int]:
+        """Trace-unique instance identifier."""
+        return (self.task_type, self.index)
 
     @property
     def features(self) -> tuple[float, ...]:
@@ -41,5 +50,22 @@ class WorkflowTrace:
             "workflow": self.name,
             "n_task_types": len(types),
             "n_tasks": len(self.tasks),
-            "avg_instances_per_type": round(len(self.tasks) / max(len(types), 1)),
+            # float: the fractional load factor matters when comparing
+            # scaled-down traces against Table I
+            "avg_instances_per_type": len(self.tasks) / max(len(types), 1),
+            "machine_cap_gb": self.machine_cap_gb,
         }
+
+    def sequentialized(self) -> "WorkflowTrace":
+        """A copy whose tasks form one dependency chain in submission order
+        (task i depends on task i-1) with arrivals at t=0. On any cluster
+        the ready set is then always a single task, so the event engine
+        degenerates to the serial replay — the equivalence configuration
+        used by tests and benchmarks."""
+        chained: list[TaskInstance] = []
+        prev: TaskInstance | None = None
+        for t in self.tasks:
+            chained.append(dataclasses.replace(
+                t, arrival_h=0.0, deps=(prev.key,) if prev else ()))
+            prev = chained[-1]
+        return WorkflowTrace(self.name, chained, self.machine_cap_gb)

@@ -81,3 +81,31 @@ def test_wastage_over_time_monotone():
     r = simulate(trace, make_method("witt_lr"))
     curve = r.wastage_over_time()
     assert all(b[1] >= a[1] for a, b in zip(curve, curve[1:]))
+
+
+def test_wastage_over_time_serial_is_event_timestamped():
+    """Regression pin for the serial 1-node case: the curve's x-axis is the
+    per-task completion timestamp, which serially equals the running sum of
+    wall times (the pre-cluster behaviour)."""
+    trace = generate_workflow("iwd", scale=0.1)
+    r = simulate(trace, make_method("witt_lr"))
+    curve = r.wastage_over_time()
+    t = w = 0.0
+    for o, (ct, cw) in zip(r.outcomes, curve):
+        t += o.runtime_h
+        w += o.wastage_gbh
+        assert ct == pytest.approx(t)
+        assert cw == pytest.approx(w)
+        assert o.finish_h == pytest.approx(t)
+    assert curve[-1] == (pytest.approx(r.total_runtime_h),
+                         pytest.approx(r.wastage_gbh))
+    assert r.makespan_h == pytest.approx(r.total_runtime_h)
+
+
+def test_summary_reports_float_load_and_machine_cap():
+    trace = generate_workflow("mag", scale=1.0)
+    s = trace.summary()
+    assert isinstance(s["avg_instances_per_type"], float)
+    assert s["avg_instances_per_type"] == pytest.approx(
+        len(trace.tasks) / s["n_task_types"])
+    assert s["machine_cap_gb"] == trace.machine_cap_gb
