@@ -1,11 +1,13 @@
 """Cluster-engine benchmark: simulated-tasks/sec, decision-dispatch counts,
-and makespan/utilization of the event-driven engine vs the serial replay.
+makespan/utilization of the event-driven engine vs the serial replay, and
+the placement-policy x node-mix frontier.
 
     PYTHONPATH=src python -m benchmarks.cluster_bench [--scale 0.2]
                           [--workflow mag] [--nodes 8]
+                          [--policies backfill best_fit spread]
                           [--out BENCH_cluster.json]
 
-Two comparisons:
+Three comparisons:
 
   * engine overhead — a cheap numpy baseline (witt_lr) through the serial
     replay vs the event engine (same decisions, so the delta is pure
@@ -13,7 +15,11 @@ Two comparisons:
   * decision dispatches — Sizey serial (one fused device launch per task)
     vs Sizey on the cluster, where each ready wave is sized by one
     ``allocate_batch`` burst (one launch per pool per wave), counted via
-    ``repro.core.predictor.DISPATCH_COUNTS``.
+    ``repro.core.predictor.DISPATCH_COUNTS``;
+  * policy frontier — every requested placement policy on a homogeneous
+    and a heterogeneous (16/32/64 GB node classes, class-labeled trace)
+    mix: makespan / utilization / wastage / queue delay per cell, so a
+    placement-policy regression shows up in the bench trajectory.
 """
 from __future__ import annotations
 
@@ -25,7 +31,11 @@ from repro.baselines import make_method
 from repro.baselines.sizey_method import SizeyMethod
 from repro.core import SizeyConfig
 from repro.core.predictor import DISPATCH_COUNTS
-from repro.workflow import generate_workflow, simulate, simulate_cluster
+from repro.workflow import (generate_workflow, node_specs_from_caps,
+                            simulate, simulate_cluster)
+from repro.workflow.cluster import machine_label
+
+HETERO_CAPS = (16.0, 32.0, 64.0)
 
 
 def _dispatch_delta(before: dict, key: str) -> int:
@@ -33,12 +43,21 @@ def _dispatch_delta(before: dict, key: str) -> int:
 
 
 def run(scale: float = 0.2, workflow: str = "mag", n_nodes: int = 8,
-        ttf: float = 1.0, out_path: str = "BENCH_cluster.json") -> dict:
+        ttf: float = 1.0, out_path: str = "BENCH_cluster.json",
+        policies: tuple[str, ...] = ("backfill", "best_fit", "spread"),
+        fail_rate: float = 0.0, frontier_only: bool = False) -> dict:
+    """``frontier_only`` skips the engine-overhead and Sizey dispatch
+    comparisons — for CI steps that already ran them via
+    ``benchmarks.run --smoke`` and only want more frontier cells."""
     trace = generate_workflow(workflow, scale=scale)
     n_tasks = len(trace.tasks)
     n_pools = len({(t.task_type, t.machine) for t in trace.tasks})
     report: dict = {"workflow": workflow, "scale": scale, "n_tasks": n_tasks,
                     "n_pools": n_pools, "n_nodes": n_nodes}
+
+    if frontier_only:
+        return _frontier(report, trace, workflow, scale, n_nodes, ttf,
+                         policies, fail_rate, out_path)
 
     # engine overhead on a cheap method: decisions are numpy, so the wall
     # clock difference is the event queue + placement machinery itself
@@ -101,6 +120,55 @@ def run(scale: float = 0.2, workflow: str = "mag", n_nodes: int = 8,
           f"cluster_tasks_per_s="
           f"{report['sizey']['cluster_tasks_per_s']:.0f}")
 
+    return _frontier(report, trace, workflow, scale, n_nodes, ttf, policies,
+                     fail_rate, out_path)
+
+
+def _frontier(report: dict, trace, workflow: str, scale: float, n_nodes: int,
+              ttf: float, policies: tuple[str, ...], fail_rate: float,
+              out_path: str) -> dict:
+    # placement-policy x node-mix frontier (cheap numpy method: the cells
+    # compare placement, not sizing)
+    hetero_trace = generate_workflow(
+        workflow, scale=scale,
+        machine_caps_gb={machine_label(c): c for c in HETERO_CAPS})
+    mixes = {
+        "homogeneous": (trace, None),
+        "hetero_16_32_64": (hetero_trace,
+                            node_specs_from_caps(HETERO_CAPS,
+                                                 n_nodes=n_nodes)),
+    }
+    frontier = []
+    for mix, (mtrace, specs) in mixes.items():
+        for pol in policies:
+            t0 = time.perf_counter()
+            rf = simulate_cluster(mtrace, make_method("witt_lr"), ttf=ttf,
+                                  n_nodes=n_nodes, node_specs=specs,
+                                  policy=pol,
+                                  fail_rate_per_node_h=fail_rate)
+            wall = time.perf_counter() - t0
+            c = rf.cluster
+            cell = {
+                "mix": mix, "policy": pol,
+                "makespan_h": c.makespan_h,
+                # capacity-weighted: a busy 64 GB node counts 4x a 16 GB one
+                "mean_util": c.mean_util,
+                "class_util": c.class_util,
+                "wastage_gbh": rf.wastage_gbh,
+                "mean_queue_delay_h": c.mean_queue_delay_h,
+                "n_aborted": c.n_aborted,
+                "n_preemptions": c.n_preemptions,
+                "tasks_per_s": len(mtrace.tasks) / wall,
+            }
+            frontier.append(cell)
+            print(f"cluster_bench/frontier,mix={mix},policy={pol},"
+                  f"makespan_h={cell['makespan_h']:.3f},"
+                  f"mean_util={cell['mean_util']:.3f},"
+                  f"wastage_gbh={cell['wastage_gbh']:.1f},"
+                  f"queue_delay_h={cell['mean_queue_delay_h']:.4f},"
+                  f"aborted={cell['n_aborted']}")
+    report["frontier"] = frontier
+
     if out_path:
         with open(out_path, "w") as f:
             json.dump(report, f, indent=2)
@@ -114,10 +182,18 @@ def main() -> None:
     ap.add_argument("--workflow", default="mag")
     ap.add_argument("--nodes", type=int, default=8)
     ap.add_argument("--ttf", type=float, default=1.0)
+    ap.add_argument("--policies", nargs="+",
+                    default=["backfill", "best_fit", "spread"])
+    ap.add_argument("--fail-rate", type=float, default=0.0,
+                    help="injected node crashes per node-hour (frontier)")
+    ap.add_argument("--frontier-only", action="store_true",
+                    help="skip the engine/Sizey comparisons (CI runs them "
+                         "via benchmarks.run --smoke already)")
     ap.add_argument("--out", default="BENCH_cluster.json")
     args = ap.parse_args()
     run(scale=args.scale, workflow=args.workflow, n_nodes=args.nodes,
-        ttf=args.ttf, out_path=args.out)
+        ttf=args.ttf, out_path=args.out, policies=tuple(args.policies),
+        fail_rate=args.fail_rate, frontier_only=args.frontier_only)
 
 
 if __name__ == "__main__":

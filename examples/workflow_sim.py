@@ -6,11 +6,25 @@ time-to-failure values, reproducing Fig. 8 / Table II.
 
 Scale 1.0 replays the full Table I instance counts (~13.5k tasks/method).
 
-``--cluster N`` runs each (workflow, method, ttf) cell on the event-driven
+``--cluster [N]`` runs each (workflow, method, ttf) cell on the event-driven
 N-node engine instead of the serial replay: instance-level DAG dependencies
 gate ready sets, nodes have finite memory, and the CSV gains makespan /
 mean node-utilization / queueing-delay columns — the throughput side of the
 over- vs under-provisioning trade-off the serial replay cannot show.
+
+The heterogeneous, failure-aware setting (the paper's shared nf-core
+clusters, where nodes differ in memory and fail mid-run):
+
+    PYTHONPATH=src python examples/workflow_sim.py --cluster \
+        --node-caps 16,32,64 --policy best_fit --fail-rate 0.01
+
+``--node-caps`` cycles the listed per-node-class capacities over the node
+set AND makes the generated traces heterogeneous (task types cycle over
+the matching machine classes, per-machine predictor pools clamp against
+their own class capacity); per-node-class utilization is reported per
+cell. ``--policy`` picks any registered placement policy (fifo, backfill,
+best_fit, spread, preemptive); ``--fail-rate`` injects seeded node
+crashes (crashes per node-hour, ``--repair-h`` downtime each).
 """
 import argparse
 import csv
@@ -20,8 +34,9 @@ import time
 from repro.baselines import make_method
 from repro.baselines.sizey_method import SizeyMethod
 from repro.core import SizeyConfig
-from repro.workflow import (WORKFLOWS, generate_workflow, simulate,
-                            simulate_cluster)
+from repro.workflow import (WORKFLOWS, generate_workflow, node_specs_from_caps,
+                            simulate, simulate_cluster)
+from repro.workflow.cluster import PLACEMENT_POLICIES, machine_label
 
 METHODS = ["sizey", "witt_wastage", "witt_lr", "tovar_ppm",
            "witt_percentile", "workflow_presets"]
@@ -37,33 +52,64 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=float, default=0.5)
     ap.add_argument("--ttf", type=float, nargs="+", default=[1.0, 0.5])
-    ap.add_argument("--cluster", type=int, default=0, metavar="N",
+    ap.add_argument("--cluster", type=int, nargs="?", const=-1, default=0,
+                    metavar="N",
                     help="run on the event-driven engine with N nodes "
-                         "(0 = serial replay)")
+                         "(bare --cluster: 8, or one node per --node-caps "
+                         "entry; omit for the serial replay)")
+    ap.add_argument("--node-caps", default=None, metavar="GB,GB,...",
+                    help="comma-separated per-node-class memory capacities, "
+                         "e.g. 16,32,64: heterogeneous node set AND "
+                         "heterogeneous trace emission (requires --cluster)")
     ap.add_argument("--policy", default="backfill",
-                    choices=["fifo", "backfill"])
+                    choices=sorted(PLACEMENT_POLICIES))
+    ap.add_argument("--fail-rate", type=float, default=0.0,
+                    help="node crashes per node-hour (seeded, deterministic; "
+                         "requires --cluster)")
+    ap.add_argument("--repair-h", type=float, default=1.0,
+                    help="downtime per injected node crash, hours")
+    ap.add_argument("--fail-seed", type=int, default=0)
     ap.add_argument("--arrival-rate", type=float, default=None,
                     help="Poisson arrival rate (roots/hour) for the "
                          "cluster engine's open-system load model")
     ap.add_argument("--out", default="results/workflow_sim.csv")
     args = ap.parse_args()
-    if args.arrival_rate and not args.cluster:
-        ap.error("--arrival-rate only affects the event-driven engine; "
-                 "combine it with --cluster N (the serial replay ignores "
-                 "arrival times)")
+    for flag, val in (("--arrival-rate", args.arrival_rate),
+                      ("--node-caps", args.node_caps),
+                      ("--fail-rate", args.fail_rate)):
+        if val and not args.cluster:
+            ap.error(f"{flag} only affects the event-driven engine; "
+                     f"combine it with --cluster [N] (the serial replay "
+                     f"ignores it)")
+
+    caps = machine_caps = node_specs = None
+    if args.node_caps:
+        caps = [float(c) for c in args.node_caps.split(",")]
+        machine_caps = {machine_label(c): c for c in caps}
+    n_nodes = args.cluster
+    if n_nodes == -1:
+        n_nodes = len(caps) if caps else 8
+    if caps:
+        try:
+            node_specs = node_specs_from_caps(caps, n_nodes=n_nodes)
+        except ValueError as e:   # e.g. --cluster N drops node classes
+            ap.error(str(e))
 
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     rows = []
     for wf in WORKFLOWS:
         trace = generate_workflow(wf, scale=args.scale,
+                                  machine_caps_gb=machine_caps,
                                   arrival_rate_per_h=args.arrival_rate)
         for ttf in args.ttf:
             for m in METHODS:
                 t0 = time.time()
                 if args.cluster:
-                    r = simulate_cluster(trace, make(m, ttf), ttf=ttf,
-                                         n_nodes=args.cluster,
-                                         policy=args.policy)
+                    r = simulate_cluster(
+                        trace, make(m, ttf), ttf=ttf, n_nodes=n_nodes,
+                        node_specs=node_specs, policy=args.policy,
+                        fail_rate_per_node_h=args.fail_rate,
+                        repair_h=args.repair_h, fail_seed=args.fail_seed)
                 else:
                     r = simulate(trace, make(m, ttf), ttf=ttf)
                 row = {
@@ -75,14 +121,23 @@ def main():
                     "wall_s": round(time.time() - t0, 1),
                 }
                 if r.cluster is not None:
-                    util = r.cluster.node_util
+                    c = r.cluster
                     row.update({
-                        "makespan_h": round(r.cluster.makespan_h, 3),
-                        "mean_util": round(
-                            sum(util.values()) / max(len(util), 1), 3),
-                        "queue_delay_h": round(
-                            r.cluster.mean_queue_delay_h, 4),
-                        "waves": r.cluster.n_waves,
+                        "policy": c.policy,
+                        "makespan_h": round(c.makespan_h, 3),
+                        # capacity-weighted: fraction of cluster memory used
+                        "mean_util": round(c.mean_util, 3),
+                        # per-node-class utilization (heterogeneous runs)
+                        "class_util": "|".join(
+                            f"{cls}={u:.3f}"
+                            for cls, u in sorted(c.class_util.items())),
+                        "queue_delay_h": round(c.mean_queue_delay_h, 4),
+                        "waves": c.n_waves,
+                        "aborted": c.n_aborted,
+                        "preemptions": c.n_preemptions,
+                        "node_failures": c.n_node_failures,
+                        "interruptions": sum(o.interruptions
+                                             for o in r.outcomes),
                     })
                 rows.append(row)
                 print(row, flush=True)

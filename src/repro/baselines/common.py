@@ -22,6 +22,12 @@ class HistoryMethod:
     def _key(self, task: TaskInstance) -> tuple[str, str]:
         return (task.task_type, task.machine)
 
+    def cap_for(self, task: TaskInstance) -> float:
+        """Capacity to clamp against: the task's own machine-class cap on a
+        heterogeneous trace, the method-wide machine cap otherwise."""
+        cap = task.machine_cap_gb
+        return self.machine_cap_gb if cap is None else float(cap)
+
     def history(self, task: TaskInstance):
         k = self._key(task)
         return (np.asarray(self._xs.get(k, [])),
@@ -34,7 +40,7 @@ class HistoryMethod:
 
     def retry(self, task: TaskInstance, attempt: int,
               last_alloc_gb: float) -> float:
-        return doubling_retry(last_alloc_gb, self.machine_cap_gb)
+        return doubling_retry(last_alloc_gb, self.cap_for(task))
 
     def complete(self, task: TaskInstance, first_alloc_gb: float,
                  attempts: int) -> None:

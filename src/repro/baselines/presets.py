@@ -9,4 +9,4 @@ class WorkflowPresets(HistoryMethod):
     name = "workflow_presets"
 
     def allocate(self, task: TaskInstance) -> float:
-        return min(task.user_preset_gb, self.machine_cap_gb)
+        return min(task.user_preset_gb, self.cap_for(task))

@@ -19,8 +19,11 @@ class SizeyMethod:
         self._pending: dict[int, SizingDecision] = {}
 
     def allocate(self, task: TaskInstance) -> float:
+        # heterogeneous traces carry per-instance machine caps; route them
+        # into the pool so clamping follows the task's machine class
         decision = self.predictor.predict(
-            task.task_type, task.machine, task.features, task.user_preset_gb)
+            task.task_type, task.machine, task.features, task.user_preset_gb,
+            machine_cap_gb=task.machine_cap_gb)
         self._pending[id(task)] = decision
         return decision.allocation_gb
 

@@ -25,8 +25,9 @@ class TovarPPM(HistoryMethod):
 
     def allocate(self, task: TaskInstance) -> float:
         _, ys, rts = self.history(task)
+        cap = self.cap_for(task)
         if ys.size < self.min_history:
-            return min(task.user_preset_gb, self.machine_cap_gb)
+            return min(task.user_preset_gb, cap)
         cands = np.unique(ys)
         mean_rt = float(np.mean(rts))
         best_a, best_cost = float(cands[-1]), np.inf
@@ -34,13 +35,13 @@ class TovarPPM(HistoryMethod):
             ok = ys <= a
             cost_ok = np.sum((a - ys[ok])) * mean_rt
             # failed: burn a for ttf*rt, retry at node max wastes (cap - y)
-            cost_fail = np.sum(a * self.ttf + (self.machine_cap_gb - ys[~ok])) \
+            cost_fail = np.sum(a * self.ttf + (cap - ys[~ok])) \
                 * mean_rt
             cost = (cost_ok + cost_fail) / ys.size
             if cost < best_cost:
                 best_cost, best_a = cost, float(a)
-        return min(best_a, self.machine_cap_gb)
+        return min(best_a, cap)
 
     def retry(self, task: TaskInstance, attempt: int,
               last_alloc_gb: float) -> float:
-        return self.machine_cap_gb
+        return self.cap_for(task)

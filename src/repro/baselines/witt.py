@@ -39,10 +39,10 @@ class WittPercentile(HistoryMethod):
 
     def allocate(self, task: TaskInstance) -> float:
         _, ys, _ = self.history(task)
+        cap = self.cap_for(task)
         if ys.size < self.min_history:
-            return min(task.user_preset_gb, self.machine_cap_gb)
-        return float(min(np.percentile(ys, self.percentile),
-                         self.machine_cap_gb))
+            return min(task.user_preset_gb, cap)
+        return float(min(np.percentile(ys, self.percentile), cap))
 
 
 class WittLR(HistoryMethod):
@@ -52,12 +52,13 @@ class WittLR(HistoryMethod):
 
     def allocate(self, task: TaskInstance) -> float:
         xs, ys, _ = self.history(task)
+        cap = self.cap_for(task)
         if ys.size < self.min_history:
-            return min(task.user_preset_gb, self.machine_cap_gb)
+            return min(task.user_preset_gb, cap)
         a, b = _ols(xs, ys)
         resid = ys - (a * xs + b)
         pred = a * task.input_size_gb + b + float(np.std(resid))
-        return float(np.clip(pred, 0.125, self.machine_cap_gb))
+        return float(np.clip(pred, 0.125, cap))
 
 
 class WittWastage(HistoryMethod):
@@ -69,31 +70,33 @@ class WittWastage(HistoryMethod):
         super().__init__(machine_cap_gb)
         self.ttf = ttf
 
-    def _wastage_of_line(self, a: float, b: float, xs, ys, rts) -> float:
+    def _wastage_of_line(self, a: float, b: float, xs, ys, rts,
+                         cap: float) -> float:
         """Retrospective wastage of allocating a*x+b with doubling retries."""
         total = 0.0
         for x, y, rt in zip(xs, ys, rts):
             alloc = max(a * x + b, 0.125)
             waste = 0.0
-            while alloc < y and alloc < self.machine_cap_gb:
+            while alloc < y and alloc < cap:
                 waste += alloc * self.ttf * rt
-                alloc = min(alloc * 2.0, self.machine_cap_gb)
+                alloc = min(alloc * 2.0, cap)
             waste += max(alloc - y, 0.0) * rt
             total += waste
         return total
 
     def allocate(self, task: TaskInstance) -> float:
         xs, ys, rts = self.history(task)
+        cap = self.cap_for(task)
         if ys.size < self.min_history:
-            return min(task.user_preset_gb, self.machine_cap_gb)
+            return min(task.user_preset_gb, cap)
         a, b0 = _ols(xs, ys)
         resid = ys - (a * xs + b0)
         # candidate intercept shifts: residual quantiles (incl. the max)
         qs = np.quantile(resid, [0.0, 0.25, 0.5, 0.75, 0.9, 0.95, 1.0])
         best_b, best_w = b0, np.inf
         for dq in qs:
-            w = self._wastage_of_line(a, b0 + dq, xs, ys, rts)
+            w = self._wastage_of_line(a, b0 + dq, xs, ys, rts, cap)
             if w < best_w:
                 best_w, best_b = w, b0 + dq
         pred = a * task.input_size_gb + best_b
-        return float(np.clip(pred, 0.125, self.machine_cap_gb))
+        return float(np.clip(pred, 0.125, cap))

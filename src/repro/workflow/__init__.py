@@ -6,4 +6,5 @@ from repro.workflow.dag import WorkflowDAG
 from repro.workflow.accounting import MAX_ATTEMPTS, AttemptLedger, TaskOutcome
 from repro.workflow.generators import WORKFLOWS, generate_workflow
 from repro.workflow.simulator import ClusterMetrics, SimResult, simulate
-from repro.workflow.cluster import Node, simulate_cluster
+from repro.workflow.cluster import (Node, NodeSpec, node_specs_from_caps,
+                                    simulate_cluster)

@@ -10,7 +10,17 @@ cannot drift apart:
   * a successful attempt wastes ``(allocation - actual) * runtime`` GBh;
   * retries follow the method's own policy, clamped to the machine/node
     capacity; a task is aborted once even the capacity fails or the
-    ``MAX_ATTEMPTS`` safety valve trips.
+    ``MAX_ATTEMPTS`` safety valve trips;
+  * a *preempted* or *crash-killed* attempt (heterogeneous cluster engine)
+    burns only the partial reservation it held — it is an interruption,
+    not an OOM failure: no failure count, no retry-ladder step, no abort
+    pressure.
+
+``cap_gb`` is per-ledger: the serial replay passes the machine capacity
+(or the task's own ``machine_cap_gb`` when the trace is heterogeneous),
+the cluster engine the capacity of the *largest node the task could ever
+be placed on* — so clamp/abort semantics follow the hardware the task can
+actually reach, not a global constant.
 """
 from __future__ import annotations
 
@@ -36,6 +46,7 @@ class TaskOutcome:
     wastage_gbh: float
     runtime_h: float            # wall time incl. failed attempts
     aborted: bool = False
+    interruptions: int = 0      # preemptions / node-crash kills (not OOMs)
     # event timestamps (filled by the simulators; serial replay uses a
     # running clock, the cluster engine real event times)
     submit_h: float = 0.0       # became ready / was submitted
@@ -60,6 +71,7 @@ class AttemptLedger:
     wastage_gbh: float = 0.0
     runtime_h: float = 0.0
     aborted: bool = False
+    interruptions: int = 0
 
     def __post_init__(self):
         self.alloc_gb = self.first_alloc_gb
@@ -79,13 +91,30 @@ class AttemptLedger:
 
     def record_failure(self) -> bool:
         """Account one killed attempt; returns True when the task must be
-        aborted (capacity exhausted or the safety valve tripped)."""
+        aborted (capacity exhausted or the safety valve tripped).
+
+        Boundary: ``attempts`` counts *dispatched* attempts and starts at 1;
+        ``apply_retry`` increments it only when a further attempt is
+        actually granted. The valve therefore trips on the failure of the
+        MAX_ATTEMPTS-th attempt — exactly MAX_ATTEMPTS attempts run, never
+        MAX_ATTEMPTS + 1 (pinned in tests/test_cluster_hetero.py).
+        """
         self.wastage_gbh += self.alloc_gb * self.ttf * self.task.runtime_h
         self.runtime_h += self.ttf * self.task.runtime_h
         self.failures += 1
         if self.alloc_gb >= self.cap_gb or self.attempts >= MAX_ATTEMPTS:
             self.aborted = True
         return self.aborted
+
+    def record_interruption(self, elapsed_h: float) -> None:
+        """A preemption or node crash killed the attempt ``elapsed_h`` into
+        its run. The partial reservation is burned (``alloc * elapsed`` GBh
+        — nothing useful was produced) but this is NOT an OOM failure: no
+        failure count, no retry-ladder step, no abort pressure. The attempt
+        re-runs later at the same allocation."""
+        self.wastage_gbh += self.alloc_gb * elapsed_h
+        self.runtime_h += elapsed_h
+        self.interruptions += 1
 
     def apply_retry(self, method) -> float:
         """Ask the method for the next allocation (clamped to capacity)."""
@@ -105,5 +134,6 @@ class AttemptLedger:
         return TaskOutcome(self.task, self.first_alloc_gb, self.alloc_gb,
                            self.attempts, self.failures, self.wastage_gbh,
                            self.runtime_h, self.aborted,
+                           interruptions=self.interruptions,
                            submit_h=submit_h, start_h=start_h,
                            finish_h=finish_h)

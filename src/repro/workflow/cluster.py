@@ -1,31 +1,60 @@
-"""Event-driven multi-node cluster simulator (paper's shared-cluster setting).
+"""Event-driven heterogeneous cluster simulator (paper's shared-cluster
+setting).
 
 The serial replay in :mod:`repro.workflow.simulator` runs tasks one at a
 time on a single implicit machine, so throughput and utilization effects of
 over-/under-provisioning — the paper's core trade-off — are invisible. This
-engine executes a trace *concurrently* on a set of nodes with finite memory
-capacity:
+engine executes a trace *concurrently* on a set of nodes with finite (and
+possibly different) memory capacity:
 
-  * an event queue advances virtual time between task arrivals and
-    completions (successes and ttf-scaled OOM kills);
+  * an event queue advances virtual time between task arrivals,
+    completions (successes and ttf-scaled OOM kills), and node
+    crash/recover events;
+  * nodes are described by :class:`NodeSpec` — per-node capacity and an
+    optional *machine class* label. A task whose ``machine`` matches a
+    node class only runs on nodes of that class (per-machine predictor
+    pools then really see different capacities); a task whose label names
+    no node class is unconstrained (homogeneous traces run anywhere);
   * tasks occupy their ``allocation_gb`` on one node for the duration of
     each attempt; an OOM kill frees the node and re-enqueues the task at
-    its original FIFO position with the method's retry allocation;
+    its original FIFO position with the method's retry allocation. The
+    per-task abort capacity is the *largest node the task could ever be
+    placed on* (``AttemptLedger.cap_gb`` is per-attempt state, not a
+    global constant); a request no node can ever fit is rejected at
+    admission;
   * completions unlock downstream *ready sets* via the instance-level
     dependency edges on :class:`TaskInstance`; each scheduling round sizes
     the newly-ready tasks as ONE burst through the method's
     ``allocate_batch`` (one vmapped device dispatch per pool — the PR 1
-    fast path), then places them with a pluggable FIFO / backfill policy;
+    fast path), then places them with a pluggable policy from
+    :data:`PLACEMENT_POLICIES` (fifo / backfill / best_fit / spread /
+    preemptive);
+  * node failures are a deterministic seeded schedule of crash/recover
+    events (``fail_rate_per_node_h``): attempts running on a crashed node
+    are killed *without* OOM accounting (the partial reservation is burned
+    as wastage, but no failure count / retry-ladder step) and requeued at
+    their original FIFO seq. Preemption (the ``preemptive`` policy) uses
+    the same interruption semantics;
+  * node reservations are tracked *exactly*: ``Node.free_gb`` is the
+    capacity minus an exactly-rounded sum (``math.fsum``) of the
+    outstanding allocations, never an incrementally drifting ``+=``/``-=``
+    accumulator — so an exact-fit request (``alloc == cap``, which shipped
+    methods produce via capacity clamping) always places on an idle node;
   * per-attempt waste/retry arithmetic is the shared
     :class:`~repro.workflow.accounting.AttemptLedger`, so the serial
-    simulator is exactly the 1-node / sequential-arrival special case of
-    this engine (asserted in ``tests/test_cluster.py``).
+    simulator is exactly the 1-node / sequential-arrival / failure-free
+    special case of this engine (asserted in ``tests/test_cluster.py``).
 
-Two deliberate semantics notes. A request larger than every node's
-capacity is rejected *at admission* (aborted without running — a real
+Two deliberate semantics notes. A request larger than every *eligible*
+node's capacity is rejected at admission (aborted without running — a real
 resource manager refuses it); the serial path has no admission check and
-would burn the attempt, but shipped methods clamp to the machine capacity,
-so this only triggers on hand-built traces. And an aborted task *unlocks*
+would burn the attempt. Shipped methods clamp to the per-task
+``machine_cap_gb`` (heterogeneous traces) or the trace-wide machine cap,
+so on a matched trace/node-set this only triggers on hand-built traces —
+but running a *legacy homogeneous* trace on node_specs whose largest node
+is smaller than the trace's machine cap WILL mass-reject (the methods size
+for hardware that does not exist); the engine emits a ``RuntimeWarning``
+the first time that happens. And an aborted task *unlocks*
 its dependents rather than failing the subtree: the simulator's job is
 wastage/throughput comparison over the full task population, so every
 instance of the trace gets an outcome — exactly the serial replay's
@@ -37,36 +66,118 @@ import collections
 import dataclasses
 import heapq
 import itertools
+import math
+import warnings
+from typing import Callable, Sequence
+
+import numpy as np
 
 from repro.workflow.accounting import AttemptLedger, TaskOutcome
 from repro.workflow.simulator import ClusterMetrics, SimResult, SizingMethod
 from repro.workflow.trace import TaskInstance, WorkflowTrace
 
-__all__ = ["Node", "simulate_cluster", "PLACEMENT_POLICIES"]
+__all__ = ["NodeSpec", "Node", "machine_label", "node_specs_from_caps",
+           "simulate_cluster", "PLACEMENT_POLICIES"]
 
-_ARRIVE, _FINISH = 0, 1
+_ARRIVE, _FINISH, _CRASH, _RECOVER = 0, 1, 2, 3
+
+_DEFAULT_CLASS = "default"
 
 
-@dataclasses.dataclass
-class Node:
-    """One cluster node: finite memory, reservation-time-integral accounting."""
+@dataclasses.dataclass(frozen=True)
+class NodeSpec:
+    """Static description of one cluster node.
+
+    ``machine`` is the node's class label; tasks whose
+    ``TaskInstance.machine`` equals a label are constrained to that class.
+    ``None`` means the node accepts any task.
+    """
     name: str
     cap_gb: float
-    free_gb: float
-    reserved_gbh: float = 0.0   # integral of reserved GB over time
-    last_t: float = 0.0
+    machine: str | None = None
+
+
+def machine_label(cap_gb: float) -> str:
+    """Canonical machine-class label for a node capacity (``m16``, ``m32``,
+    ...). The ONE formatting used by :func:`node_specs_from_caps` and every
+    trace/bench caller — a label mismatch would silently disable placement
+    constraints (unknown task labels are unconstrained by design)."""
+    return f"m{float(cap_gb):g}"
+
+
+def node_specs_from_caps(caps: Sequence[float],
+                         n_nodes: int | None = None) -> list[NodeSpec]:
+    """Build a heterogeneous node set by cycling ``caps`` over ``n_nodes``
+    nodes (default: one node per cap). Class labels come from
+    :func:`machine_label` — the same labels
+    :func:`repro.workflow.generators.generate_workflow` should be given
+    via ``machine_caps_gb={machine_label(c): c for c in caps}``."""
+    caps = [float(c) for c in caps]
+    if not caps:
+        raise ValueError("need at least one node capacity")
+    n = len(caps) if n_nodes is None else n_nodes
+    if n < len(caps):
+        # a dropped class would leave the matching trace tasks sized for
+        # hardware that does not exist -> mass admission rejections; make
+        # the misconfiguration loud instead
+        raise ValueError(f"n_nodes={n} drops node classes: need at least "
+                         f"one node per capacity in {caps}")
+    return [NodeSpec(f"node{i:02d}", caps[i % len(caps)],
+                     machine_label(caps[i % len(caps)])) for i in range(n)]
+
+
+class Node:
+    """Runtime node state: exact reservation tracking + time integrals.
+
+    Outstanding allocations are held per attempt token and summed with
+    :func:`math.fsum` (exactly-rounded, order-independent), so repeated
+    reserve/release cycles cannot drift ``free_gb`` away from ``cap_gb``
+    — the float-drift stall bug of the incremental accumulator.
+    """
+
+    def __init__(self, spec: NodeSpec):
+        self.spec = spec
+        self.name = spec.name
+        self.cap_gb = spec.cap_gb
+        self.machine = spec.machine
+        self._held: dict[int, float] = {}   # attempt token -> reserved GB
+        self.reserved_gbh = 0.0             # integral of reserved GB over time
+        self.down_h = 0.0                   # total crashed time
+        self.last_t = 0.0
+        self.up = True
+        self.n_crashes = 0
+
+    @property
+    def reserved_gb(self) -> float:
+        return math.fsum(self._held.values())
+
+    @property
+    def free_gb(self) -> float:
+        return self.cap_gb - self.reserved_gb
 
     def _advance(self, t: float) -> None:
-        self.reserved_gbh += (self.cap_gb - self.free_gb) * (t - self.last_t)
+        dt = t - self.last_t
+        self.reserved_gbh += self.reserved_gb * dt
+        if not self.up:
+            self.down_h += dt
         self.last_t = t
 
-    def reserve(self, t: float, gb: float) -> None:
+    def reserve(self, t: float, token: int, gb: float) -> None:
         self._advance(t)
-        self.free_gb -= gb
+        self._held[token] = gb
 
-    def release(self, t: float, gb: float) -> None:
+    def release(self, t: float, token: int) -> float:
         self._advance(t)
-        self.free_gb += gb
+        return self._held.pop(token)
+
+    def crash(self, t: float) -> None:
+        self._advance(t)
+        self.up = False
+        self.n_crashes += 1
+
+    def recover(self, t: float) -> None:
+        self._advance(t)
+        self.up = True
 
 
 @dataclasses.dataclass
@@ -79,53 +190,174 @@ class _Queued:
     start_h: float | None = None          # first dispatch time
 
 
-def _place_fifo(queue: list[_Queued], nodes: list[Node],
-                depth: int) -> list[tuple[_Queued, Node]]:
-    """Strict FIFO first-fit: stop at the first task that fits nowhere
-    (head-of-line blocking — the behaviour of a plain batch queue)."""
-    return _place(queue, nodes, skip_limit=0)
+@dataclasses.dataclass
+class PlacementContext:
+    """Everything a placement policy may look at during one round."""
+    nodes: list[Node]           # all nodes, up and down
+    depth: int                  # backfill skip budget
+    eligible: Callable[[TaskInstance, Node], bool]
+    priority: Callable[[TaskInstance], int]   # DAG criticality (dependents)
+    # attempt token -> (entry, node, attempt start time) of running attempts
+    running: dict[int, tuple[_Queued, Node, float]]
+
+    @property
+    def up_nodes(self) -> list[Node]:
+        return [n for n in self.nodes if n.up]
 
 
-def _place_backfill(queue: list[_Queued], nodes: list[Node],
-                    depth: int) -> list[tuple[_Queued, Node]]:
-    """FIFO with backfill: a blocked head does not stall smaller tasks
-    behind it; up to ``depth`` blocked entries are skipped."""
-    return _place(queue, nodes, skip_limit=depth)
+def _scan(queue: list[_Queued], ctx: PlacementContext,
+          choose: Callable[[list[Node], dict[str, float], float], Node],
+          skip_limit: int) -> list[tuple[_Queued, Node]]:
+    """FIFO scan: place each queued task on a node picked by ``choose``
+    from the eligible nodes with room.
 
-
-def _place(queue: list[_Queued], nodes: list[Node],
-           skip_limit: int) -> list[tuple[_Queued, Node]]:
-    free = {n.name: n.free_gb for n in nodes}
+    The blocking/backfill budget is tracked *per node*: a blocked entry
+    counts only against the nodes it is eligible for, and a node "closes"
+    once more than ``skip_limit`` earlier entries that wanted it were
+    skipped (0 = strict head-of-line blocking per node). On a homogeneous
+    cluster every entry is eligible everywhere, so this is exactly the
+    classic global skip counter; on a heterogeneous cluster it prevents a
+    run of tasks blocked on one saturated node class from starving
+    later-queued tasks of an idle class they could never have used anyway.
+    """
+    up = ctx.up_nodes
+    free = {n.name: n.free_gb for n in up}
+    blocked = {n.name: 0 for n in up}   # earlier blocked entries per node
     placements: list[tuple[_Queued, Node]] = []
-    skipped = 0
     for entry in queue:
+        if all(b > skip_limit for b in blocked.values()):
+            break
         alloc = entry.ledger.alloc_gb
-        node = next((n for n in nodes if free[n.name] >= alloc), None)
-        if node is None:
-            skipped += 1
-            if skipped > skip_limit:
-                break
+        elig = [n for n in up if ctx.eligible(entry.task, n)]
+        cands = [n for n in elig
+                 if free[n.name] >= alloc and blocked[n.name] <= skip_limit]
+        if not cands:
+            for n in elig:
+                blocked[n.name] += 1
             continue
+        node = choose(cands, free, alloc)
         free[node.name] -= alloc
         placements.append((entry, node))
     return placements
 
 
-PLACEMENT_POLICIES = {"fifo": _place_fifo, "backfill": _place_backfill}
+def _choose_first(cands, free, alloc):
+    return cands[0]
+
+
+def _choose_best_fit(cands, free, alloc):
+    """Bin-packing best-fit: tightest remaining free after placement."""
+    return min(cands, key=lambda n: free[n.name] - alloc)
+
+
+def _choose_spread(cands, free, alloc):
+    """Memory-aware spread: minimize the node's utilization fraction after
+    placement (keeps headroom for retry-ladder doublings everywhere)."""
+    return min(cands, key=lambda n: (n.cap_gb - (free[n.name] - alloc))
+               / n.cap_gb)
+
+
+def _place_fifo(queue, ctx):
+    """Strict FIFO first-fit: stop at the first task that fits nowhere
+    (head-of-line blocking — the behaviour of a plain batch queue)."""
+    return _scan(queue, ctx, _choose_first, 0), []
+
+
+def _place_backfill(queue, ctx):
+    """FIFO with backfill: a blocked head does not stall smaller tasks
+    behind it; up to ``ctx.depth`` blocked entries are skipped."""
+    return _scan(queue, ctx, _choose_first, ctx.depth), []
+
+
+def _place_best_fit(queue, ctx):
+    """Backfill scan placing each task on the node where it leaves the
+    least free memory (classic best-fit bin-packing: consolidates load,
+    keeps large holes open for large requests)."""
+    return _scan(queue, ctx, _choose_best_fit, ctx.depth), []
+
+
+def _place_spread(queue, ctx):
+    """Backfill scan placing each task on the node with the lowest
+    utilization after placement (memory-aware spread: balances load, so a
+    retry-ladder doubling is least likely to find its node full)."""
+    return _scan(queue, ctx, _choose_spread, ctx.depth), []
+
+
+def _place_preemptive(queue, ctx):
+    """Backfill placement plus priority preemption: when the queue head is
+    DAG-critical (has downstream dependents) and fits nowhere, evict the
+    lowest-priority running attempt whose node (a) is eligible for the
+    head and (b) would then fit it. The victim re-enters the queue at its
+    original FIFO seq as a non-OOM requeue (interruption accounting). At
+    most one eviction per round, and only for a strictly lower-priority
+    victim — re-placed victims can therefore never evict the head back
+    (no ping-pong livelock)."""
+    placements = _scan(queue, ctx, _choose_first, ctx.depth)
+    placed = {id(e) for e, _ in placements}
+    head = next((e for e in queue if id(e) not in placed), None)
+    if head is None:
+        return placements, []
+    prio = ctx.priority(head.task)
+    if prio <= 0:
+        return placements, []
+    free = {n.name: n.free_gb for n in ctx.up_nodes}
+    for e, n in placements:
+        free[n.name] -= e.ledger.alloc_gb
+    alloc = head.ledger.alloc_gb
+    best = None   # (victim priority, -attempt start) -> token, node
+    for token, (entry, node, started) in ctx.running.items():
+        if not node.up or not ctx.eligible(head.task, node):
+            continue
+        vprio = ctx.priority(entry.task)
+        if vprio >= prio:
+            continue
+        if free[node.name] + entry.ledger.alloc_gb < alloc:
+            continue
+        # prefer the lowest-priority victim; among equals the most recently
+        # started one (least partial work burned)
+        key = (vprio, -started)
+        if best is None or key < best[0]:
+            best = (key, token, node)
+    if best is None:
+        return placements, []
+    _, token, node = best
+    return placements + [(head, node)], [token]
+
+
+PLACEMENT_POLICIES = {
+    "fifo": _place_fifo,
+    "backfill": _place_backfill,
+    "best_fit": _place_best_fit,
+    "spread": _place_spread,
+    "preemptive": _place_preemptive,
+}
 
 
 def simulate_cluster(trace: WorkflowTrace, method: SizingMethod,
                      ttf: float = 1.0, *, n_nodes: int = 8,
                      node_cap_gb: float | None = None,
+                     node_specs: Sequence[NodeSpec] | None = None,
                      policy: str = "backfill",
-                     backfill_depth: int = 32) -> SimResult:
-    """Execute ``trace`` concurrently on ``n_nodes`` nodes of
-    ``node_cap_gb`` memory each (default: the trace's machine capacity).
+                     backfill_depth: int = 32,
+                     fail_rate_per_node_h: float = 0.0,
+                     repair_h: float = 1.0,
+                     fail_seed: int = 0) -> SimResult:
+    """Execute ``trace`` concurrently on a cluster.
+
+    The node set is either ``node_specs`` (heterogeneous: per-node
+    capacities and machine-class labels) or ``n_nodes`` homogeneous nodes
+    of ``node_cap_gb`` memory each (default: the trace's machine
+    capacity). ``fail_rate_per_node_h > 0`` injects a deterministic seeded
+    schedule of node crash/recover events (exponential inter-crash times,
+    ``repair_h`` downtime); killed attempts are requeued at their original
+    FIFO seq with interruption (non-OOM) accounting.
 
     Any :class:`SizingMethod` runs unmodified; methods exposing
     ``allocate_batch`` (Sizey) get each ready wave as one burst. Returns a
     :class:`SimResult` whose ``cluster`` field carries makespan, queueing
-    delay, per-node utilization, peak concurrent reservation, and wave /
+    delay (dispatched tasks only — admission rejections are counted in
+    ``n_aborted`` instead), per-node and per-node-class utilization, peak
+    concurrent reservation, preemption/crash counters, and wave /
     sizing-call counts; ``wastage_over_time()`` is event-timestamped and
     directly comparable to the serial curve.
     """
@@ -133,9 +365,31 @@ def simulate_cluster(trace: WorkflowTrace, method: SizingMethod,
         raise ValueError(f"unknown placement policy {policy!r} "
                          f"(have {sorted(PLACEMENT_POLICIES)})")
     place = PLACEMENT_POLICIES[policy]
-    cap = trace.machine_cap_gb if node_cap_gb is None else node_cap_gb
-    nodes = [Node(f"node{i:02d}", cap, cap) for i in range(n_nodes)]
+    if node_specs is None:
+        cap = trace.machine_cap_gb if node_cap_gb is None else node_cap_gb
+        specs = [NodeSpec(f"node{i:02d}", cap) for i in range(n_nodes)]
+    else:
+        specs = list(node_specs)
+        if not specs:
+            raise ValueError("node_specs must name at least one node")
+    nodes = [Node(s) for s in specs]
+    max_cap = max(n.cap_gb for n in nodes)
+    classes = {n.machine for n in nodes if n.machine is not None}
     has_batch = hasattr(method, "allocate_batch")
+
+    def eligible(task: TaskInstance, node: Node) -> bool:
+        # unlabeled nodes take anything; a task whose machine label names
+        # no node class carries no affinity information (homogeneous
+        # traces keep running anywhere on a labeled cluster)
+        return (node.machine is None or task.machine == node.machine
+                or task.machine not in classes)
+
+    def cap_for(task: TaskInstance) -> float:
+        """Largest node this task could ever be placed on: the clamp/abort
+        capacity of its ledger. 0.0 when no node is eligible (the request
+        is then admission-rejected whatever its size)."""
+        return max((n.cap_gb for n in nodes if eligible(task, n)),
+                   default=0.0)
 
     by_key = {t.key: t for t in trace.tasks}
     if len(by_key) != len(trace.tasks):
@@ -149,48 +403,108 @@ def simulate_cluster(trace: WorkflowTrace, method: SizingMethod,
         for d in live:
             children[d].append(t)
 
+    def priority(task: TaskInstance) -> int:
+        """DAG criticality: how many instances this one gates."""
+        return len(children.get(task.key, ()))
+
     events: list[tuple[float, int, int, object]] = []
     eseq = itertools.count()
+    pending_arrivals = 0
     for t in trace.tasks:
         if indeg[t.key] == 0:
             heapq.heappush(events, (t.arrival_h, next(eseq), _ARRIVE, t))
+            pending_arrivals += 1
+
+    # deterministic seeded failure schedule: one generator per node, drawn
+    # lazily (crash -> recover -> next crash), independent of event
+    # interleaving so runs are bit-reproducible
+    fail_rngs = [np.random.default_rng([fail_seed, i])
+                 for i in range(len(nodes))]
+    if fail_rate_per_node_h > 0.0:
+        for i in range(len(nodes)):
+            t_crash = float(fail_rngs[i].exponential(
+                1.0 / fail_rate_per_node_h))
+            heapq.heappush(events, (t_crash, next(eseq), _CRASH, i))
 
     queue: list[_Queued] = []
     qseq = itertools.count()
+    atok = itertools.count()    # attempt tokens (reservation + finish ids)
+    running: dict[int, tuple[_Queued, Node, float]] = {}
     outcomes: list[TaskOutcome] = []
+    delays: list[float] = []    # queue delays of *dispatched* tasks only
     clock = total_reserved = peak_reserved = 0.0
-    n_waves = n_size_calls = 0
+    n_waves = n_size_calls = n_aborted = 0
+    n_preemptions = n_node_failures = 0
+    warned_admission = False
 
     def unlock_children(key: tuple[str, int], t: float) -> None:
+        nonlocal pending_arrivals
         for child in children[key]:
             indeg[child.key] -= 1
             if indeg[child.key] == 0:
                 heapq.heappush(events, (max(t, child.arrival_h),
                                         next(eseq), _ARRIVE, child))
+                pending_arrivals += 1
 
     def finish_aborted(entry: _Queued, t: float) -> None:
+        nonlocal n_aborted
         if hasattr(method, "abandon"):
             method.abandon(entry.task)
         outcomes.append(entry.ledger.outcome(
             submit_h=entry.ready_h,
             start_h=entry.start_h if entry.start_h is not None else t,
             finish_h=t))
+        n_aborted += 1
+        if entry.start_h is not None:
+            delays.append(entry.start_h - entry.ready_h)
         # an abort does not fail the subtree: dependents still execute, so
         # every instance of the trace gets an outcome (serial semantics)
         unlock_children(entry.task.key, t)
 
-    while events or queue:
+    def interrupt(token: int, t: float) -> None:
+        """Kill a running attempt (crash or preemption): burn the partial
+        reservation, requeue at the original FIFO seq — no OOM failure."""
+        nonlocal total_reserved
+        entry, node, started = running.pop(token)
+        gb = node.release(t, token)
+        total_reserved -= gb
+        entry.ledger.record_interruption(t - started)
+        queue.append(entry)   # keeps its original FIFO seq
+
+    while True:
+        if not queue and not running and pending_arrivals == 0:
+            break   # all outcomes recorded (or the DAG is unsatisfiable)
         if events:
             clock = events[0][0]
             while events and events[0][0] <= clock:
                 _, _, kind, payload = heapq.heappop(events)
                 if kind == _ARRIVE:
-                    task = payload
-                    queue.append(_Queued(next(qseq), clock, task))
+                    pending_arrivals -= 1
+                    queue.append(_Queued(next(qseq), clock, payload))
                     continue
-                entry, node = payload
-                node.release(clock, entry.ledger.alloc_gb)
-                total_reserved -= entry.ledger.alloc_gb
+                if kind == _CRASH:
+                    node = nodes[payload]
+                    node.crash(clock)
+                    n_node_failures += 1
+                    for token in [k for k, (_, n, _) in running.items()
+                                  if n is node]:
+                        interrupt(token, clock)
+                    heapq.heappush(events, (clock + repair_h, next(eseq),
+                                            _RECOVER, payload))
+                    continue
+                if kind == _RECOVER:
+                    nodes[payload].recover(clock)
+                    if pending_arrivals or queue or running:
+                        nxt = clock + float(fail_rngs[payload].exponential(
+                            1.0 / fail_rate_per_node_h))
+                        heapq.heappush(events, (nxt, next(eseq), _CRASH,
+                                                payload))
+                    continue
+                if payload not in running:
+                    continue   # attempt was preempted / crash-killed
+                entry, node, _ = running.pop(payload)
+                gb = node.release(clock, payload)
+                total_reserved -= gb
                 if entry.ledger.will_succeed:
                     entry.ledger.record_success()
                     method.complete(entry.task, entry.ledger.first_alloc_gb,
@@ -198,6 +512,7 @@ def simulate_cluster(trace: WorkflowTrace, method: SizingMethod,
                     outcomes.append(entry.ledger.outcome(
                         submit_h=entry.ready_h, start_h=entry.start_h,
                         finish_h=clock))
+                    delays.append(entry.start_h - entry.ready_h)
                     unlock_children(entry.task.key, clock)
                 elif entry.ledger.record_failure():
                     finish_aborted(entry, clock)
@@ -205,9 +520,10 @@ def simulate_cluster(trace: WorkflowTrace, method: SizingMethod,
                     entry.ledger.apply_retry(method)
                     queue.append(entry)   # keeps its original FIFO seq
         elif queue:
-            # every queued task is sized, admitted (alloc <= cap), and the
-            # cluster is idle — the scheduling round below must place work,
-            # so reaching here again without events is an engine bug
+            # every queued task is sized, admitted (alloc <= its cap), all
+            # nodes are up (no recover event pending) and idle — the
+            # scheduling round below must place work, so reaching here
+            # again without events is an engine bug
             raise RuntimeError("cluster scheduler stalled with "
                                "placeable tasks queued")
 
@@ -226,23 +542,47 @@ def simulate_cluster(trace: WorkflowTrace, method: SizingMethod,
                 allocs = [method.allocate(e.task) for e in unsized]
             rejected: set[int] = set()
             for entry, alloc in zip(unsized, allocs):
-                entry.ledger = AttemptLedger(entry.task, float(alloc), cap,
-                                             ttf)
-                if entry.ledger.alloc_gb > cap:
+                entry.ledger = AttemptLedger(entry.task, float(alloc),
+                                             cap_for(entry.task), ttf)
+                if entry.ledger.alloc_gb > entry.ledger.cap_gb:
                     # no node can ever satisfy the request: reject at
                     # admission (it would otherwise head-of-line block)
+                    if (not warned_admission
+                            and entry.ledger.alloc_gb
+                            <= trace.machine_cap_gb):
+                        # the method sized for the trace's machine cap but
+                        # every eligible node is smaller: almost always a
+                        # trace/node-set mismatch, so be loud about it
+                        warnings.warn(
+                            f"admission-rejecting a "
+                            f"{entry.ledger.alloc_gb:.1f} GB request that "
+                            f"fits the trace's machine cap "
+                            f"({trace.machine_cap_gb:g} GB) but not the "
+                            f"largest eligible node "
+                            f"({entry.ledger.cap_gb:g} GB); generate the "
+                            f"trace with machine_caps_gb matching the node "
+                            f"classes, or raise node capacities",
+                            RuntimeWarning, stacklevel=2)
+                        warned_admission = True
                     entry.ledger.aborted = True
                     finish_aborted(entry, clock)
                     rejected.add(id(entry))
             if rejected:
                 queue = [e for e in queue if id(e) not in rejected]
-        placements = place(queue, nodes, backfill_depth)
+        ctx = PlacementContext(nodes, backfill_depth, eligible, priority,
+                               running)
+        placements, evictions = place(queue, ctx)
+        for token in evictions:
+            n_preemptions += 1
+            interrupt(token, clock)
         if placements:
             placed = set(map(id, (e for e, _ in placements)))
             queue = [e for e in queue if id(e) not in placed]
             for entry, node in placements:
                 alloc = entry.ledger.alloc_gb
-                node.reserve(clock, alloc)
+                token = next(atok)
+                node.reserve(clock, token, alloc)
+                running[token] = (entry, node, clock)
                 total_reserved += alloc
                 peak_reserved = max(peak_reserved, total_reserved)
                 if entry.start_h is None:
@@ -250,18 +590,29 @@ def simulate_cluster(trace: WorkflowTrace, method: SizingMethod,
                 heapq.heappush(
                     events,
                     (clock + entry.ledger.attempt_duration_h, next(eseq),
-                     _FINISH, (entry, node)))
+                     _FINISH, token))
 
     makespan = clock
+    by_class: dict[str, list[Node]] = collections.defaultdict(list)
     for node in nodes:
         node._advance(makespan)
-    delays = [o.queue_delay_h for o in outcomes]
+        by_class[node.machine or _DEFAULT_CLASS].append(node)
+    class_util = {
+        cls: (sum(n.reserved_gbh for n in grp)
+              / (sum(n.cap_gb for n in grp) * makespan)
+              if makespan > 0 else 0.0)
+        for cls, grp in sorted(by_class.items())
+    }
     metrics = ClusterMetrics(
-        n_nodes=n_nodes, node_cap_gb=cap, makespan_h=makespan,
+        n_nodes=len(nodes), node_cap_gb=max_cap, makespan_h=makespan,
         mean_queue_delay_h=sum(delays) / len(delays) if delays else 0.0,
         max_queue_delay_h=max(delays, default=0.0),
         node_util={n.name: (n.reserved_gbh / (n.cap_gb * makespan)
                             if makespan > 0 else 0.0) for n in nodes},
         peak_reserved_gb=peak_reserved, n_waves=n_waves,
-        n_size_calls=n_size_calls)
+        n_size_calls=n_size_calls, policy=policy,
+        node_caps_gb={n.name: n.cap_gb for n in nodes},
+        class_util=class_util, n_aborted=n_aborted,
+        n_preemptions=n_preemptions, n_node_failures=n_node_failures,
+        node_downtime_h={n.name: n.down_h for n in nodes})
     return SimResult(trace.name, method.name, ttf, outcomes, cluster=metrics)

@@ -154,6 +154,7 @@ def _preset_for(max_actual: float, factor: float) -> float:
 def generate_workflow(name: str, seed: int = 0, scale: float = 1.0,
                       machines: tuple[str, ...] = ("epyc128",),
                       machine_cap_gb: float = 128.0,
+                      machine_caps_gb: dict[str, float] | None = None,
                       arrival_rate_per_h: float | None = None,
                       fan_in: int = 2) -> WorkflowTrace:
     """Generate the full trace for one workflow. ``scale`` shrinks instance
@@ -166,9 +167,21 @@ def generate_workflow(name: str, seed: int = 0, scale: float = 1.0,
     *root* instances (no upstream edges) a Poisson arrival process with
     that rate — the open-system load model; by default all roots are
     available at t=0 (closed-system replay, the serial simulator's view).
+
+    ``machine_caps_gb`` emits a *heterogeneous* trace: a mapping of
+    machine-class label -> memory capacity (e.g. ``{"m16": 16, "m32": 32,
+    "m64": 64}``, matching :func:`repro.workflow.cluster.node_specs_from_caps`
+    labels). Task types cycle over the classes, each instance carries its
+    class's ``machine_cap_gb``, per-type peaks are clipped to the class
+    capacity, and the trace-wide ``machine_cap_gb`` becomes the largest
+    class — so per-machine predictor pools really see different
+    capacities.
     """
     spec = WORKFLOWS[name]
     names = _type_names(spec)
+    if machine_caps_gb:
+        machines = tuple(machine_caps_gb)
+        machine_cap_gb = max(machine_caps_gb.values())
     dag = WorkflowDAG.chain_of(names)
     stages = dag.stages()
     tasks: list[TaskInstance] = []
@@ -187,12 +200,14 @@ def generate_workflow(name: str, seed: int = 0, scale: float = 1.0,
         count = max(3, int(spec.avg_instances * rng.uniform(0.7, 1.3) * scale))
         counts[tname] = count
         machine = machines[ti % len(machines)]
+        cap_m = (machine_caps_gb[machine] if machine_caps_gb
+                 else machine_cap_gb)
 
         # input sizes: lognormal clipped into the spec range
         mu = np.log((in_lo + in_hi) / 4.0)
         xs = np.clip(rng.lognormal(mu, 0.8, count), in_lo, in_hi)
         actuals = np.array([
-            float(np.clip(mem(x, rng), 0.05, machine_cap_gb * 0.9))
+            float(np.clip(mem(x, rng), 0.05, cap_m * 0.9))
             for x in xs
         ])
         # runtime correlates with input size (I/O + compute)
@@ -205,7 +220,8 @@ def generate_workflow(name: str, seed: int = 0, scale: float = 1.0,
                 workflow=name, task_type=tname, machine=machine,
                 input_size_gb=float(xs[k]), actual_peak_gb=float(actuals[k]),
                 runtime_h=float(rts[k]), user_preset_gb=preset,
-                stage=stages[tname], index=k))
+                stage=stages[tname], index=k,
+                machine_cap_gb=(cap_m if machine_caps_gb else None)))
 
     # submission order: by DAG stage, interleaved within a stage
     order_rng = np.random.default_rng(seed + stable_hash(name) % (2 ** 31))

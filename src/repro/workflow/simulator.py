@@ -47,9 +47,15 @@ class SizingMethod(Protocol):
 
 @dataclasses.dataclass
 class ClusterMetrics:
-    """Cluster-level execution metrics (filled by the event-driven engine)."""
+    """Cluster-level execution metrics (filled by the event-driven engine).
+
+    ``mean_queue_delay_h`` / ``max_queue_delay_h`` aggregate *dispatched*
+    tasks only: admission-rejected (never-started) tasks are counted in
+    ``n_aborted`` instead of polluting the delay statistics with synthetic
+    zero-delay samples.
+    """
     n_nodes: int
-    node_cap_gb: float
+    node_cap_gb: float                 # largest node capacity
     makespan_h: float
     mean_queue_delay_h: float
     max_queue_delay_h: float
@@ -57,6 +63,32 @@ class ClusterMetrics:
     peak_reserved_gb: float            # peak concurrent reservation, cluster-wide
     n_waves: int                       # scheduling rounds that sized >= 1 task
     n_size_calls: int                  # allocate_batch / allocate-loop calls
+    # heterogeneous / failure-aware engine fields (PR 3)
+    policy: str = "backfill"
+    node_caps_gb: dict[str, float] = dataclasses.field(default_factory=dict)
+    class_util: dict[str, float] = \
+        dataclasses.field(default_factory=dict)   # per node-class, cap-weighted
+    n_aborted: int = 0                 # admission rejections + ladder aborts
+    n_preemptions: int = 0             # evictions by the preemptive policy
+    n_node_failures: int = 0           # injected node crashes
+    node_downtime_h: dict[str, float] = \
+        dataclasses.field(default_factory=dict)
+
+    @property
+    def mean_util(self) -> float:
+        """Capacity-weighted cluster utilization: the fraction of total
+        cluster memory that was reserved, time-averaged. On heterogeneous
+        mixes an unweighted mean of per-node fractions would count a busy
+        16 GB node the same as a busy 64 GB one; this is the honest
+        headline number (falls back to the unweighted mean when per-node
+        capacities are unknown)."""
+        if not self.node_util:
+            return 0.0
+        if not self.node_caps_gb:
+            return sum(self.node_util.values()) / len(self.node_util)
+        total_cap = sum(self.node_caps_gb.values())
+        return sum(self.node_caps_gb[n] * u
+                   for n, u in self.node_util.items()) / total_cap
 
 
 @dataclasses.dataclass
@@ -153,7 +185,11 @@ def simulate(trace: WorkflowTrace, method: SizingMethod,
 
 def _run_one(trace: WorkflowTrace, method: SizingMethod, task: TaskInstance,
              first_alloc: float, ttf: float, clock: float) -> TaskOutcome:
-    led = AttemptLedger(task, first_alloc, trace.machine_cap_gb, ttf)
+    # heterogeneous traces carry per-instance machine caps; the serial
+    # machine then clamps/aborts against the task's own machine class
+    cap = (trace.machine_cap_gb if task.machine_cap_gb is None
+           else task.machine_cap_gb)
+    led = AttemptLedger(task, first_alloc, cap, ttf)
     while not led.will_succeed:
         if led.record_failure():
             break

@@ -20,6 +20,11 @@ class TaskInstance:
     # instance-level dependency edges: (task_type, index) keys of upstream
     # instances that must complete before this one may start
     deps: tuple[tuple[str, int], ...] = ()
+    # capacity of this instance's machine class on a heterogeneous cluster
+    # (None: the trace-wide machine_cap_gb applies — homogeneous setting).
+    # Routed into the predictor pools so per-machine pools clamp against
+    # the hardware the task actually runs on.
+    machine_cap_gb: float | None = None
 
     @property
     def key(self) -> tuple[str, int]:
@@ -46,7 +51,11 @@ class WorkflowTrace:
 
     def summary(self) -> dict:
         types = self.task_types
-        return {
+        machine_caps: dict[str, float] = {}
+        for t in self.tasks:
+            if t.machine_cap_gb is not None:
+                machine_caps[t.machine] = t.machine_cap_gb
+        out = {
             "workflow": self.name,
             "n_task_types": len(types),
             "n_tasks": len(self.tasks),
@@ -54,7 +63,11 @@ class WorkflowTrace:
             # scaled-down traces against Table I
             "avg_instances_per_type": len(self.tasks) / max(len(types), 1),
             "machine_cap_gb": self.machine_cap_gb,
+            "machines": sorted({t.machine for t in self.tasks}),
         }
+        if machine_caps:
+            out["machine_caps_gb"] = dict(sorted(machine_caps.items()))
+        return out
 
     def sequentialized(self) -> "WorkflowTrace":
         """A copy whose tasks form one dependency chain in submission order

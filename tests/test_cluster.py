@@ -54,32 +54,43 @@ def _assert_outcomes_equal(serial, cluster):
 
 
 # ------------------------------------------------- serial equivalence
-def test_one_node_sequential_matches_serial_fixed():
+@pytest.mark.parametrize("policy", sorted(PLACEMENT_POLICIES))
+def test_one_node_sequential_matches_serial_fixed(policy):
+    # the homogeneous / failure-free / 1-node configuration must stay
+    # bitwise-equal to the serial replay under EVERY placement policy
     tasks = [_task(idx=i, actual=4.0 + 3 * i, runtime=0.5 + 0.25 * i)
              for i in range(6)]  # later tasks OOM the 8 GB first allocation
     trace = WorkflowTrace("wf", tasks, machine_cap_gb=128.0)
     serial = simulate(trace, FixedMethod(8.0), ttf=0.5)
     cluster = simulate_cluster(trace.sequentialized(), FixedMethod(8.0),
-                               ttf=0.5, n_nodes=1)
+                               ttf=0.5, n_nodes=1, policy=policy)
     _assert_outcomes_equal(serial, cluster)
     assert cluster.cluster.makespan_h == pytest.approx(serial.total_runtime_h)
+    assert cluster.cluster.policy == policy
+    assert cluster.cluster.n_preemptions == 0
+    assert cluster.cluster.n_node_failures == 0
 
 
-def test_one_node_sequential_matches_serial_baseline():
+@pytest.mark.parametrize("policy", sorted(PLACEMENT_POLICIES))
+def test_one_node_sequential_matches_serial_baseline(policy):
     trace = generate_workflow("iwd", scale=0.1)
     serial = simulate(trace, make_method("witt_lr"))
     cluster = simulate_cluster(trace.sequentialized(),
-                               make_method("witt_lr"), n_nodes=1)
+                               make_method("witt_lr"), n_nodes=1,
+                               policy=policy)
     _assert_outcomes_equal(serial, cluster)
 
 
-def test_one_node_sequential_matches_serial_sizey():
+@pytest.mark.parametrize("policy", ["backfill", "best_fit", "preemptive"])
+def test_one_node_sequential_matches_serial_sizey(policy):
     # the cluster path sizes each 1-task ready wave through allocate_batch;
-    # decisions must be bitwise-identical to the serial predict path
+    # decisions must be bitwise-identical to the serial predict path — on
+    # the legacy backfill path and on the new-policy code paths alike
     trace = generate_workflow("iwd", scale=0.05)
     serial = simulate(trace, SizeyMethod(SizeyConfig()))
     cluster = simulate_cluster(trace.sequentialized(),
-                               SizeyMethod(SizeyConfig()), n_nodes=1)
+                               SizeyMethod(SizeyConfig()), n_nodes=1,
+                               policy=policy)
     _assert_outcomes_equal(serial, cluster)
 
 
@@ -171,7 +182,8 @@ def test_unknown_policy_rejected():
     trace = WorkflowTrace("wf", [_task()], machine_cap_gb=128.0)
     with pytest.raises(ValueError, match="placement policy"):
         simulate_cluster(trace, FixedMethod(16.0), policy="sjf")
-    assert set(PLACEMENT_POLICIES) == {"fifo", "backfill"}
+    assert set(PLACEMENT_POLICIES) == {"fifo", "backfill", "best_fit",
+                                       "spread", "preemptive"}
 
 
 # ------------------------------------------------- ready-wave dispatch bound
