@@ -25,6 +25,14 @@ their own class capacity); per-node-class utilization is reported per
 cell. ``--policy`` picks any registered placement policy (fifo, backfill,
 best_fit, spread, preemptive); ``--fail-rate`` injects seeded node
 crashes (crashes per node-hour, ``--repair-h`` downtime each).
+
+``--temporal [K]`` adds the time-segmented allocators (sizey_temporal
+with K segments, ks_plus) and the time-integrated ``tw_gbh`` column; on
+``--cluster`` runs, reservations then resize at predicted segment
+boundaries (RESIZE events; ``resizes`` / ``grow_failures`` columns).
+``--seed`` threads one master seed through trace generation (peaks,
+runtimes, usage curves), Poisson arrivals, and failure injection, so any
+CLI run is reproducible from a single number.
 """
 import argparse
 import csv
@@ -40,18 +48,35 @@ from repro.workflow.cluster import PLACEMENT_POLICIES, machine_label
 
 METHODS = ["sizey", "witt_wastage", "witt_lr", "tovar_ppm",
            "witt_percentile", "workflow_presets"]
+TEMPORAL_METHODS = ["sizey_temporal", "ks_plus"]
 
 
-def make(name, ttf):
+def make(name, ttf, temporal_k):
     if name == "sizey":
         return SizeyMethod(SizeyConfig(), ttf=ttf)
+    if name == "sizey_temporal":
+        return SizeyMethod(SizeyConfig(), ttf=ttf, temporal_k=temporal_k)
+    if name == "ks_plus":
+        return make_method(name, ttf=ttf, k_segments=temporal_k)
     return make_method(name, ttf=ttf)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=float, default=0.5)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="master seed: threads through trace generation "
+                         "(peaks, runtimes, usage curves), Poisson "
+                         "arrivals, AND node-failure injection (unless "
+                         "--fail-seed overrides), so a CLI run is fully "
+                         "reproducible from this one number")
     ap.add_argument("--ttf", type=float, nargs="+", default=[1.0, 0.5])
+    ap.add_argument("--temporal", type=int, nargs="?", const=4, default=0,
+                    metavar="K",
+                    help="add the temporal methods (sizey_temporal with K "
+                         "segments, ks_plus) and time-integrated GB*h "
+                         "waste columns; with --cluster, reservations "
+                         "resize at segment boundaries (RESIZE events)")
     ap.add_argument("--cluster", type=int, nargs="?", const=-1, default=0,
                     metavar="N",
                     help="run on the event-driven engine with N nodes "
@@ -68,7 +93,8 @@ def main():
                          "requires --cluster)")
     ap.add_argument("--repair-h", type=float, default=1.0,
                     help="downtime per injected node crash, hours")
-    ap.add_argument("--fail-seed", type=int, default=0)
+    ap.add_argument("--fail-seed", type=int, default=None,
+                    help="failure-injection seed (default: --seed)")
     ap.add_argument("--arrival-rate", type=float, default=None,
                     help="Poisson arrival rate (roots/hour) for the "
                          "cluster engine's open-system load model")
@@ -96,22 +122,26 @@ def main():
             ap.error(str(e))
 
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    fail_seed = args.seed if args.fail_seed is None else args.fail_seed
+    methods = METHODS + (TEMPORAL_METHODS if args.temporal else [])
     rows = []
     for wf in WORKFLOWS:
-        trace = generate_workflow(wf, scale=args.scale,
+        trace = generate_workflow(wf, seed=args.seed, scale=args.scale,
                                   machine_caps_gb=machine_caps,
                                   arrival_rate_per_h=args.arrival_rate)
         for ttf in args.ttf:
-            for m in METHODS:
+            for m in methods:
                 t0 = time.time()
                 if args.cluster:
                     r = simulate_cluster(
-                        trace, make(m, ttf), ttf=ttf, n_nodes=n_nodes,
+                        trace, make(m, ttf, args.temporal), ttf=ttf,
+                        n_nodes=n_nodes,
                         node_specs=node_specs, policy=args.policy,
                         fail_rate_per_node_h=args.fail_rate,
-                        repair_h=args.repair_h, fail_seed=args.fail_seed)
+                        repair_h=args.repair_h, fail_seed=fail_seed)
                 else:
-                    r = simulate(trace, make(m, ttf), ttf=ttf)
+                    r = simulate(trace, make(m, ttf, args.temporal),
+                                 ttf=ttf)
                 row = {
                     "workflow": wf, "method": m, "ttf": ttf,
                     "wastage_gbh": round(r.wastage_gbh, 2),
@@ -120,6 +150,10 @@ def main():
                     "n_tasks": len(trace.tasks),
                     "wall_s": round(time.time() - t0, 1),
                 }
+                if args.temporal:
+                    # time-integrated waste: the one GB*h axis peak and
+                    # temporal allocators share
+                    row["tw_gbh"] = round(r.temporal_wastage_gbh, 2)
                 if r.cluster is not None:
                     c = r.cluster
                     row.update({
@@ -139,6 +173,9 @@ def main():
                         "interruptions": sum(o.interruptions
                                              for o in r.outcomes),
                     })
+                    if args.temporal:
+                        row.update({"resizes": c.n_resizes,
+                                    "grow_failures": c.n_grow_failures})
                 rows.append(row)
                 print(row, flush=True)
     with open(args.out, "w", newline="") as f:

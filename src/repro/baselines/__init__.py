@@ -5,13 +5,14 @@ are reimplemented from the cited papers (the authors' code is not vendored);
 differences are documented per class.
 """
 from repro.baselines.common import HistoryMethod
+from repro.baselines.ks_plus import KSPlusMethod
 from repro.baselines.presets import WorkflowPresets
 from repro.baselines.sizey_method import SizeyMethod
 from repro.baselines.tovar_ppm import TovarPPM
 from repro.baselines.witt import WittLR, WittPercentile, WittWastage
 
 ALL_BASELINES = ("witt_wastage", "witt_lr", "tovar_ppm", "witt_percentile",
-                 "workflow_presets")
+                 "workflow_presets", "ks_plus")
 
 
 def make_method(name: str, machine_cap_gb: float = 128.0, ttf: float = 1.0,
@@ -24,6 +25,12 @@ def make_method(name: str, machine_cap_gb: float = 128.0, ttf: float = 1.0,
     if name == "sizey_argmax":
         return SizeyMethod(SizeyConfig(strategy="argmax", **kw), ttf=ttf,
                            machine_cap_gb=machine_cap_gb, name="sizey_argmax")
+    if name == "sizey_temporal":
+        k = kw.pop("k_segments", 4)
+        return SizeyMethod(SizeyConfig(**kw), ttf=ttf,
+                           machine_cap_gb=machine_cap_gb, temporal_k=k)
+    if name == "ks_plus":
+        return KSPlusMethod(machine_cap_gb, **kw)
     if name == "witt_wastage":
         return WittWastage(machine_cap_gb, ttf=ttf)
     if name == "witt_lr":

@@ -1,24 +1,54 @@
-"""Adapter exposing SizeyPredictor through the SizingMethod protocol."""
+"""Adapter exposing SizeyPredictor through the SizingMethod protocol.
+
+``temporal_k`` switches the method onto the temporal subsystem: the
+:class:`~repro.core.temporal.predictor.TemporalSizeyPredictor` predicts a
+k-segment reservation plan per task (one fused dispatch per pool for a
+whole wave, segments stacked), ``plan_for`` hands the plan to the engines
+(which resize at segment boundaries), and completions feed per-segment
+observations back — batched per completion wave. ``temporal_k=1`` is the
+degenerate configuration: identical features, identical history, a
+1-segment plan the engines run on the legacy flat path — results are
+bitwise those of the peak-based method (asserted in tests/test_temporal.py).
+"""
 from __future__ import annotations
 
 from repro.core import SizeyConfig
-from repro.core.predictor import SizeyPredictor, SizingDecision
+from repro.core.predictor import SizeyPredictor
+from repro.core.provenance import ProvenanceDB
 from repro.workflow.trace import TaskInstance
 
 
 class SizeyMethod:
     def __init__(self, cfg: SizeyConfig | None = None, *, ttf: float = 1.0,
-                 machine_cap_gb: float = 128.0, name: str = "sizey",
-                 fused: bool = True):
-        self.name = name
-        self.predictor = SizeyPredictor(cfg, ttf=ttf,
-                                        default_machine_cap_gb=machine_cap_gb,
-                                        fused=fused)
+                 machine_cap_gb: float = 128.0, name: str | None = None,
+                 fused: bool = True, temporal_k: int | None = None,
+                 persist_path: str | None = None):
+        self.temporal = temporal_k is not None
+        self.name = name if name is not None else (
+            "sizey_temporal" if self.temporal and temporal_k > 1 else "sizey")
+        if self.temporal:
+            from repro.core.temporal.predictor import TemporalSizeyPredictor
+            self.predictor = TemporalSizeyPredictor(
+                cfg, k_segments=temporal_k, ttf=ttf,
+                default_machine_cap_gb=machine_cap_gb, fused=fused,
+                persist_path=persist_path)
+        else:
+            cfg = cfg or SizeyConfig()
+            db = ProvenanceDB(n_features=1,
+                              n_models=len(cfg.model_classes),
+                              persist_path=persist_path)
+            self.predictor = SizeyPredictor(
+                cfg, db, ttf=ttf, default_machine_cap_gb=machine_cap_gb,
+                fused=fused)
+            if persist_path and db.records:
+                self.predictor.warm_start()   # checkpoint restore
         # decisions for in-flight tasks, keyed by task object identity so a
         # whole burst can be pending at once (batched scheduler API)
-        self._pending: dict[int, SizingDecision] = {}
+        self._pending: dict[int, object] = {}
 
     def allocate(self, task: TaskInstance) -> float:
+        if self.temporal:
+            return self.allocate_batch([task])[0]
         # heterogeneous traces carry per-instance machine caps; route them
         # into the pool so clamping follows the task's machine class
         decision = self.predictor.predict(
@@ -28,11 +58,20 @@ class SizeyMethod:
         return decision.allocation_gb
 
     def allocate_batch(self, tasks: list[TaskInstance]) -> list[float]:
-        """Decide a burst of submissions with one fused dispatch per pool."""
+        """Decide a burst of submissions with one fused dispatch per pool
+        (temporal mode stacks every task's k segments into that same
+        dispatch)."""
         decisions = self.predictor.predict_batch(tasks)
         for task, decision in zip(tasks, decisions):
             self._pending[id(task)] = decision
         return [d.allocation_gb for d in decisions]
+
+    def plan_for(self, task: TaskInstance):
+        """Reservation plan for the allocation just returned (None for the
+        peak-based configuration: the engines then run the flat path)."""
+        if not self.temporal:
+            return None
+        return self._pending[id(task)].plan
 
     def retry(self, task: TaskInstance, attempt: int,
               last_alloc_gb: float) -> float:
@@ -43,8 +82,27 @@ class SizeyMethod:
     def complete(self, task: TaskInstance, first_alloc_gb: float,
                  attempts: int) -> None:
         decision = self._pending.pop(id(task))
-        self.predictor.observe(decision, task.actual_peak_gb,
-                               task.runtime_h, attempts, task.workflow)
+        if self.temporal:
+            self.predictor.observe(decision, task, attempts)
+        else:
+            self.predictor.observe(decision, task.actual_peak_gb,
+                                   task.runtime_h, attempts, task.workflow)
+
+    def complete_batch(self, items) -> None:
+        """Observe a wave of simultaneous completions with one fused
+        observe dispatch per pool (``items``: (task, first_alloc_gb,
+        attempts) tuples — the cluster engine's completion-wave API)."""
+        if self.temporal:
+            self.predictor.observe_batch(
+                [(self._pending.pop(id(task)), task, attempts)
+                 for task, _first, attempts in items])
+            return
+        obs = []
+        for task, _first_alloc, attempts in items:
+            decision = self._pending.pop(id(task))
+            obs.append((decision, task.actual_peak_gb, task.runtime_h,
+                        attempts, task.workflow))
+        self.predictor.observe_batch(obs)
 
     def abandon(self, task: TaskInstance) -> None:
         """Task aborted (cap/attempt limit): drop its pending decision so

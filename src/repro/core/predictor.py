@@ -64,8 +64,10 @@ from repro.utils.misc import stable_hash
 TRACE_COUNTS: collections.Counter = collections.Counter()
 
 # dispatch observability: bumped once per *device launch* on the decision
-# path (each fused pool-predict call sizes a whole batch in one program),
-# so cluster tests/benches can assert the O(waves x pools) dispatch bound.
+# path (each fused pool-predict call sizes a whole batch in one program;
+# "observe_pool" counts the fused fit/update launches of the observe
+# half), so cluster tests/benches can assert the O(waves x pools) bounds
+# on BOTH directions of the loop.
 DISPATCH_COUNTS: collections.Counter = collections.Counter()
 
 
@@ -557,24 +559,100 @@ class SizeyPredictor:
         if not self.fused:
             self._observe_loop(key, pool, seed)
         else:
-            incremental = key in self.states and self.cfg.incremental
-            fn = _fused_observe_all(self.models, self.cfg, self.ttf,
-                                    self.use_pallas, incremental)
-            states, insample, cache = fn(
-                self.states[key] if incremental else None, pool.xs, pool.ys,
-                pool.runtimes, pool.mask, pool.count - 1, seed,
-                pool.log_agg, pool.log_actual, pool.log_runtime,
-                pool.log_mask, pool.log_model_preds)
-            self.states[key] = states
-            self._cache[key] = cache
-            self._pview[key] = tuple(
-                s._replace(**{f: None for f in MODEL_MODULES[m].PREDICT_DROP})
-                if MODEL_MODULES[m].PREDICT_DROP else s
-                for m, s in zip(self.models, states))
-            pool.insample_preds = insample
-            jax.block_until_ready(insample)
+            self._refit_fused(key, pool, seed)
         self._fit_serial[key] = serial + 1
         self.train_times_s.append(time.perf_counter() - t0)
+
+    def observe_batch(self, observations) -> None:
+        """Observe a wave of simultaneous completions in ONE fused observe
+        dispatch per pool (the cluster engine's completion-wave path).
+
+        ``observations`` is a sequence of ``(decision, peak_mem_gb,
+        runtime_h, attempts, workflow)`` tuples, in completion order. Per
+        pool, all records and prequential-log rows are appended first and
+        the models are then refit ONCE. In the default full-retrain mode
+        the refit is seeded exactly as the LAST of the sequential fits
+        ``observe`` would have run, and a fit over the full history is a
+        function of the final buffers only — so the resulting model
+        states, decision cache, and in-sample predictions are bitwise
+        those of the sequential path (a batch of one IS the sequential
+        path, which keeps the cluster engine's serial-equivalence
+        invariant). Incremental mode folds records in one at a time by
+        construction, so it falls back to per-record observes.
+        """
+        if not self.fused or self.cfg.incremental:
+            for decision, peak, rt, attempts, workflow in observations:
+                self.observe(decision, peak, rt, attempts, workflow)
+            return
+        groups: dict[tuple[str, str], list] = {}
+        for obs in observations:
+            d = obs[0]
+            groups.setdefault((d.task_type, d.machine), []).append(obs)
+        for key, obs_list in groups.items():
+            pool = self.db.pool(*key)
+            c0 = pool.count
+            for decision, peak, rt, attempts, workflow in obs_list:
+                self.db.add(TaskRecord(key[0], key[1], decision.features,
+                                       float(peak), float(rt), attempts,
+                                       workflow))
+                if decision.source == "model":
+                    self.db.add_log(key[0], key[1], decision.model_preds,
+                                    decision.agg_pred_gb, float(peak),
+                                    float(rt))
+            # how many of the sequential observes would have refit: record
+            # j (1-based) fits iff c0 + j >= min_history
+            n = len(obs_list)
+            m = n - max(0, min(self.cfg.min_history - c0 - 1, n))
+            if m <= 0:
+                continue
+            t0 = time.perf_counter()
+            serial = self._fit_serial.get(key, 0)
+            seed = (stable_hash(f"{key}") + serial + (m - 1)
+                    + self.cfg.seed) % (2**31)
+            self._refit_fused(key, pool, seed)
+            self._fit_serial[key] = serial + m
+            self.train_times_s.append(time.perf_counter() - t0)
+
+    def warm_start(self) -> None:
+        """Refit every pool restored from a JSONL checkpoint so prediction
+        resumes warm (model states + decision cache, i.e. offsets and
+        adaptive alpha, straight from the restored buffers and prequential
+        log). Exact for the full-retrain mode when the original process
+        observed completions one at a time: the rebuilt states use the
+        same seed as the original's last fit."""
+        for key, pool in self.db.pools.items():
+            if pool.count < self.cfg.min_history or key in self.states:
+                continue
+            m = max(pool.count - self.cfg.min_history + 1,
+                    self._fit_serial.get(key, 0) + 1)
+            seed = (stable_hash(f"{key}") + (m - 1) + self.cfg.seed) \
+                % (2**31)
+            if not self.fused:
+                self._observe_loop(key, pool, seed)
+            else:
+                self._refit_fused(key, pool, seed)
+            self._fit_serial[key] = m
+
+    def _refit_fused(self, key, pool, seed: int) -> None:
+        """One fused dispatch: all-model fit/update + in-sample refresh +
+        decision cache. The single device launch of the observe half."""
+        incremental = key in self.states and self.cfg.incremental
+        fn = _fused_observe_all(self.models, self.cfg, self.ttf,
+                                self.use_pallas, incremental)
+        DISPATCH_COUNTS["observe_pool"] += 1
+        states, insample, cache = fn(
+            self.states[key] if incremental else None, pool.xs, pool.ys,
+            pool.runtimes, pool.mask, pool.count - 1, seed,
+            pool.log_agg, pool.log_actual, pool.log_runtime,
+            pool.log_mask, pool.log_model_preds)
+        self.states[key] = states
+        self._cache[key] = cache
+        self._pview[key] = tuple(
+            s._replace(**{f: None for f in MODEL_MODULES[m].PREDICT_DROP})
+            if MODEL_MODULES[m].PREDICT_DROP else s
+            for m, s in zip(self.models, states))
+        pool.insample_preds = insample
+        jax.block_until_ready(insample)
 
     def _observe_loop(self, key, pool, seed: int) -> None:
         """Pre-fusion reference: per-model fit/update dispatches plus an

@@ -16,7 +16,12 @@ Persistence covers BOTH record kinds so a resumed workflow restarts warm:
   * log records    — ``{"kind": "log", ...}`` lines carrying the per-model
     predictions, aggregate, actual and runtime of each prediction Sizey
     actually emitted, replayed into the prequential log on restore so the
-    offset selector and adaptive alpha do not restart cold.
+    offset selector and adaptive alpha do not restart cold;
+  * aux records    — any other ``kind`` (e.g. the temporal subsystem's
+    ``"curve"`` usage profiles) round-trips opaquely via
+    :meth:`ProvenanceDB.add_aux` and is handed back grouped by kind in
+    ``ProvenanceDB.aux`` on restore — subsystem state rides the same
+    checkpoint file without the core schema knowing its shape.
 """
 from __future__ import annotations
 
@@ -205,6 +210,9 @@ class ProvenanceDB:
         self.n_models = n_models
         self.pools: dict[tuple[str, str], _PoolBuffers] = {}
         self.records: list[TaskRecord] = []
+        # non-core checkpoint rows restored from the JSONL, grouped by
+        # kind (see add_aux) — e.g. the temporal predictor's usage profiles
+        self.aux: dict[str, list[dict]] = {}
         self.persist_path = persist_path
         if persist_path and os.path.exists(persist_path):
             # bulk restore: group rows per pool and upload each pool's
@@ -216,9 +224,11 @@ class ProvenanceDB:
                     self.records.append(payload)
                     tasks.setdefault((payload.task_type, payload.machine),
                                      []).append(payload)
-                else:
+                elif kind == "log":
                     logs.setdefault((payload["task_type"],
                                      payload["machine"]), []).append(payload)
+                else:
+                    self.aux.setdefault(kind, []).append(payload)
             for key, recs in tasks.items():
                 # ys stay float64 here: bulk_load takes max_seen_gb over the
                 # full-precision record values (matching the online path)
@@ -242,12 +252,14 @@ class ProvenanceDB:
                 if not line:
                     continue
                 d = json.loads(line)
-                if d.get("kind") == "log":
+                kind = d.pop("kind", None)
+                if kind is None or kind == "task":
+                    d["features"] = tuple(d["features"])
+                    yield "task", TaskRecord(**d)
+                elif kind == "log":
                     yield "log", d
                 else:
-                    d["features"] = tuple(d["features"])
-                    d.pop("kind", None)
-                    yield "task", TaskRecord(**d)
+                    yield kind, d
 
     def pool(self, task_type: str, machine: str) -> _PoolBuffers:
         key = (task_type, machine)
@@ -279,6 +291,18 @@ class ProvenanceDB:
                    "runtime_h": float(runtime_h)}
             with open(self.persist_path, "a") as f:
                 f.write(json.dumps(row) + "\n")
+
+    def add_aux(self, kind: str, payload: dict) -> None:
+        """Append one subsystem-owned checkpoint row (``kind`` must not be
+        ``"log"``/``"task"``). Collected into ``self.aux[kind]`` and
+        persisted alongside the core rows, so e.g. temporal usage profiles
+        survive the same JSONL round-trip as the history they annotate."""
+        if kind in ("log", "task"):
+            raise ValueError(f"aux kind {kind!r} collides with core rows")
+        self.aux.setdefault(kind, []).append(payload)
+        if self.persist_path:
+            with open(self.persist_path, "a") as f:
+                f.write(json.dumps({"kind": kind, **payload}) + "\n")
 
     def history_size(self, task_type: str, machine: str) -> int:
         key = (task_type, machine)

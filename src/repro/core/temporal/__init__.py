@@ -1,0 +1,35 @@
+"""Temporal memory subsystem (KS+-style time-segmented prediction).
+
+The peak-based Sizey pipeline predicts ONE number per task — its peak
+memory — and reserves it for the whole runtime. Real workflow tasks ramp
+memory over their runtime (KS+, arXiv 2408.12290; Bader et al., arXiv
+2311.08185), so a constant peak reservation over-reserves for most of the
+run. This package adds the time-resolved formulation end to end:
+
+  * :mod:`repro.core.temporal.segments` — pure-numpy plan/curve math: the
+    piecewise-constant :class:`ReservationPlan`, exact grid sampling of
+    usage curves, and the vectorized change-point sweep that fits k
+    segment boundaries to a pool's observed usage profiles;
+  * :mod:`repro.core.temporal.predictor` — :class:`TemporalSizeyPredictor`,
+    which predicts each segment's peak with the existing fused ensemble
+    (segments stacked into one batched dispatch per pool) and composes RAQ
+    gating + dynamic offsets per segment.
+
+The execution side (RESIZE events, time-integrated GB·h waste) lives in
+:mod:`repro.workflow.accounting` / :mod:`repro.workflow.cluster`.
+"""
+from repro.core.temporal.segments import (ReservationPlan, fit_boundaries,
+                                          grid_profile, segment_peaks,
+                                          uniform_boundaries)
+
+__all__ = ["ReservationPlan", "fit_boundaries", "grid_profile",
+           "segment_peaks", "uniform_boundaries", "TemporalSizeyPredictor"]
+
+
+def __getattr__(name):
+    # lazy: the predictor pulls in jax; the pure-numpy segment math must
+    # stay importable from the event engines without a device runtime
+    if name == "TemporalSizeyPredictor":
+        from repro.core.temporal.predictor import TemporalSizeyPredictor
+        return TemporalSizeyPredictor
+    raise AttributeError(name)

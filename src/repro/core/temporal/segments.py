@@ -1,0 +1,250 @@
+"""Piecewise-constant memory-over-time math (KS+-style k-segment model).
+
+Everything here is pure numpy/python — no jax — so the workflow accounting
+layer can depend on it without dragging a device runtime into the event
+engines. Two piecewise-constant step functions over *normalized runtime*
+(time fraction in [0, 1]) appear throughout:
+
+  * a **usage curve**: the ground-truth memory consumption of one task
+    execution, carried on ``TaskInstance.usage_curve`` as
+    ``((end_frac, gb), ...)`` with the last ``end_frac == 1.0`` and
+    ``max(gb) == actual_peak_gb``. An empty curve means "flat at the peak"
+    — the legacy peak-only trace model;
+  * a **reservation plan** (:class:`ReservationPlan`): what an allocator
+    reserves over the attempt. A plan with a single segment IS a constant
+    peak reservation, and the engines treat it exactly as one (no resize
+    events, legacy arithmetic) — that degenerate case is what makes the
+    k=1 configuration bitwise-identical to the peak-based path.
+
+Segment boundaries are fit by a **vectorized change-point sweep**
+(:func:`fit_boundaries`): usage profiles are sampled onto a fixed grid, the
+per-interval over-reservation cost of covering grid columns [i, j) with one
+segment (allocated at the segment max) is built as one cumulative-max /
+cumulative-sum sweep per start column, and an O(k·G²) dynamic program picks
+the boundaries minimizing total over-reservation across the pool history.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = ["ReservationPlan", "grid_profile", "fit_boundaries",
+           "segment_peaks", "uniform_boundaries", "curve_value_at",
+           "curve_integral_frac", "PROFILE_WINDOW"]
+
+_EPS = 1e-9
+
+# shared fit window for profile-driven boundary/segment fits (the temporal
+# predictor AND the KS+ baseline): bounds the change-point sweep at
+# O(WINDOW * G^2) per refit and the in-memory profile store, however long
+# the run — recent history is also what a drifting workload wants fit
+PROFILE_WINDOW = 512
+
+Curve = tuple  # ((end_frac, gb), ...) — piecewise-constant step function
+
+
+def curve_value_at(curve, frac: float) -> float:
+    """Value of a piecewise-constant ``((end_frac, gb), ...)`` step function
+    at time fraction ``frac`` (segments are left-closed: segment i covers
+    [end_{i-1}, end_i))."""
+    for end, gb in curve:
+        if frac < end - _EPS:
+            return float(gb)
+    return float(curve[-1][1])
+
+
+def curve_integral_frac(curve, upto: float = 1.0) -> float:
+    """Integral of the step function over [0, upto] in (GB · runtime
+    fraction); multiply by ``runtime_h`` for GB·h."""
+    total, prev = 0.0, 0.0
+    for end, gb in curve:
+        hi = min(float(end), upto)
+        if hi > prev:
+            total += (hi - prev) * float(gb)
+            prev = hi
+        if prev >= upto:
+            break
+    return total
+
+
+def _merged_breakpoints(a, b) -> list[float]:
+    pts = {float(e) for e, _ in a} | {float(e) for e, _ in b}
+    return sorted(p for p in pts if p > _EPS)
+
+
+@dataclasses.dataclass(frozen=True)
+class ReservationPlan:
+    """A piecewise-constant reservation schedule over normalized runtime.
+
+    ``segments`` is ``((end_frac, gb), ...)`` with strictly increasing
+    ``end_frac`` and the last entry ending at 1.0. ``k == 1`` is a constant
+    reservation — the engines run it through the legacy peak path
+    unchanged (no RESIZE events), which is what makes resize-disabled runs
+    bitwise-equal to peak-based ones.
+    """
+    segments: tuple[tuple[float, float], ...]
+
+    def __post_init__(self):
+        if not self.segments:
+            raise ValueError("a plan needs at least one segment")
+        prev = 0.0
+        for end, gb in self.segments:
+            if end <= prev + _EPS:
+                raise ValueError(f"non-increasing segment end {end}")
+            prev = end
+        if abs(prev - 1.0) > 1e-6:
+            raise ValueError(f"plan must end at frac 1.0, got {prev}")
+
+    @property
+    def k(self) -> int:
+        return len(self.segments)
+
+    @property
+    def peak_gb(self) -> float:
+        return max(gb for _, gb in self.segments)
+
+    @property
+    def start_gb(self) -> float:
+        return float(self.segments[0][1])
+
+    def value_at(self, frac: float) -> float:
+        return curve_value_at(self.segments, frac)
+
+    def integral_frac(self, upto: float = 1.0) -> float:
+        """Reserved (GB · runtime fraction) over [0, upto]."""
+        return curve_integral_frac(self.segments, upto)
+
+    def gbh(self, runtime_h: float, upto: float = 1.0) -> float:
+        return self.integral_frac(upto) * runtime_h
+
+    def first_violation(self, curve) -> float | None:
+        """First time fraction where the usage curve exceeds the plan
+        (None if the plan covers the curve everywhere). Evaluated exactly
+        on the merged breakpoints of the two step functions. An empty
+        curve carries no constraint HERE — callers modelling the legacy
+        "empty = flat at the peak" trace semantics must pass
+        ``((1.0, peak_gb),)`` (the ledger's ``violation_frac`` does)."""
+        if not curve:
+            return None
+        prev = 0.0
+        for nxt in _merged_breakpoints(self.segments, curve):
+            mid = 0.5 * (prev + nxt)
+            if curve_value_at(curve, mid) > self.value_at(mid) + 1e-6:
+                return prev
+            prev = nxt
+        return None
+
+    def covers(self, curve) -> bool:
+        return self.first_violation(curve) is None
+
+    def simplify(self) -> "ReservationPlan":
+        """Merge adjacent segments with equal reservation. A plan whose
+        predictions all agree collapses to k=1 and is then executed on the
+        legacy peak path — cold pools (flat preset plans) therefore behave
+        exactly like the peak-based predictor."""
+        out: list[tuple[float, float]] = []
+        for end, gb in self.segments:
+            if out and abs(out[-1][1] - gb) <= 1e-9:
+                out[-1] = (end, out[-1][1])
+            else:
+                out.append((end, gb))
+        return ReservationPlan(tuple(out)) if len(out) < self.k else self
+
+    def clamped(self, cap_gb: float, min_gb: float = 0.0) -> "ReservationPlan":
+        return ReservationPlan(tuple(
+            (end, float(np.clip(gb, min_gb, cap_gb)))
+            for end, gb in self.segments))
+
+
+def grid_profile(curve, n_grid: int, peak_gb: float | None = None
+                 ) -> np.ndarray:
+    """Sample a usage curve onto ``n_grid`` equal time cells, taking the
+    MAX of the curve over each cell (exact for piecewise-constant curves:
+    a cell's requirement is the largest step overlapping it). An empty
+    curve is flat at ``peak_gb``."""
+    out = np.zeros(n_grid, np.float64)
+    if not curve:
+        out[:] = 0.0 if peak_gb is None else float(peak_gb)
+        return out
+    prev = 0.0
+    for end, gb in curve:
+        g0 = int(np.floor(prev * n_grid + 1e-9))
+        g1 = int(np.ceil(float(end) * n_grid - 1e-9))
+        if g1 > g0:
+            out[g0:g1] = np.maximum(out[g0:g1], float(gb))
+        prev = float(end)
+    return out
+
+
+def uniform_boundaries(k: int) -> tuple[float, ...]:
+    """k equal-width segment end fractions — the no-history default."""
+    return tuple((i + 1) / k for i in range(k))
+
+
+def fit_boundaries(profiles: np.ndarray, k: int) -> tuple[float, ...]:
+    """Vectorized change-point sweep: fit ``k`` segment end fractions to a
+    stack of grid-sampled usage profiles.
+
+    ``profiles`` is (M, G): M observed executions sampled on a G-cell grid
+    (see :func:`grid_profile`). The cost of covering grid columns [i, j)
+    with one segment is the over-reservation a max-allocated segment would
+    incur there, summed over all M profiles:
+
+        cost(i, j) = sum_m sum_{g in [i,j)} (max_{h in [i,j)} P[m,h] - P[m,g])
+
+    For each start column i, the costs of ALL widths are produced by one
+    cumulative-max / cumulative-sum sweep (no inner python loop over j),
+    then an O(k·G²) dynamic program (vectorized over split points) picks
+    the boundary set minimizing the total. Returns k end fractions, the
+    last being 1.0; ``k`` is clamped to G.
+    """
+    P = np.atleast_2d(np.asarray(profiles, np.float64))
+    m, g = P.shape
+    if m == 0 or g == 0:
+        return uniform_boundaries(max(k, 1))
+    k = int(max(1, min(k, g)))
+    if k == 1:
+        return (1.0,)
+    # cost[i, j] for j > i via one cummax/cumsum sweep per start column
+    cost = np.full((g + 1, g + 1), np.inf)
+    for i in range(g):
+        tail = P[:, i:]
+        rmax = np.maximum.accumulate(tail, axis=1)
+        csum = np.cumsum(tail, axis=1)
+        widths = np.arange(1, g - i + 1, dtype=np.float64)
+        cost[i, i + 1:] = np.sum(rmax * widths[None, :] - csum, axis=0)
+    # DP over segment counts; split-point minimization vectorized per cell
+    dp = np.full((k + 1, g + 1), np.inf)
+    back = np.zeros((k + 1, g + 1), np.int64)
+    dp[0, 0] = 0.0
+    for s in range(1, k + 1):
+        for j in range(s, g + 1):
+            vals = dp[s - 1, :j] + cost[:j, j]
+            i = int(np.argmin(vals))
+            dp[s, j] = vals[i]
+            back[s, j] = i
+    cuts = [g]
+    for s in range(k, 0, -1):
+        cuts.append(int(back[s, cuts[-1]]))
+    cuts = cuts[::-1][1:]          # drop the leading 0; keep k end columns
+    return tuple(c / g for c in cuts)
+
+
+def segment_peaks(profile: np.ndarray, boundaries: tuple[float, ...]
+                  ) -> np.ndarray:
+    """Per-segment max of one grid profile under the given end fractions.
+
+    Exact when the boundaries lie on grid lines (which
+    :func:`fit_boundaries` guarantees): the segment peak is the max of the
+    cells it covers. Empty cell ranges (sub-cell segments) fall back to
+    the nearest cell.
+    """
+    g = profile.shape[0]
+    out = np.empty(len(boundaries), np.float64)
+    lo = 0
+    for i, end in enumerate(boundaries):
+        hi = min(g, max(lo + 1, int(np.ceil(end * g - 1e-9))))
+        out[i] = float(np.max(profile[lo:hi]))
+        lo = hi
+    return out

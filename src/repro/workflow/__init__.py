@@ -1,6 +1,7 @@
-"""Workflow substrate: DAGs, synthetic nf-core-calibrated traces, the serial
-online execution simulator with time-to-failure semantics (paper §III-A),
-and the event-driven multi-node cluster engine."""
+"""Workflow substrate: DAGs, synthetic nf-core-calibrated traces (with
+memory-over-time usage curves), the serial online execution simulator with
+time-to-failure semantics (paper §III-A), and the event-driven multi-node
+cluster engine (with temporal RESIZE support)."""
 from repro.workflow.trace import TaskInstance, WorkflowTrace
 from repro.workflow.dag import WorkflowDAG
 from repro.workflow.accounting import MAX_ATTEMPTS, AttemptLedger, TaskOutcome

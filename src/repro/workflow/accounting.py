@@ -16,6 +16,30 @@ cannot drift apart:
     not an OOM failure: no failure count, no retry-ladder step, no abort
     pressure.
 
+Temporal attempts (KS+-style time-segmented allocators) extend the state
+machine without touching the legacy arithmetic:
+
+  * a :class:`~repro.core.temporal.segments.ReservationPlan` with >= 2
+    segments makes the attempt *temporal*: the reservation follows the
+    plan (the engines resize at segment boundaries) and success requires
+    the plan to cover the task's ground-truth ``usage_curve`` at every
+    time, not just its peak;
+  * a temporal OOM kill happens at the curve's first crossing of the plan
+    (the violation time IS the time-to-failure, so ``ttf`` does not scale
+    it) and burns the plan's partial reservation integral;
+  * a plan with ONE segment is a constant reservation — it is executed on
+    the legacy peak path, arithmetic bitwise-identical to a plain
+    allocation (the resize-disabled / k=1 configuration);
+  * retries after any failure fall back to a FLAT reservation from the
+    method's ladder (after an OOM you size conservatively), as do plans
+    that failed to grow ``MAX_GROW_FAILURES`` times on a busy node.
+
+Every ledger additionally tracks **time-integrated waste** ``tw_gbh``:
+integral of (reserved(t) - used(t)) over the attempt, using the task's
+usage curve (flat at the peak when the trace carries none — in which case
+``tw_gbh == wastage_gbh`` exactly). Peak and temporal allocators therefore
+plot on one Fig. 8-style GB·h axis.
+
 ``cap_gb`` is per-ledger: the serial replay passes the machine capacity
 (or the task's own ``machine_cap_gb`` when the trace is heterogeneous),
 the cluster engine the capacity of the *largest node the task could ever
@@ -26,9 +50,15 @@ from __future__ import annotations
 
 import dataclasses
 
+from repro.core.temporal.segments import ReservationPlan
 from repro.workflow.trace import TaskInstance
 
 MAX_ATTEMPTS = 16  # safety valve; the doubling ladder reaches any cap first
+
+# after this many failed reservation *grows* (node too full at a segment
+# boundary) the plan flattens to a constant peak reservation — placement
+# then serializes the task like any peak attempt, guaranteeing progress
+MAX_GROW_FAILURES = 3
 
 
 def doubling_retry(last_alloc_gb: float, cap_gb: float) -> float:
@@ -47,6 +77,11 @@ class TaskOutcome:
     runtime_h: float            # wall time incl. failed attempts
     aborted: bool = False
     interruptions: int = 0      # preemptions / node-crash kills (not OOMs)
+    # time-integrated waste: integral of reserved-minus-used GB·h over the
+    # task's attempts (== wastage_gbh when the trace carries no usage
+    # curves). The one axis peak and temporal allocators share.
+    tw_gbh: float = 0.0
+    grow_failures: int = 0      # denied reservation grows (temporal plans)
     # event timestamps (filled by the simulators; serial replay uses a
     # running clock, the cluster engine real event times)
     submit_h: float = 0.0       # became ready / was submitted
@@ -72,23 +107,88 @@ class AttemptLedger:
     runtime_h: float = 0.0
     aborted: bool = False
     interruptions: int = 0
+    tw_gbh: float = 0.0
+    # temporal state: the reservation plan of the CURRENT attempt (None =
+    # flat legacy reservation at alloc_gb)
+    plan: ReservationPlan | None = None
+    grow_failures: int = 0
 
     def __post_init__(self):
         self.alloc_gb = self.first_alloc_gb
+        self._violation: float | None | bool = False  # False = not computed
 
+    # ------------------------------------------------------------ temporal
+    def set_plan(self, plan: ReservationPlan | None) -> None:
+        """Attach a reservation plan to the current attempt. Single-segment
+        plans are a constant reservation == the legacy path; they are
+        dropped here so every downstream branch sees ``temporal_active ==
+        False`` and the arithmetic stays bitwise-identical to a plain
+        allocation (the k=1 acceptance invariant)."""
+        if plan is not None:
+            plan = plan.simplify()
+            if plan.k <= 1:
+                plan = None
+        self.plan = plan
+        self._violation = False
+
+    @property
+    def temporal_active(self) -> bool:
+        return self.plan is not None
+
+    @property
+    def start_alloc_gb(self) -> float:
+        """What dispatch actually reserves: the plan's first segment for a
+        temporal attempt, the flat allocation otherwise."""
+        return self.plan.start_gb if self.plan is not None else self.alloc_gb
+
+    @property
+    def violation_frac(self) -> float | None:
+        """First runtime fraction where usage exceeds the plan (None =
+        the plan covers the whole curve). An empty ``usage_curve`` means
+        "flat at the peak" (legacy trace semantics), so a plan must cover
+        ``actual_peak_gb`` for the whole runtime there — a multi-segment
+        plan can never dodge an OOM just because the trace carries no
+        time-resolved ground truth. Cached per attempt."""
+        if self._violation is False:
+            if self.plan is None:
+                self._violation = None
+            else:
+                curve = (self.task.usage_curve
+                         or ((1.0, self.task.actual_peak_gb),))
+                self._violation = self.plan.first_violation(curve)
+        return self._violation
+
+    def _reserved_gbh(self, upto_frac: float) -> float:
+        """GB·h reserved over the first ``upto_frac`` of the runtime under
+        the current attempt's reservation (plan or flat)."""
+        if self.plan is not None:
+            return self.plan.gbh(self.task.runtime_h, upto_frac)
+        return self.alloc_gb * upto_frac * self.task.runtime_h
+
+    # ------------------------------------------------------------- queries
     @property
     def will_succeed(self) -> bool:
         """Strict limits (assumption A3): the attempt survives iff the
-        allocation covers the ground-truth peak."""
+        reservation covers the ground-truth usage — the peak for a flat
+        attempt, the whole curve for a temporal one."""
+        if self.plan is not None:
+            return self.violation_frac is None
         return self.alloc_gb >= self.task.actual_peak_gb
 
     @property
     def attempt_duration_h(self) -> float:
-        """Wall time of the *next* attempt: full runtime on success, the
-        ttf-scaled prefix when the attempt will be OOM-killed."""
-        return (self.task.runtime_h if self.will_succeed
-                else self.ttf * self.task.runtime_h)
+        """Wall time of the *next* attempt: full runtime on success. A
+        flat attempt that will OOM runs for the ttf-scaled prefix (the
+        paper's simulation parameter); a temporal attempt dies exactly at
+        the curve's first crossing of the plan (the violation time IS the
+        time-to-failure, so ttf does not apply)."""
+        if self.will_succeed:
+            return self.task.runtime_h
+        if self.plan is not None:
+            return self.violation_frac * self.task.runtime_h
+        return self.ttf * self.task.runtime_h
 
+    # ------------------------------------------------------------- records
     def record_failure(self) -> bool:
         """Account one killed attempt; returns True when the task must be
         aborted (capacity exhausted or the safety valve tripped).
@@ -99,8 +199,18 @@ class AttemptLedger:
         MAX_ATTEMPTS-th attempt — exactly MAX_ATTEMPTS attempts run, never
         MAX_ATTEMPTS + 1 (pinned in tests/test_cluster_hetero.py).
         """
-        self.wastage_gbh += self.alloc_gb * self.ttf * self.task.runtime_h
-        self.runtime_h += self.ttf * self.task.runtime_h
+        if self.plan is not None:
+            # temporal OOM: everything reserved up to the violation burned
+            frac = self.violation_frac
+            burn = self._reserved_gbh(frac)
+            self.wastage_gbh += burn
+            self.tw_gbh += burn
+            self.runtime_h += frac * self.task.runtime_h
+        else:
+            burn = self.alloc_gb * self.ttf * self.task.runtime_h
+            self.wastage_gbh += burn
+            self.tw_gbh += burn
+            self.runtime_h += self.ttf * self.task.runtime_h
         self.failures += 1
         if self.alloc_gb >= self.cap_gb or self.attempts >= MAX_ATTEMPTS:
             self.aborted = True
@@ -108,26 +218,60 @@ class AttemptLedger:
 
     def record_interruption(self, elapsed_h: float) -> None:
         """A preemption or node crash killed the attempt ``elapsed_h`` into
-        its run. The partial reservation is burned (``alloc * elapsed`` GBh
-        — nothing useful was produced) but this is NOT an OOM failure: no
+        its run. The partial reservation is burned (its time integral —
+        nothing useful was produced) but this is NOT an OOM failure: no
         failure count, no retry-ladder step, no abort pressure. The attempt
-        re-runs later at the same allocation."""
-        self.wastage_gbh += self.alloc_gb * elapsed_h
+        re-runs later under the same reservation (plan included)."""
+        if self.plan is not None:
+            frac = min(elapsed_h / max(self.task.runtime_h, 1e-12), 1.0)
+            burn = self._reserved_gbh(frac)
+        else:
+            burn = self.alloc_gb * elapsed_h
+        self.wastage_gbh += burn
+        self.tw_gbh += burn
         self.runtime_h += elapsed_h
         self.interruptions += 1
 
+    def record_grow_failure(self, elapsed_h: float) -> None:
+        """A segment-boundary grow found its node too full: interruption
+        accounting (the partial plan integral is burned, no OOM), plus a
+        grow-failure count. After ``MAX_GROW_FAILURES`` denied grows the
+        plan flattens to a constant ``alloc_gb`` (== the plan peak)
+        reservation — placement then treats the task like any peak attempt
+        and serializes it, so two growers can never requeue-livelock each
+        other on a saturated node."""
+        self.record_interruption(elapsed_h)
+        self.grow_failures += 1
+        if self.grow_failures >= MAX_GROW_FAILURES:
+            self.plan = None
+            self._violation = False
+
     def apply_retry(self, method) -> float:
-        """Ask the method for the next allocation (clamped to capacity)."""
+        """Ask the method for the next allocation (clamped to capacity).
+        Retries are always FLAT: after an OOM the ladder sizes
+        conservatively, so any plan of the failed attempt is dropped."""
         self.alloc_gb = min(
             float(method.retry(self.task, self.failures, self.alloc_gb)),
             self.cap_gb)
         self.attempts += 1
+        self.plan = None
+        self._violation = False
         return self.alloc_gb
 
     def record_success(self) -> None:
-        self.wastage_gbh += ((self.alloc_gb - self.task.actual_peak_gb)
-                             * self.task.runtime_h)
-        self.runtime_h += self.task.runtime_h
+        rt = self.task.runtime_h
+        used = self.task.usage_gbh()   # == peak * rt for curve-less traces
+        if self.plan is not None:
+            tw = self._reserved_gbh(1.0) - used
+            # a temporal attempt's "peak-based" wastage IS its integral —
+            # there is no meaningful constant-reservation reading of a plan
+            self.wastage_gbh += tw
+            self.tw_gbh += tw
+        else:
+            self.wastage_gbh += (self.alloc_gb - self.task.actual_peak_gb) \
+                * rt
+            self.tw_gbh += self.alloc_gb * rt - used
+        self.runtime_h += rt
 
     def outcome(self, *, submit_h: float = 0.0, start_h: float = 0.0,
                 finish_h: float = 0.0) -> TaskOutcome:
@@ -135,5 +279,7 @@ class AttemptLedger:
                            self.attempts, self.failures, self.wastage_gbh,
                            self.runtime_h, self.aborted,
                            interruptions=self.interruptions,
+                           tw_gbh=self.tw_gbh,
+                           grow_failures=self.grow_failures,
                            submit_h=submit_h, start_h=start_h,
                            finish_h=finish_h)

@@ -39,7 +39,28 @@ possibly different) memory capacity:
     capacity minus an exactly-rounded sum (``math.fsum``) of the
     outstanding allocations, never an incrementally drifting ``+=``/``-=``
     accumulator — so an exact-fit request (``alloc == cap``, which shipped
-    methods produce via capacity clamping) always places on an idle node;
+    methods produce via capacity clamping) always places on an idle node.
+    Resizes mutate the per-token held amount, so the invariant survives
+    any shrink/grow sequence;
+  * *temporal* methods (exposing ``plan_for``) attach a multi-segment
+    :class:`~repro.core.temporal.segments.ReservationPlan` to an attempt:
+    dispatch reserves the FIRST segment only, and a ``RESIZE`` event at
+    each predicted segment boundary shrinks or grows the reservation in
+    place. A grow that finds its node too full is a *grow failure*: the
+    attempt burns its partial plan integral as an interruption (no OOM
+    accounting) and requeues at its original FIFO seq; after
+    ``MAX_GROW_FAILURES`` denied grows the plan flattens to a constant
+    peak reservation, so placement serializes it and progress is
+    guaranteed. A plan that under-covers the ground-truth usage curve is
+    OOM-killed exactly at the first crossing (the violation time is the
+    time-to-failure; ``ttf`` scales only flat-attempt kills). Single-
+    segment plans take the legacy flat path bit-for-bit — the resize
+    machinery is provably inert at k=1 (asserted in
+    ``tests/test_temporal.py``);
+  * simultaneous completions (finish events draining at one clock value)
+    are observed as ONE batch: methods exposing ``complete_batch`` get the
+    whole wave and fuse the model updates into one observe dispatch per
+    pool (``DISPATCH_COUNTS['observe_pool']`` asserts the bound);
   * per-attempt waste/retry arithmetic is the shared
     :class:`~repro.workflow.accounting.AttemptLedger`, so the serial
     simulator is exactly the 1-node / sequential-arrival / failure-free
@@ -79,7 +100,7 @@ from repro.workflow.trace import TaskInstance, WorkflowTrace
 __all__ = ["NodeSpec", "Node", "machine_label", "node_specs_from_caps",
            "simulate_cluster", "PLACEMENT_POLICIES"]
 
-_ARRIVE, _FINISH, _CRASH, _RECOVER = 0, 1, 2, 3
+_ARRIVE, _FINISH, _CRASH, _RECOVER, _RESIZE = 0, 1, 2, 3, 4
 
 _DEFAULT_CLASS = "default"
 
@@ -170,6 +191,20 @@ class Node:
         self._advance(t)
         return self._held.pop(token)
 
+    def held_gb(self, token: int) -> float:
+        """Current reservation of one attempt (post any resizes)."""
+        return self._held[token]
+
+    def resize(self, t: float, token: int, gb: float) -> float:
+        """Set an outstanding reservation to ``gb`` (segment boundary of a
+        temporal plan); returns the delta. The caller checks grow room —
+        this just swaps the held amount, so ``free_gb`` stays an exact
+        fsum over outstanding allocations."""
+        self._advance(t)
+        delta = gb - self._held[token]
+        self._held[token] = gb
+        return delta
+
     def crash(self, t: float) -> None:
         self._advance(t)
         self.up = False
@@ -227,7 +262,9 @@ def _scan(queue: list[_Queued], ctx: PlacementContext,
     for entry in queue:
         if all(b > skip_limit for b in blocked.values()):
             break
-        alloc = entry.ledger.alloc_gb
+        # temporal attempts dispatch at their plan's FIRST segment (later
+        # segments arrive via RESIZE events); flat attempts at alloc_gb
+        alloc = entry.ledger.start_alloc_gb
         elig = [n for n in up if ctx.eligible(entry.task, n)]
         cands = [n for n in elig
                  if free[n.name] >= alloc and blocked[n.name] <= skip_limit]
@@ -302,8 +339,8 @@ def _place_preemptive(queue, ctx):
         return placements, []
     free = {n.name: n.free_gb for n in ctx.up_nodes}
     for e, n in placements:
-        free[n.name] -= e.ledger.alloc_gb
-    alloc = head.ledger.alloc_gb
+        free[n.name] -= e.ledger.start_alloc_gb
+    alloc = head.ledger.start_alloc_gb
     best = None   # (victim priority, -attempt start) -> token, node
     for token, (entry, node, started) in ctx.running.items():
         if not node.up or not ctx.eligible(head.task, node):
@@ -311,7 +348,8 @@ def _place_preemptive(queue, ctx):
         vprio = ctx.priority(entry.task)
         if vprio >= prio:
             continue
-        if free[node.name] + entry.ledger.alloc_gb < alloc:
+        # the victim frees what it CURRENTLY holds (post any plan resizes)
+        if free[node.name] + node.held_gb(token) < alloc:
             continue
         # prefer the lowest-priority victim; among equals the most recently
         # started one (least partial work burned)
@@ -376,6 +414,8 @@ def simulate_cluster(trace: WorkflowTrace, method: SizingMethod,
     max_cap = max(n.cap_gb for n in nodes)
     classes = {n.machine for n in nodes if n.machine is not None}
     has_batch = hasattr(method, "allocate_batch")
+    has_plan = hasattr(method, "plan_for")
+    has_complete_batch = hasattr(method, "complete_batch")
 
     def eligible(task: TaskInstance, node: Node) -> bool:
         # unlabeled nodes take anything; a task whose machine label names
@@ -435,6 +475,7 @@ def simulate_cluster(trace: WorkflowTrace, method: SizingMethod,
     clock = total_reserved = peak_reserved = 0.0
     n_waves = n_size_calls = n_aborted = 0
     n_preemptions = n_node_failures = 0
+    n_resizes = n_grow_failures = n_complete_waves = 0
     warned_admission = False
 
     def unlock_children(key: tuple[str, int], t: float) -> None:
@@ -476,11 +517,40 @@ def simulate_cluster(trace: WorkflowTrace, method: SizingMethod,
             break   # all outcomes recorded (or the DAG is unsatisfiable)
         if events:
             clock = events[0][0]
+            completed: list[tuple[_Queued, float]] = []
             while events and events[0][0] <= clock:
                 _, _, kind, payload = heapq.heappop(events)
                 if kind == _ARRIVE:
                     pending_arrivals -= 1
                     queue.append(_Queued(next(qseq), clock, payload))
+                    continue
+                if kind == _RESIZE:
+                    token, seg_idx = payload
+                    if token not in running:
+                        continue   # attempt already killed / grow-flattened
+                    entry, node, started = running[token]
+                    led = entry.ledger
+                    if not led.temporal_active \
+                            or seg_idx >= len(led.plan.segments):
+                        continue   # plan flattened since scheduling
+                    new_gb = led.plan.segments[seg_idx][1]
+                    delta = new_gb - node.held_gb(token)
+                    if delta <= 0 or node.free_gb >= delta - 1e-9:
+                        total_reserved += node.resize(clock, token, new_gb)
+                        peak_reserved = max(peak_reserved, total_reserved)
+                        n_resizes += 1
+                    else:
+                        # grow failure: node too full at the boundary —
+                        # burn the partial plan integral (interruption, no
+                        # OOM accounting) and requeue at the original seq;
+                        # repeated denials flatten the plan to a constant
+                        # peak reservation (guaranteed progress)
+                        n_grow_failures += 1
+                        running.pop(token)
+                        gb = node.release(clock, token)
+                        total_reserved -= gb
+                        led.record_grow_failure(clock - started)
+                        queue.append(entry)
                     continue
                 if kind == _CRASH:
                     node = nodes[payload]
@@ -507,18 +577,29 @@ def simulate_cluster(trace: WorkflowTrace, method: SizingMethod,
                 total_reserved -= gb
                 if entry.ledger.will_succeed:
                     entry.ledger.record_success()
-                    method.complete(entry.task, entry.ledger.first_alloc_gb,
-                                    entry.ledger.attempts)
                     outcomes.append(entry.ledger.outcome(
                         submit_h=entry.ready_h, start_h=entry.start_h,
                         finish_h=clock))
                     delays.append(entry.start_h - entry.ready_h)
                     unlock_children(entry.task.key, clock)
+                    # model updates are flushed per drain: simultaneous
+                    # completions become ONE complete_batch call (one
+                    # fused observe dispatch per pool) below
+                    completed.append((entry, clock))
                 elif entry.ledger.record_failure():
                     finish_aborted(entry, clock)
                 else:
                     entry.ledger.apply_retry(method)
                     queue.append(entry)   # keeps its original FIFO seq
+            if completed:
+                n_complete_waves += 1
+                items = [(e.task, e.ledger.first_alloc_gb, e.ledger.attempts)
+                         for e, _ in completed]
+                if has_complete_batch:
+                    method.complete_batch(items)
+                else:
+                    for task, first_alloc, attempts in items:
+                        method.complete(task, first_alloc, attempts)
         elif queue:
             # every queued task is sized, admitted (alloc <= its cap), all
             # nodes are up (no recover event pending) and idle — the
@@ -544,6 +625,13 @@ def simulate_cluster(trace: WorkflowTrace, method: SizingMethod,
             for entry, alloc in zip(unsized, allocs):
                 entry.ledger = AttemptLedger(entry.task, float(alloc),
                                              cap_for(entry.task), ttf)
+                if has_plan:
+                    # temporal reservation schedule for the first attempt
+                    # (set_plan drops 1-segment plans onto the flat path)
+                    plan = method.plan_for(entry.task)
+                    if plan is not None:
+                        entry.ledger.set_plan(
+                            plan.clamped(entry.ledger.cap_gb))
                 if entry.ledger.alloc_gb > entry.ledger.cap_gb:
                     # no node can ever satisfy the request: reject at
                     # admission (it would otherwise head-of-line block)
@@ -579,7 +667,8 @@ def simulate_cluster(trace: WorkflowTrace, method: SizingMethod,
             placed = set(map(id, (e for e, _ in placements)))
             queue = [e for e in queue if id(e) not in placed]
             for entry, node in placements:
-                alloc = entry.ledger.alloc_gb
+                led = entry.ledger
+                alloc = led.start_alloc_gb
                 token = next(atok)
                 node.reserve(clock, token, alloc)
                 running[token] = (entry, node, clock)
@@ -587,10 +676,21 @@ def simulate_cluster(trace: WorkflowTrace, method: SizingMethod,
                 peak_reserved = max(peak_reserved, total_reserved)
                 if entry.start_h is None:
                     entry.start_h = clock
+                duration = led.attempt_duration_h
                 heapq.heappush(
-                    events,
-                    (clock + entry.ledger.attempt_duration_h, next(eseq),
-                     _FINISH, token))
+                    events, (clock + duration, next(eseq), _FINISH, token))
+                if led.temporal_active:
+                    # resize at every predicted segment boundary the
+                    # attempt survives to (a doomed plan dies at its
+                    # violation time; later boundaries never happen)
+                    vf = led.violation_frac
+                    horizon = 1.0 if vf is None else vf
+                    for si, (end, _gb) in enumerate(led.plan.segments[:-1]):
+                        if end < horizon - 1e-12:
+                            heapq.heappush(
+                                events,
+                                (clock + end * led.task.runtime_h,
+                                 next(eseq), _RESIZE, (token, si + 1)))
 
     makespan = clock
     by_class: dict[str, list[Node]] = collections.defaultdict(list)
@@ -614,5 +714,7 @@ def simulate_cluster(trace: WorkflowTrace, method: SizingMethod,
         node_caps_gb={n.name: n.cap_gb for n in nodes},
         class_util=class_util, n_aborted=n_aborted,
         n_preemptions=n_preemptions, n_node_failures=n_node_failures,
-        node_downtime_h={n.name: n.down_h for n in nodes})
+        node_downtime_h={n.name: n.down_h for n in nodes},
+        n_resizes=n_resizes, n_grow_failures=n_grow_failures,
+        n_complete_waves=n_complete_waves)
     return SimResult(trace.name, method.name, ttf, outcomes, cluster=metrics)

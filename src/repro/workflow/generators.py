@@ -34,6 +34,51 @@ REL_FAMILIES = ("linear", "clustered", "quadratic", "sqrt", "constant", "step")
 # the standard resource ladder workflow developers pick presets from
 PRESET_LADDER_GB = (0.5, 1, 2, 4, 6, 8, 12, 16, 24, 32, 48, 64, 96, 128)
 
+# memory-over-time shape families (KS+ / Bader et al.: tasks ramp, hold a
+# working-set plateau, or spike late — a constant peak reservation
+# over-reserves for most of the runtime in all but the flat case)
+CURVE_SHAPES = ("ramp", "plateau", "spike", "flat")
+
+
+def _usage_curve(shape: str, rng: np.random.Generator, peak_gb: float,
+                 n_points: int = 8) -> tuple[tuple[float, float], ...]:
+    """One piecewise-constant usage curve, normalized so max == peak_gb.
+
+    Noise is heteroscedastic: its scale grows with the level (busy phases
+    fluctuate more than idle ones), matching time-resolved traces.
+    """
+    grid = (np.arange(n_points) + 1.0) / n_points   # segment end fractions
+    mids = grid - 0.5 / n_points
+    if shape == "ramp":
+        start = rng.uniform(0.15, 0.45)
+        gamma = rng.uniform(0.7, 1.6)
+        level = start + (1.0 - start) * mids ** gamma
+    elif shape == "plateau":
+        rise = rng.uniform(0.1, 0.3)
+        fall = rng.uniform(0.0, 0.2)
+        tail = rng.uniform(0.4, 0.8)
+        level = np.ones(n_points)
+        level[mids < rise] = 0.3 + 0.7 * mids[mids < rise] / rise
+        late = mids > 1.0 - fall if fall > 0 else np.zeros(n_points, bool)
+        level[late] = tail
+    elif shape == "spike":
+        base = rng.uniform(0.2, 0.5)
+        width = rng.uniform(0.1, 0.25)
+        center = rng.uniform(0.3, 0.9)
+        level = np.full(n_points, base)
+        level[np.abs(mids - center) <= width / 2] = 1.0
+        level[int(np.argmin(np.abs(mids - center)))] = 1.0  # spike >= 1 cell
+    elif shape == "flat":
+        level = np.ones(n_points)
+    else:
+        raise ValueError(f"unknown curve shape {shape!r}")
+    # heteroscedastic noise, then renormalize so the max is exactly 1
+    level = np.clip(level * (1.0 + rng.normal(0, 0.05, n_points) * level),
+                    0.05, None)
+    level = level / level.max()
+    return tuple((float(g), float(l * peak_gb))
+                 for g, l in zip(grid, level))
+
 
 @dataclasses.dataclass(frozen=True)
 class WorkflowSpec:
@@ -156,7 +201,10 @@ def generate_workflow(name: str, seed: int = 0, scale: float = 1.0,
                       machine_cap_gb: float = 128.0,
                       machine_caps_gb: dict[str, float] | None = None,
                       arrival_rate_per_h: float | None = None,
-                      fan_in: int = 2) -> WorkflowTrace:
+                      fan_in: int = 2,
+                      usage_curves: bool = True,
+                      curve_shapes: tuple[str, ...] = CURVE_SHAPES
+                      ) -> WorkflowTrace:
     """Generate the full trace for one workflow. ``scale`` shrinks instance
     counts for fast tests (tests use scale=0.1; benchmarks use 1.0).
 
@@ -176,6 +224,16 @@ def generate_workflow(name: str, seed: int = 0, scale: float = 1.0,
     capacity, and the trace-wide ``machine_cap_gb`` becomes the largest
     class — so per-machine predictor pools really see different
     capacities.
+
+    ``usage_curves`` (default on) emits a per-task memory-over-time curve
+    (``TaskInstance.usage_curve``): each task type draws a shape family
+    from ``curve_shapes`` (ramp / plateau / spike / flat) and every
+    instance gets a noisy piecewise-constant realization whose max is
+    exactly its ``actual_peak_gb``. Curves come from a SEPARATE seeded rng
+    stream, so enabling/disabling them (or changing ``curve_shapes``)
+    never perturbs the peak/runtime draws — pre-temporal traces are
+    bit-identical. ``curve_shapes=("ramp",)`` forces every type onto ramps
+    (the temporal benchmarks' worst case for peak-based allocators).
     """
     spec = WORKFLOWS[name]
     names = _type_names(spec)
@@ -215,13 +273,25 @@ def generate_workflow(name: str, seed: int = 0, scale: float = 1.0,
             * np.exp(rng.normal(0, 0.2, count))
         preset = _preset_for(float(actuals.max()), spec.preset_factor)
 
+        # memory-over-time curves: separate rng stream (never perturbs the
+        # peak/runtime draws above), shape family fixed per task type
+        curves: list[tuple[tuple[float, float], ...]] = [()] * count
+        if usage_curves:
+            crng = np.random.default_rng(
+                (stable_hash(f"curves:{GENERATOR_VERSION}:{name}:{tname}")
+                 + seed) % (2 ** 31))
+            shape = curve_shapes[ti % len(curve_shapes)]
+            curves = [_usage_curve(shape, crng, float(actuals[k]))
+                      for k in range(count)]
+
         for k in range(count):
             tasks.append(TaskInstance(
                 workflow=name, task_type=tname, machine=machine,
                 input_size_gb=float(xs[k]), actual_peak_gb=float(actuals[k]),
                 runtime_h=float(rts[k]), user_preset_gb=preset,
                 stage=stages[tname], index=k,
-                machine_cap_gb=(cap_m if machine_caps_gb else None)))
+                machine_cap_gb=(cap_m if machine_caps_gb else None),
+                usage_curve=curves[k]))
 
     # submission order: by DAG stage, interleaved within a stage
     order_rng = np.random.default_rng(seed + stable_hash(name) % (2 ** 31))

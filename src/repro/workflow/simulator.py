@@ -44,6 +44,19 @@ class SizingMethod(Protocol):
                  attempts: int) -> None:
         """Task finished successfully; actual peak may now be observed."""
 
+    # Optional protocol extensions, discovered via hasattr:
+    #   allocate_batch(tasks) -> list[float]
+    #       size a whole ready wave in one fused dispatch per pool;
+    #   plan_for(task) -> ReservationPlan | None
+    #       time-segmented reservation for the allocation just returned by
+    #       allocate/allocate_batch (temporal methods). A 1-segment plan
+    #       (or None) runs on the legacy constant-reservation path;
+    #   complete_batch(items: list[tuple[task, first_alloc, attempts]])
+    #       observe a wave of simultaneous completions in one fused
+    #       observe dispatch per pool;
+    #   abandon(task)
+    #       drop in-flight state for an aborted task.
+
 
 @dataclasses.dataclass
 class ClusterMetrics:
@@ -73,6 +86,10 @@ class ClusterMetrics:
     n_node_failures: int = 0           # injected node crashes
     node_downtime_h: dict[str, float] = \
         dataclasses.field(default_factory=dict)
+    # temporal / batched-observe engine fields (PR 4)
+    n_resizes: int = 0                 # successful reservation resizes
+    n_grow_failures: int = 0           # denied grows (node full at boundary)
+    n_complete_waves: int = 0          # event drains with >= 1 completion
 
     @property
     def mean_util(self) -> float:
@@ -102,6 +119,17 @@ class SimResult:
     @property
     def wastage_gbh(self) -> float:
         return sum(o.wastage_gbh for o in self.outcomes)
+
+    @property
+    def temporal_wastage_gbh(self) -> float:
+        """Time-integrated waste: integral of reserved-minus-used GB·h.
+
+        Defined for EVERY allocator (peak-based ones reserve a constant,
+        so their integral counts the headroom under the usage curve too),
+        which puts peak and temporal methods on one Fig. 8-style axis.
+        Equals ``wastage_gbh`` when the trace carries no usage curves.
+        """
+        return sum(o.tw_gbh for o in self.outcomes)
 
     @property
     def total_runtime_h(self) -> float:
@@ -190,6 +218,14 @@ def _run_one(trace: WorkflowTrace, method: SizingMethod, task: TaskInstance,
     cap = (trace.machine_cap_gb if task.machine_cap_gb is None
            else task.machine_cap_gb)
     led = AttemptLedger(task, first_alloc, cap, ttf)
+    if hasattr(method, "plan_for"):
+        # temporal methods attach a reservation plan to the first attempt;
+        # on the serial machine resizes always succeed (one task at a
+        # time), so the plan only changes the waste/failure arithmetic.
+        # Retries fall back to the flat ladder (apply_retry drops the plan).
+        plan = method.plan_for(task)
+        if plan is not None:
+            led.set_plan(plan.clamped(cap))
     while not led.will_succeed:
         if led.record_failure():
             break

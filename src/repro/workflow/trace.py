@@ -25,11 +25,32 @@ class TaskInstance:
     # Routed into the predictor pools so per-machine pools clamp against
     # the hardware the task actually runs on.
     machine_cap_gb: float | None = None
+    # ground-truth memory usage over time: piecewise-constant
+    # ((end_frac, gb), ...) over normalized runtime, last end_frac == 1.0,
+    # max(gb) == actual_peak_gb. Empty = flat at the peak (the legacy
+    # peak-only trace model — every pre-temporal metric is unchanged).
+    usage_curve: tuple[tuple[float, float], ...] = ()
 
     @property
     def key(self) -> tuple[str, int]:
         """Trace-unique instance identifier."""
         return (self.task_type, self.index)
+
+    def usage_at(self, frac: float) -> float:
+        """Memory in use at time fraction ``frac`` of the runtime."""
+        if not self.usage_curve:
+            return self.actual_peak_gb
+        from repro.core.temporal.segments import curve_value_at
+        return curve_value_at(self.usage_curve, frac)
+
+    def usage_gbh(self, upto_frac: float = 1.0) -> float:
+        """Time-integrated memory use (GB·h) over the first ``upto_frac``
+        of the runtime — the denominator of time-integrated waste."""
+        if not self.usage_curve:
+            return self.actual_peak_gb * upto_frac * self.runtime_h
+        from repro.core.temporal.segments import curve_integral_frac
+        return curve_integral_frac(self.usage_curve, upto_frac) \
+            * self.runtime_h
 
     @property
     def features(self) -> tuple[float, ...]:
@@ -64,6 +85,7 @@ class WorkflowTrace:
             "avg_instances_per_type": len(self.tasks) / max(len(types), 1),
             "machine_cap_gb": self.machine_cap_gb,
             "machines": sorted({t.machine for t in self.tasks}),
+            "has_usage_curves": any(t.usage_curve for t in self.tasks),
         }
         if machine_caps:
             out["machine_caps_gb"] = dict(sorted(machine_caps.items()))
