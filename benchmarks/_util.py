@@ -1,0 +1,14 @@
+"""Shared benchmark plumbing."""
+from __future__ import annotations
+
+import json
+import os
+
+
+def dump_json(out_path: str, doc: dict) -> None:
+    """Write a bench report, creating parent directories (CI routes
+    fresh outputs into results/fresh/). One place to change the output
+    convention for every bench entry point."""
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(doc, f, indent=2)

@@ -1,0 +1,208 @@
+"""CI regression gate: diff freshly produced ``BENCH_*.json`` /
+``results/bench_results.json`` against the committed baselines with
+per-metric tolerances, so a perf regression FAILS the build instead of
+silently shipping in an artifact.
+
+    # in CI: benches write into results/fresh/, then
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        --fresh-dir results/fresh
+    # locally, after an intentional change:
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        --fresh-dir results/fresh --update-baselines
+
+Rules are per-file, per-metric (dotted paths; ``list[key=value]``
+selects an element of a list of dicts):
+
+  * ``min`` / ``max``   — absolute bound on the FRESH value (used for
+    contract metrics like the temporal GB·h win, which may not drop
+    below 15% whatever the baseline says);
+  * ``max_growth`` / ``max_drop`` — relative bound vs the BASELINE value
+    (e.g. dispatch counts may not grow: ``max_growth: 0.0``);
+  * ``equals``          — exact match on the fresh value (booleans).
+
+Only machine-independent metrics are gated (waste, reductions, event and
+dispatch counts, makespans — all deterministic at fixed seed/scale);
+wall-clock throughputs (``BENCH_predictor.json``) are tracked as
+artifacts but never gated, because CI runners are noisy.
+
+``--update-baselines`` copies every checked fresh file over its baseline
+(commit the result) — the explicit, reviewed way to accept a new
+performance trajectory.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import re
+import shutil
+import sys
+
+# file -> list of rules; each rule: {"path": ..., <bound kind>: value}
+RULES: dict[str, list[dict]] = {
+    "BENCH_temporal.json": [
+        # the acceptance contract: temporal win may not drop below 15%
+        {"path": "temporal_reduction_vs_peak", "min": 0.15},
+        {"path": "cluster.cluster_reduction_vs_peak", "min": 0.05},
+        {"path": "serial.sizey_temporal.tw_gbh", "max_growth": 0.10},
+        {"path": "serial.sizey.failures", "max_growth": 0.25},
+        {"path": "cluster.temporal.n_grow_failures", "max": 10},
+    ],
+    "BENCH_cluster_policies.json": [
+        {"path": "frontier[mix=homogeneous,policy=backfill].makespan_h",
+         "max_growth": 0.10},
+        {"path": "frontier[mix=homogeneous,policy=backfill].wastage_gbh",
+         "max_growth": 0.10},
+        {"path": "frontier[mix=hetero_16_32_64,policy=best_fit].makespan_h",
+         "max_growth": 0.10},
+        {"path": "frontier[mix=hetero_16_32_64,policy=best_fit].wastage_gbh",
+         "max_growth": 0.10},
+        # a matched trace/node-set never admission-rejects
+        {"path": "frontier[mix=hetero_16_32_64,policy=best_fit].n_aborted",
+         "max": 0},
+    ],
+    "BENCH_failure.json": [
+        # the acceptance contract: crash-aware sizing must keep beating
+        # retry_same on total failure waste at fail_rate >= 0.05
+        {"path": "headline.crash_aware_beats_retry_same", "equals": True},
+        {"path": "headline.best_margin_frac", "min": 0.0},
+    ],
+    "results/bench_results.json": [
+        # decision dispatches may not grow: each cluster ready wave stays
+        # ONE fused launch per pool
+        {"path": "cluster_bench.sizey.cluster_predict_dispatches",
+         "max_growth": 0.0},
+        {"path": "cluster_bench.sizey.serial_predict_dispatches",
+         "max_growth": 0.0},
+        {"path": "cluster_bench.sizey.n_waves", "max_growth": 0.10},
+    ],
+}
+
+_SEG = re.compile(r"^(?P<key>[^[\]]+)(?:\[(?P<sel>[^\]]+)\])?$")
+
+
+def resolve(doc, path: str):
+    """Walk a dotted path; ``name[k=v,k2=v2]`` selects the unique element
+    of a list of dicts matching every (string-compared) key."""
+    cur = doc
+    for seg in path.split("."):
+        m = _SEG.match(seg)
+        if m is None:
+            raise KeyError(f"bad path segment {seg!r}")
+        cur = cur[m.group("key")]
+        sel = m.group("sel")
+        if sel is not None:
+            wants = dict(kv.split("=", 1) for kv in sel.split(","))
+            hits = [el for el in cur
+                    if all(str(el.get(k)) == v for k, v in wants.items())]
+            if len(hits) != 1:
+                raise KeyError(f"{seg!r} matched {len(hits)} elements")
+            cur = hits[0]
+    return cur
+
+
+def check_file(name: str, fresh_doc, base_doc) -> list[str]:
+    """Returns a list of violation messages (empty = pass)."""
+    problems = []
+    for rule in RULES[name]:
+        path = rule["path"]
+        try:
+            fresh = resolve(fresh_doc, path)
+        except (KeyError, TypeError, IndexError) as e:
+            problems.append(f"{name}:{path}: missing in fresh output ({e})")
+            continue
+        if "equals" in rule and fresh != rule["equals"]:
+            problems.append(f"{name}:{path}: expected {rule['equals']!r}, "
+                            f"got {fresh!r}")
+        if "min" in rule and fresh < rule["min"]:
+            problems.append(f"{name}:{path}: {fresh:.6g} below the "
+                            f"absolute floor {rule['min']:.6g}")
+        if "max" in rule and fresh > rule["max"]:
+            problems.append(f"{name}:{path}: {fresh:.6g} above the "
+                            f"absolute ceiling {rule['max']:.6g}")
+        if "max_growth" in rule or "max_drop" in rule:
+            try:
+                base = resolve(base_doc, path)
+            except (KeyError, TypeError, IndexError) as e:
+                problems.append(f"{name}:{path}: missing in baseline ({e})")
+                continue
+            if "max_growth" in rule:
+                lim = base * (1.0 + rule["max_growth"])
+                if fresh > lim + 1e-12:
+                    problems.append(
+                        f"{name}:{path}: grew {base:.6g} -> {fresh:.6g} "
+                        f"(limit +{rule['max_growth']:.0%} = {lim:.6g})")
+            if "max_drop" in rule:
+                lim = base * (1.0 - rule["max_drop"])
+                if fresh < lim - 1e-12:
+                    problems.append(
+                        f"{name}:{path}: dropped {base:.6g} -> {fresh:.6g} "
+                        f"(limit -{rule['max_drop']:.0%} = {lim:.6g})")
+    return problems
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh-dir", default="results/fresh",
+                    help="directory holding the freshly produced bench "
+                         "JSONs (flat: results/bench_results.json is "
+                         "looked up as bench_results.json here)")
+    ap.add_argument("--baseline-dir", default=".",
+                    help="repo root holding the committed baselines")
+    ap.add_argument("--update-baselines", action="store_true",
+                    help="copy every checked fresh file over its baseline "
+                         "instead of diffing (then commit the result)")
+    ap.add_argument("files", nargs="*",
+                    help="subset of baseline files to check (default: "
+                         "every file RULES knows)")
+    args = ap.parse_args()
+    fresh_dir = pathlib.Path(args.fresh_dir)
+    base_dir = pathlib.Path(args.baseline_dir)
+    names = args.files or sorted(RULES)
+    unknown = [n for n in names if n not in RULES]
+    if unknown:
+        ap.error(f"no rules for {unknown}; known: {sorted(RULES)}")
+
+    failures: list[str] = []
+    checked = 0
+    for name in names:
+        fresh_path = fresh_dir / pathlib.Path(name).name
+        base_path = base_dir / name
+        if not fresh_path.exists():
+            failures.append(f"{name}: fresh output {fresh_path} missing — "
+                            f"the bench did not emit its JSON")
+            continue
+        if args.update_baselines:
+            base_path.parent.mkdir(parents=True, exist_ok=True)
+            shutil.copyfile(fresh_path, base_path)
+            print(f"check_regression: baseline updated {base_path}")
+            continue
+        if not base_path.exists():
+            failures.append(f"{name}: committed baseline {base_path} "
+                            f"missing — run --update-baselines and commit")
+            continue
+        with open(fresh_path) as f:
+            fresh_doc = json.load(f)
+        with open(base_path) as f:
+            base_doc = json.load(f)
+        problems = check_file(name, fresh_doc, base_doc)
+        checked += 1
+        if problems:
+            failures.extend(problems)
+            print(f"check_regression: FAIL {name}")
+        else:
+            print(f"check_regression: ok {name} "
+                  f"({len(RULES[name])} metrics)")
+    if failures:
+        print("\ncheck_regression: REGRESSION GATE FAILED", file=sys.stderr)
+        for p in failures:
+            print(f"  - {p}", file=sys.stderr)
+        return 1
+    if not args.update_baselines:
+        print(f"check_regression: all gates green "
+              f"({checked} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -24,8 +24,9 @@ Three comparisons:
 from __future__ import annotations
 
 import argparse
-import json
 import time
+
+from benchmarks._util import dump_json
 
 from repro.baselines import make_method
 from repro.baselines.sizey_method import SizeyMethod
@@ -170,8 +171,7 @@ def _frontier(report: dict, trace, workflow: str, scale: float, n_nodes: int,
     report["frontier"] = frontier
 
     if out_path:
-        with open(out_path, "w") as f:
-            json.dump(report, f, indent=2)
+        dump_json(out_path, report)
         print(f"# wrote {out_path}")
     return report
 

@@ -1,0 +1,185 @@
+"""Failure-model benchmark: fail-rate x correlation x failure-strategy
+sweep of the cluster engine (Ponder-style comparison, arXiv 2408.00047).
+
+    PYTHONPATH=src python -m benchmarks.failure_bench [--scale 0.05]
+                          [--workflow mag] [--out BENCH_failure.json]
+
+Each cell runs Sizey (the crash-aware-capable method) on the event engine
+under one failure configuration and reports the waste split by cause —
+OOM GB·h (underprediction), interruption GB·h (crash-burned reservation),
+and their sum ``failure_waste_gbh``, the axis the strategies compete on:
+
+  * ``correlation=independent`` injects per-node faults at
+    ``fail_rate_per_node_h``; ``correlation=rack`` injects whole-rack
+    outages at the SAME per-rack rate — the engine draws one schedule per
+    rack and each event downs ``n_nodes / n_racks`` nodes, so expected
+    node-crashes per hour (``rate x n_nodes``) match the independent
+    cells and the comparison isolates the correlation structure; the
+    per-node and per-event counting in :class:`ClusterMetrics` keeps the
+    two comparable on either axis;
+  * strategies: ``retry_same`` (burn + full re-run), ``retry_scaled``
+    (re-size through the method before re-dispatch), ``checkpoint``
+    (resume from the last checkpoint + crash-aware offset fold);
+  * node mixes: a homogeneous 4-node/2-rack set and a heterogeneous
+    16/32/64 GB 6-node/2-rack set with a class-labeled trace;
+  * one straggler row per mix prices slowdown injection in the same
+    trajectory.
+
+Headline (the acceptance contract): ``crash_aware_beats_retry_same`` —
+at fail_rate >= 0.05/node·h the checkpoint strategy must beat retry_same
+on total failure waste on at least one node mix; ``best_margin_frac``
+records by how much.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from benchmarks._util import dump_json
+
+from repro.baselines.sizey_method import SizeyMethod
+from repro.core import SizeyConfig
+from repro.workflow import generate_workflow, simulate_cluster
+from repro.workflow.accounting import FAILURE_STRATEGIES
+from repro.workflow.cluster import machine_label, node_specs_from_caps
+
+HETERO_CAPS = (16.0, 32.0, 64.0)
+FAIL_RATES = (0.05, 0.2)           # node crashes per node-hour
+REPAIR_H = 0.3
+RACK_REPAIR_H = 0.5
+STRAGGLER_RATE = 0.15
+
+
+def _cell(mix: str, trace, specs, strategy: str, correlation: str,
+          rate: float, ttf: float, seed: int,
+          straggler_rate: float = 0.0) -> dict:
+    kw: dict = {}
+    if correlation == "independent":
+        kw["fail_rate_per_node_h"] = rate
+        kw["repair_h"] = REPAIR_H
+    elif correlation == "rack":
+        # the engine draws one exponential schedule PER RACK at this
+        # rate, and each event downs n_nodes/n_racks nodes, so expected
+        # node-crashes/hour = rate x n_racks x (n_nodes/n_racks) =
+        # rate x n_nodes — already the independent cells' intensity.
+        # Same rate, different correlation structure: the comparison
+        # isolates correlation, not crash volume
+        kw["rack_fail_rate_per_h"] = rate
+        kw["rack_repair_h"] = RACK_REPAIR_H
+    elif correlation != "none":
+        raise ValueError(f"unknown correlation {correlation!r}")
+    method = SizeyMethod(SizeyConfig(), ttf=ttf, failure_strategy=strategy)
+    t0 = time.perf_counter()
+    r = simulate_cluster(trace, method, ttf=ttf, node_specs=specs,
+                         straggler_rate=straggler_rate, fail_seed=seed,
+                         **kw)
+    wall = time.perf_counter() - t0
+    c = r.cluster
+    return {
+        "mix": mix, "correlation": correlation, "strategy": strategy,
+        "fail_rate": rate, "straggler_rate": straggler_rate,
+        "wastage_gbh": r.wastage_gbh,
+        "oom_gbh": r.oom_wastage_gbh,
+        "interruption_gbh": r.interruption_wastage_gbh,
+        "failure_waste_gbh": r.failure_wastage_gbh,
+        "makespan_h": c.makespan_h,
+        "n_failure_events": c.n_failure_events,
+        "n_rack_failures": c.n_rack_failures,
+        "n_node_failures": c.n_node_failures,
+        "n_interruptions": sum(o.interruptions for o in r.outcomes),
+        "n_oom_failures": r.n_failures,
+        "n_straggler_attempts": c.n_straggler_attempts,
+        "n_aborted": c.n_aborted,
+        "wall_s": wall,
+    }
+
+
+def run(scale: float = 0.05, workflow: str = "mag", ttf: float = 1.0,
+        seed: int = 0, out_path: str = "BENCH_failure.json") -> dict:
+    homo_trace = generate_workflow(workflow, seed=seed, scale=scale)
+    hetero_trace = generate_workflow(
+        workflow, seed=seed, scale=scale,
+        machine_caps_gb={machine_label(c): c for c in HETERO_CAPS})
+    mixes = {
+        "homogeneous": (homo_trace,
+                        node_specs_from_caps([128.0], n_nodes=4, n_racks=2)),
+        "hetero_16_32_64": (hetero_trace,
+                            node_specs_from_caps(HETERO_CAPS, n_nodes=6,
+                                                 n_racks=2)),
+    }
+    report: dict = {"workflow": workflow, "scale": scale, "ttf": ttf,
+                    "fail_rates": list(FAIL_RATES),
+                    "n_tasks": len(homo_trace.tasks)}
+    cells: list[dict] = []
+    for mix, (trace, specs) in mixes.items():
+        # failure-free anchor: the pure sizing waste of this mix
+        cells.append(_cell(mix, trace, specs, "retry_same", "none", 0.0,
+                           ttf, seed))
+        for correlation in ("independent", "rack"):
+            for rate in FAIL_RATES:
+                for strategy in FAILURE_STRATEGIES:
+                    cells.append(_cell(mix, trace, specs, strategy,
+                                       correlation, rate, ttf, seed))
+        # straggler row: slowdown injection priced on the same trajectory
+        cells.append(_cell(mix, trace, specs, "retry_same", "none", 0.0,
+                           ttf, seed, straggler_rate=STRAGGLER_RATE))
+    for c in cells:
+        print(f"failure_bench/cell,mix={c['mix']},"
+              f"corr={c['correlation']},strategy={c['strategy']},"
+              f"rate={c['fail_rate']},straggler={c['straggler_rate']},"
+              f"failure_waste_gbh={c['failure_waste_gbh']:.2f},"
+              f"oom={c['oom_gbh']:.2f},interr={c['interruption_gbh']:.2f},"
+              f"events={c['n_failure_events']},"
+              f"makespan_h={c['makespan_h']:.3f}")
+    report["cells"] = cells
+
+    # headline: does the crash-aware (checkpoint) strategy beat retry_same
+    # on total failure waste at fail_rate >= 0.05 on at least one mix?
+    margins = []
+    for c in cells:
+        if c["strategy"] != "checkpoint" or c["fail_rate"] < 0.05:
+            continue
+        ref = next(r for r in cells
+                   if r["strategy"] == "retry_same"
+                   and r["mix"] == c["mix"]
+                   and r["correlation"] == c["correlation"]
+                   and r["fail_rate"] == c["fail_rate"])
+        if ref["failure_waste_gbh"] > 0:
+            margins.append({
+                "mix": c["mix"], "correlation": c["correlation"],
+                "fail_rate": c["fail_rate"],
+                "margin_frac": 1.0 - c["failure_waste_gbh"]
+                / ref["failure_waste_gbh"],
+            })
+    best = max((m["margin_frac"] for m in margins), default=0.0)
+    report["headline"] = {
+        "crash_aware_beats_retry_same": any(m["margin_frac"] > 0.0
+                                            for m in margins),
+        "best_margin_frac": best,
+        "margins": margins,
+    }
+    print(f"failure_bench/headline,"
+          f"crash_aware_beats_retry_same="
+          f"{report['headline']['crash_aware_beats_retry_same']},"
+          f"best_margin_frac={best:.3f}")
+
+    if out_path:
+        dump_json(out_path, report)
+        print(f"# wrote {out_path}")
+    return report
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.05)
+    ap.add_argument("--workflow", default="mag")
+    ap.add_argument("--ttf", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_failure.json")
+    args = ap.parse_args()
+    run(scale=args.scale, workflow=args.workflow, ttf=args.ttf,
+        seed=args.seed, out_path=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -25,12 +25,12 @@ at the same scale.
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import time
 
 import numpy as np
 
+from benchmarks._util import dump_json
 from benchmarks.roofline import csv_rows, load_rows
 from repro.baselines import make_method
 from repro.baselines.sizey_method import SizeyMethod
@@ -238,6 +238,10 @@ def main() -> None:
                          "predictor microbenchmark at the same scale — a "
                          "minutes-long end-to-end pass over every bench "
                          "path for the fast test loop")
+    ap.add_argument("--out", default="results/bench_results.json",
+                    help="output JSON path (CI writes into results/fresh/ "
+                         "so the committed baseline stays intact for the "
+                         "check_regression gate)")
     args = ap.parse_args()
     if args.smoke:
         args.scale = 0.05
@@ -266,11 +270,9 @@ def main() -> None:
                                                  out_path="")
     bench_roofline(out)
 
-    os.makedirs("results", exist_ok=True)
-    with open("results/bench_results.json", "w") as f:
-        json.dump(out, f, indent=2)
+    dump_json(args.out, out)
     print(f"# total bench wall: {time.time()-t0:.0f}s; "
-          "wrote results/bench_results.json")
+          f"wrote {args.out}")
 
 
 if __name__ == "__main__":

@@ -25,8 +25,9 @@ Three comparisons:
 from __future__ import annotations
 
 import argparse
-import json
 import time
+
+from benchmarks._util import dump_json
 
 from repro.baselines import make_method
 from repro.baselines.sizey_method import SizeyMethod
@@ -118,8 +119,7 @@ def run(scale: float = 0.1, workflow: str = "mag", k: int = 4,
           f"overhead_s={report['cluster']['resize_overhead_s']:.2f}")
 
     if out_path:
-        with open(out_path, "w") as f:
-            json.dump(report, f, indent=2)
+        dump_json(out_path, report)
         print(f"# wrote {out_path}")
     return report
 

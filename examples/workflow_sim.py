@@ -33,6 +33,24 @@ boundaries (RESIZE events; ``resizes`` / ``grow_failures`` columns).
 ``--seed`` threads one master seed through trace generation (peaks,
 runtimes, usage curves), Poisson arrivals, and failure injection, so any
 CLI run is reproducible from a single number.
+
+The expanded failure models (correlated rack outages, stragglers,
+Ponder-style failure strategies):
+
+    PYTHONPATH=src python examples/workflow_sim.py --cluster \
+        --rack-caps "16,32,64;16,32,64" --rack-fail-rate 0.1 \
+        --straggler-rate 0.1 --failure-strategy checkpoint
+
+``--rack-caps`` gives the cluster an explicit rack topology
+(semicolon-separated racks, each a comma list of node capacities) and
+makes the trace heterogeneous over the distinct caps; ``--rack-fail-rate``
+injects whole-rack outages (events per rack-hour, ``--rack-repair-h``
+each); ``--straggler-rate`` stretches a seeded subset of attempts by a
+mean factor ``--straggler-factor``; ``--failure-strategy`` picks how
+interrupted attempts are charged and re-run (retry_same / retry_scaled /
+checkpoint — checkpoint also folds the observed crash rate into Sizey's
+offset choice). The CSV gains ``oom_gbh`` / ``interruption_gbh`` /
+``rack_failures`` / ``stragglers`` columns.
 """
 import argparse
 import csv
@@ -42,7 +60,8 @@ import time
 from repro.baselines import make_method
 from repro.baselines.sizey_method import SizeyMethod
 from repro.core import SizeyConfig
-from repro.workflow import (WORKFLOWS, generate_workflow, node_specs_from_caps,
+from repro.workflow import (FAILURE_STRATEGIES, WORKFLOWS, generate_workflow,
+                            node_specs_from_caps, node_specs_from_racks,
                             simulate, simulate_cluster)
 from repro.workflow.cluster import PLACEMENT_POLICIES, machine_label
 
@@ -51,14 +70,17 @@ METHODS = ["sizey", "witt_wastage", "witt_lr", "tovar_ppm",
 TEMPORAL_METHODS = ["sizey_temporal", "ks_plus"]
 
 
-def make(name, ttf, temporal_k):
+def make(name, ttf, temporal_k, failure_strategy="retry_same"):
     if name == "sizey":
-        return SizeyMethod(SizeyConfig(), ttf=ttf)
+        return SizeyMethod(SizeyConfig(), ttf=ttf,
+                           failure_strategy=failure_strategy)
     if name == "sizey_temporal":
-        return SizeyMethod(SizeyConfig(), ttf=ttf, temporal_k=temporal_k)
+        return SizeyMethod(SizeyConfig(), ttf=ttf, temporal_k=temporal_k,
+                           failure_strategy=failure_strategy)
     if name == "ks_plus":
-        return make_method(name, ttf=ttf, k_segments=temporal_k)
-    return make_method(name, ttf=ttf)
+        return make_method(name, ttf=ttf, k_segments=temporal_k,
+                           failure_strategy=failure_strategy)
+    return make_method(name, ttf=ttf, failure_strategy=failure_strategy)
 
 
 def main():
@@ -95,6 +117,31 @@ def main():
                     help="downtime per injected node crash, hours")
     ap.add_argument("--fail-seed", type=int, default=None,
                     help="failure-injection seed (default: --seed)")
+    ap.add_argument("--rack-caps", default=None, metavar="GB,GB;GB,GB",
+                    help="explicit rack topology: semicolon-separated "
+                         "racks, each a comma list of node capacities "
+                         "(e.g. 16,32,64;16,32,64). Implies a "
+                         "heterogeneous trace over the distinct caps and "
+                         "enables --rack-fail-rate; mutually exclusive "
+                         "with --node-caps (requires --cluster)")
+    ap.add_argument("--rack-fail-rate", type=float, default=0.0,
+                    help="correlated rack outages per rack-hour (seeded; "
+                         "crashes every node of the rack at once; "
+                         "requires --rack-caps)")
+    ap.add_argument("--rack-repair-h", type=float, default=2.0,
+                    help="downtime per rack outage, hours")
+    ap.add_argument("--straggler-rate", type=float, default=0.0,
+                    help="per-attempt straggler probability: a straggler's "
+                         "wall time (and reservation GB*h) stretches by "
+                         "a seeded factor (requires --cluster)")
+    ap.add_argument("--straggler-factor", type=float, default=4.0,
+                    help="mean slowdown of a straggler attempt "
+                         "(1 + Exp(factor - 1) draw)")
+    ap.add_argument("--failure-strategy", default="retry_same",
+                    choices=FAILURE_STRATEGIES,
+                    help="how interrupted attempts are charged and re-run "
+                         "(checkpoint additionally folds the observed "
+                         "crash rate into Sizey's offset choice)")
     ap.add_argument("--arrival-rate", type=float, default=None,
                     help="Poisson arrival rate (roots/hour) for the "
                          "cluster engine's open-system load model")
@@ -102,20 +149,52 @@ def main():
     args = ap.parse_args()
     for flag, val in (("--arrival-rate", args.arrival_rate),
                       ("--node-caps", args.node_caps),
-                      ("--fail-rate", args.fail_rate)):
+                      ("--fail-rate", args.fail_rate),
+                      ("--rack-caps", args.rack_caps),
+                      ("--rack-fail-rate", args.rack_fail_rate),
+                      ("--straggler-rate", args.straggler_rate),
+                      # non-default settings of the tuning knobs are as
+                      # silently-ignored as their siblings: be loud too
+                      ("--repair-h",
+                       args.repair_h != ap.get_default("repair_h")),
+                      ("--rack-repair-h",
+                       args.rack_repair_h != ap.get_default("rack_repair_h")),
+                      ("--straggler-factor",
+                       args.straggler_factor
+                       != ap.get_default("straggler_factor")),
+                      ("--failure-strategy",
+                       args.failure_strategy
+                       != ap.get_default("failure_strategy"))):
         if val and not args.cluster:
             ap.error(f"{flag} only affects the event-driven engine; "
                      f"combine it with --cluster [N] (the serial replay "
                      f"ignores it)")
+    if args.rack_caps and args.node_caps:
+        ap.error("--rack-caps already fixes the node set; drop --node-caps")
+    if args.rack_fail_rate and not args.rack_caps:
+        ap.error("--rack-fail-rate needs a rack topology: add --rack-caps")
 
     caps = machine_caps = node_specs = None
     if args.node_caps:
         caps = [float(c) for c in args.node_caps.split(",")]
         machine_caps = {machine_label(c): c for c in caps}
     n_nodes = args.cluster
-    if n_nodes == -1:
+    if args.rack_caps:
+        try:
+            node_specs = node_specs_from_racks(
+                [[float(c) for c in grp.split(",") if c]
+                 for grp in args.rack_caps.split(";") if grp])
+        except ValueError as e:
+            ap.error(str(e))
+        if n_nodes not in (-1, len(node_specs)):
+            ap.error(f"--rack-caps names {len(node_specs)} nodes; drop the "
+                     f"--cluster count or make it match")
+        n_nodes = len(node_specs)
+        caps = sorted({s.cap_gb for s in node_specs})
+        machine_caps = {machine_label(c): c for c in caps}
+    elif n_nodes == -1:
         n_nodes = len(caps) if caps else 8
-    if caps:
+    if caps and node_specs is None:
         try:
             node_specs = node_specs_from_caps(caps, n_nodes=n_nodes)
         except ValueError as e:   # e.g. --cluster N drops node classes
@@ -134,11 +213,16 @@ def main():
                 t0 = time.time()
                 if args.cluster:
                     r = simulate_cluster(
-                        trace, make(m, ttf, args.temporal), ttf=ttf,
-                        n_nodes=n_nodes,
+                        trace,
+                        make(m, ttf, args.temporal, args.failure_strategy),
+                        ttf=ttf, n_nodes=n_nodes,
                         node_specs=node_specs, policy=args.policy,
                         fail_rate_per_node_h=args.fail_rate,
-                        repair_h=args.repair_h, fail_seed=fail_seed)
+                        repair_h=args.repair_h, fail_seed=fail_seed,
+                        rack_fail_rate_per_h=args.rack_fail_rate,
+                        rack_repair_h=args.rack_repair_h,
+                        straggler_rate=args.straggler_rate,
+                        straggler_factor=args.straggler_factor)
                 else:
                     r = simulate(trace, make(m, ttf, args.temporal),
                                  ttf=ttf)
@@ -172,6 +256,15 @@ def main():
                         "node_failures": c.n_node_failures,
                         "interruptions": sum(o.interruptions
                                              for o in r.outcomes),
+                        # failure-model expansion: waste split by cause +
+                        # the correlated/straggler injection counters
+                        "strategy": c.failure_strategy,
+                        "oom_gbh": round(r.oom_wastage_gbh, 2),
+                        "interruption_gbh":
+                            round(r.interruption_wastage_gbh, 2),
+                        "failure_events": c.n_failure_events,
+                        "rack_failures": c.n_rack_failures,
+                        "stragglers": c.n_straggler_attempts,
                     })
                     if args.temporal:
                         row.update({"resizes": c.n_resizes,

@@ -16,29 +16,42 @@ ALL_BASELINES = ("witt_wastage", "witt_lr", "tovar_ppm", "witt_percentile",
 
 
 def make_method(name: str, machine_cap_gb: float = 128.0, ttf: float = 1.0,
-                **kw):
-    """Factory used by benchmarks: name -> SizingMethod instance."""
+                failure_strategy: str | None = None, **kw):
+    """Factory used by benchmarks: name -> SizingMethod instance.
+
+    ``failure_strategy`` (``retry_same`` / ``retry_scaled`` /
+    ``checkpoint``) sets the crash handling the cluster engine applies to
+    the method's attempts — valid for every method, so the Ponder-style
+    strategy comparison runs the whole baseline field.
+    """
     from repro.core import SizeyConfig
+
+    # validation lives in the constructors (HistoryMethod / SizeyMethod):
+    # one enforcement point, so the factory only forwards the choice
+    strat = ({} if failure_strategy is None
+             else {"failure_strategy": failure_strategy})
     if name == "sizey":
         return SizeyMethod(SizeyConfig(**kw), ttf=ttf,
-                           machine_cap_gb=machine_cap_gb)
+                           machine_cap_gb=machine_cap_gb, **strat)
     if name == "sizey_argmax":
         return SizeyMethod(SizeyConfig(strategy="argmax", **kw), ttf=ttf,
-                           machine_cap_gb=machine_cap_gb, name="sizey_argmax")
+                           machine_cap_gb=machine_cap_gb, name="sizey_argmax",
+                           **strat)
     if name == "sizey_temporal":
         k = kw.pop("k_segments", 4)
         return SizeyMethod(SizeyConfig(**kw), ttf=ttf,
-                           machine_cap_gb=machine_cap_gb, temporal_k=k)
+                           machine_cap_gb=machine_cap_gb, temporal_k=k,
+                           **strat)
     if name == "ks_plus":
-        return KSPlusMethod(machine_cap_gb, **kw)
+        return KSPlusMethod(machine_cap_gb, **strat, **kw)
     if name == "witt_wastage":
-        return WittWastage(machine_cap_gb, ttf=ttf)
+        return WittWastage(machine_cap_gb, ttf=ttf, **strat)
     if name == "witt_lr":
-        return WittLR(machine_cap_gb)
+        return WittLR(machine_cap_gb, **strat)
     if name == "witt_percentile":
-        return WittPercentile(machine_cap_gb)
+        return WittPercentile(machine_cap_gb, **strat)
     if name == "tovar_ppm":
-        return TovarPPM(machine_cap_gb, ttf=ttf)
+        return TovarPPM(machine_cap_gb, ttf=ttf, **strat)
     if name == "workflow_presets":
-        return WorkflowPresets(machine_cap_gb)
+        return WorkflowPresets(machine_cap_gb, **strat)
     raise ValueError(f"unknown method {name!r}")

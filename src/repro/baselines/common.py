@@ -3,21 +3,46 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.workflow.accounting import doubling_retry
+from repro.workflow.accounting import (DEFAULT_CHECKPOINT_FRAC,
+                                       FAILURE_STRATEGIES, doubling_retry)
 from repro.workflow.trace import TaskInstance
 
 
 class HistoryMethod:
-    """Per-(task_type, machine) observation history + doubling retry."""
+    """Per-(task_type, machine) observation history + doubling retry.
+
+    ``failure_strategy`` is the Ponder-style crash handling the cluster
+    engine applies to the method's attempts (``retry_same`` is the
+    pre-strategy semantics; ``retry_scaled`` re-sizes interrupted tasks
+    through ``allocate`` before re-dispatch; ``checkpoint`` resumes from
+    the last checkpoint). Baselines carry the attribute so every sizing
+    method competes under every strategy; only Sizey's crash-aware
+    configuration additionally changes its *allocations* on crashes.
+    """
 
     name = "history"
     min_history = 3
+    failure_strategy = "retry_same"
+    checkpoint_frac = DEFAULT_CHECKPOINT_FRAC
 
-    def __init__(self, machine_cap_gb: float = 128.0):
+    def __init__(self, machine_cap_gb: float = 128.0, *,
+                 failure_strategy: str | None = None):
+        if failure_strategy is not None:
+            if failure_strategy not in FAILURE_STRATEGIES:
+                raise ValueError(
+                    f"unknown failure strategy {failure_strategy!r} "
+                    f"(have {FAILURE_STRATEGIES})")
+            self.failure_strategy = failure_strategy
         self.machine_cap_gb = machine_cap_gb
+        self.n_interruptions = 0       # crash kills observed (engine hook)
         self._xs: dict[tuple[str, str], list[float]] = {}
         self._ys: dict[tuple[str, str], list[float]] = {}
         self._rts: dict[tuple[str, str], list[float]] = {}
+
+    def note_interruption(self, task: TaskInstance,
+                          elapsed_h: float) -> None:
+        """Cluster-engine hook: a crash/preemption killed one attempt."""
+        self.n_interruptions += 1
 
     def _key(self, task: TaskInstance) -> tuple[str, str]:
         return (task.task_type, task.machine)

@@ -40,8 +40,8 @@ class KSPlusMethod(HistoryMethod):
 
     def __init__(self, machine_cap_gb: float = 128.0, *,
                  k_segments: int = 4, n_grid: int = 32,
-                 min_alloc_gb: float = 0.125):
-        super().__init__(machine_cap_gb)
+                 min_alloc_gb: float = 0.125, **kw):
+        super().__init__(machine_cap_gb, **kw)
         self.k = int(k_segments)
         self.n_grid = int(n_grid)
         self.min_alloc_gb = float(min_alloc_gb)

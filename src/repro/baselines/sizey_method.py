@@ -9,12 +9,28 @@ observations back — batched per completion wave. ``temporal_k=1`` is the
 degenerate configuration: identical features, identical history, a
 1-segment plan the engines run on the legacy flat path — results are
 bitwise those of the peak-based method (asserted in tests/test_temporal.py).
+
+``failure_strategy`` picks the Ponder-style crash handling the cluster
+engine applies to this method's attempts (``retry_same`` /
+``retry_scaled`` / ``checkpoint``; see :mod:`repro.workflow.accounting`).
+Under ``checkpoint`` the method additionally sizes *crash-aware*: it
+observes the cluster's interruption rate through ``note_interruption``
+and folds it into the offset choice — the safety offset shrinks toward
+the raw aggregate prediction as the expected crashes-per-attempt grow
+(``1 - exp(-rate x mean_runtime)``), because on a crashy cluster every
+GB of headroom is burned again and again by interruptions. With no
+observed crash the fold is a no-op, so failure-free runs stay bitwise
+identical to the default configuration.
 """
 from __future__ import annotations
+
+import math
 
 from repro.core import SizeyConfig
 from repro.core.predictor import SizeyPredictor
 from repro.core.provenance import ProvenanceDB
+from repro.workflow.accounting import (DEFAULT_CHECKPOINT_FRAC,
+                                       FAILURE_STRATEGIES)
 from repro.workflow.trace import TaskInstance
 
 
@@ -22,7 +38,21 @@ class SizeyMethod:
     def __init__(self, cfg: SizeyConfig | None = None, *, ttf: float = 1.0,
                  machine_cap_gb: float = 128.0, name: str | None = None,
                  fused: bool = True, temporal_k: int | None = None,
-                 persist_path: str | None = None):
+                 persist_path: str | None = None,
+                 failure_strategy: str = "retry_same",
+                 checkpoint_frac: float = DEFAULT_CHECKPOINT_FRAC):
+        if failure_strategy not in FAILURE_STRATEGIES:
+            raise ValueError(
+                f"unknown failure strategy {failure_strategy!r} "
+                f"(have {FAILURE_STRATEGIES})")
+        self.failure_strategy = failure_strategy
+        self.checkpoint_frac = checkpoint_frac
+        # crash-aware sizing state: interruptions observed vs attempt-hours
+        # of exposure (completed runtimes + hours lost to crashes)
+        self._crash_events = 0
+        self._exposure_h = 0.0
+        self._runtime_sum_h = 0.0
+        self._n_completed = 0
         self.temporal = temporal_k is not None
         self.name = name if name is not None else (
             "sizey_temporal" if self.temporal and temporal_k > 1 else "sizey")
@@ -46,6 +76,32 @@ class SizeyMethod:
         # whole burst can be pending at once (batched scheduler API)
         self._pending: dict[int, object] = {}
 
+    def _crash_aware_alloc(self, decision) -> float:
+        """Fold the observed crash rate into the offset choice (the
+        ``checkpoint`` strategy's expected-waste sizing). The safety
+        offset shrinks by ``1 - exp(-rate x mean_runtime)`` — the
+        probability the attempt is interrupted at least once — floored at
+        the raw aggregate prediction: headroom that a crash will burn
+        anyway is not worth carrying, but the prediction itself is never
+        undercut. Preset decisions (``offset_gb == 0``) and crash-free
+        histories pass through untouched (bitwise: failure-free runs are
+        unchanged)."""
+        alloc = decision.allocation_gb
+        if (self.failure_strategy != "checkpoint"
+                or not self._crash_events or decision.offset_gb <= 0.0):
+            return alloc
+        rate_per_h = self._crash_events / max(self._exposure_h, 1e-9)
+        mean_rt = self._runtime_sum_h / max(self._n_completed, 1)
+        shrink = 1.0 - math.exp(-rate_per_h * mean_rt)
+        return max(decision.agg_pred_gb, alloc - decision.offset_gb * shrink)
+
+    def note_interruption(self, task: TaskInstance,
+                          elapsed_h: float) -> None:
+        """Cluster-engine hook: a crash/preemption killed one of this
+        method's attempts ``elapsed_h`` into its run."""
+        self._crash_events += 1
+        self._exposure_h += elapsed_h
+
     def allocate(self, task: TaskInstance) -> float:
         if self.temporal:
             return self.allocate_batch([task])[0]
@@ -55,7 +111,7 @@ class SizeyMethod:
             task.task_type, task.machine, task.features, task.user_preset_gb,
             machine_cap_gb=task.machine_cap_gb)
         self._pending[id(task)] = decision
-        return decision.allocation_gb
+        return self._crash_aware_alloc(decision)
 
     def allocate_batch(self, tasks: list[TaskInstance]) -> list[float]:
         """Decide a burst of submissions with one fused dispatch per pool
@@ -64,7 +120,11 @@ class SizeyMethod:
         decisions = self.predictor.predict_batch(tasks)
         for task, decision in zip(tasks, decisions):
             self._pending[id(task)] = decision
-        return [d.allocation_gb for d in decisions]
+        if self.temporal:
+            # a plan is a whole-runtime schedule: the crash-aware offset
+            # fold applies to flat (peak) decisions only
+            return [d.allocation_gb for d in decisions]
+        return [self._crash_aware_alloc(d) for d in decisions]
 
     def plan_for(self, task: TaskInstance):
         """Reservation plan for the allocation just returned (None for the
@@ -79,9 +139,15 @@ class SizeyMethod:
         return self.predictor.retry_allocation(decision, attempt,
                                                last_alloc_gb)
 
+    def _note_completion(self, task: TaskInstance) -> None:
+        self._runtime_sum_h += task.runtime_h
+        self._n_completed += 1
+        self._exposure_h += task.runtime_h
+
     def complete(self, task: TaskInstance, first_alloc_gb: float,
                  attempts: int) -> None:
         decision = self._pending.pop(id(task))
+        self._note_completion(task)
         if self.temporal:
             self.predictor.observe(decision, task, attempts)
         else:
@@ -92,6 +158,8 @@ class SizeyMethod:
         """Observe a wave of simultaneous completions with one fused
         observe dispatch per pool (``items``: (task, first_alloc_gb,
         attempts) tuples — the cluster engine's completion-wave API)."""
+        for task, _first, _attempts in items:
+            self._note_completion(task)
         if self.temporal:
             self.predictor.observe_batch(
                 [(self._pending.pop(id(task)), task, attempts)

@@ -19,8 +19,9 @@ from repro.workflow.trace import TaskInstance
 class TovarPPM(HistoryMethod):
     name = "tovar_ppm"
 
-    def __init__(self, machine_cap_gb: float = 128.0, ttf: float = 1.0):
-        super().__init__(machine_cap_gb)
+    def __init__(self, machine_cap_gb: float = 128.0, ttf: float = 1.0,
+                 **kw):
+        super().__init__(machine_cap_gb, **kw)
         self.ttf = ttf
 
     def allocate(self, task: TaskInstance) -> float:

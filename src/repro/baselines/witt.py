@@ -33,8 +33,9 @@ class WittPercentile(HistoryMethod):
 
     name = "witt_percentile"
 
-    def __init__(self, machine_cap_gb: float = 128.0, percentile: float = 95.0):
-        super().__init__(machine_cap_gb)
+    def __init__(self, machine_cap_gb: float = 128.0,
+                 percentile: float = 95.0, **kw):
+        super().__init__(machine_cap_gb, **kw)
         self.percentile = percentile
 
     def allocate(self, task: TaskInstance) -> float:
@@ -66,8 +67,9 @@ class WittWastage(HistoryMethod):
 
     name = "witt_wastage"
 
-    def __init__(self, machine_cap_gb: float = 128.0, ttf: float = 1.0):
-        super().__init__(machine_cap_gb)
+    def __init__(self, machine_cap_gb: float = 128.0, ttf: float = 1.0,
+                 **kw):
+        super().__init__(machine_cap_gb, **kw)
         self.ttf = ttf
 
     def _wastage_of_line(self, a: float, b: float, xs, ys, rts,

@@ -4,8 +4,9 @@ time-to-failure semantics (paper §III-A), and the event-driven multi-node
 cluster engine (with temporal RESIZE support)."""
 from repro.workflow.trace import TaskInstance, WorkflowTrace
 from repro.workflow.dag import WorkflowDAG
-from repro.workflow.accounting import MAX_ATTEMPTS, AttemptLedger, TaskOutcome
+from repro.workflow.accounting import (FAILURE_STRATEGIES, MAX_ATTEMPTS,
+                                       AttemptLedger, TaskOutcome)
 from repro.workflow.generators import WORKFLOWS, generate_workflow
 from repro.workflow.simulator import ClusterMetrics, SimResult, simulate
 from repro.workflow.cluster import (Node, NodeSpec, node_specs_from_caps,
-                                    simulate_cluster)
+                                    node_specs_from_racks, simulate_cluster)

@@ -16,6 +16,40 @@ cannot drift apart:
     not an OOM failure: no failure count, no retry-ladder step, no abort
     pressure.
 
+Failure-handling strategies (Ponder-style, arXiv 2408.00047) change what
+an *interruption* costs — OOM arithmetic is identical under every
+strategy, so the sizing comparison stays apples-to-apples:
+
+  * ``retry_same`` (default, the pre-strategy semantics): the killed
+    attempt burns its whole partial reservation and re-runs from scratch
+    under the same reservation;
+  * ``retry_scaled``: same burn arithmetic, but the engine re-sizes the
+    attempt through the method before re-dispatch (``refresh_pending``),
+    so a tightened prediction shrinks what the next crash can burn;
+  * ``checkpoint``: the attempt checkpoints every ``checkpoint_frac`` of
+    its runtime; a crash burns the full reservation only for the work
+    since the last checkpoint (``interruption_gbh``) and the mere
+    *headroom* for the retained prefix, and the re-run executes only the
+    remaining ``1 - completed_frac`` of the task. Retention applies to
+    flat attempts that would have succeeded (a doomed attempt was running
+    over-limit — its "progress" is an artifact, so it burns in full, and
+    an OOM kill always restarts from scratch: the bigger-allocation rerun
+    re-executes everything). Temporal (multi-segment-plan) attempts never
+    retain either — a plan is a whole-runtime schedule, so it restarts.
+
+Every ledger splits its waste by *cause*: ``oom_gbh`` (burned by OOM
+kills) + ``interruption_gbh`` (burned by crashes/preemptions, the truly
+lost reservation) + implicit headroom (``wastage_gbh`` minus both), so
+interruption vs OOM waste is attributable per failure-handling strategy.
+
+Straggler injection stretches an attempt in *time*: ``slowdown >= 1``
+multiplies the attempt's wall duration and therefore every reservation
+time-integral (the usage curve stretches with it — the same work takes
+longer). ``slowdown`` is per-attempt state set by the engine at dispatch;
+1.0 (the default, and always the serial replay's value) is arithmetically
+inert: multiplying by 1.0 is exact in IEEE-754, so failure-free traces
+stay bitwise-identical.
+
 Temporal attempts (KS+-style time-segmented allocators) extend the state
 machine without touching the legacy arithmetic:
 
@@ -49,11 +83,21 @@ actually reach, not a global constant.
 from __future__ import annotations
 
 import dataclasses
+import math
 
 from repro.core.temporal.segments import ReservationPlan
 from repro.workflow.trace import TaskInstance
 
 MAX_ATTEMPTS = 16  # safety valve; the doubling ladder reaches any cap first
+
+# Ponder-style failure-handling strategies (see module docstring): how an
+# interrupted (crashed/preempted) attempt is charged and re-run
+FAILURE_STRATEGIES = ("retry_same", "retry_scaled", "checkpoint")
+
+# checkpoint cadence of the "checkpoint" strategy: one checkpoint every
+# this fraction of the task's runtime (methods may override via a
+# ``checkpoint_frac`` attribute)
+DEFAULT_CHECKPOINT_FRAC = 0.25
 
 # after this many failed reservation *grows* (node too full at a segment
 # boundary) the plan flattens to a constant peak reservation — placement
@@ -82,6 +126,12 @@ class TaskOutcome:
     # curves). The one axis peak and temporal allocators share.
     tw_gbh: float = 0.0
     grow_failures: int = 0      # denied reservation grows (temporal plans)
+    # waste attribution by cause (oom + interruption + headroom == total):
+    # OOM kills burn oom_gbh, crash/preemption kills burn interruption_gbh
+    # (under "checkpoint" only the since-last-checkpoint loss counts here),
+    # the rest of wastage_gbh is over-provisioning headroom
+    oom_gbh: float = 0.0
+    interruption_gbh: float = 0.0
     # event timestamps (filled by the simulators; serial replay uses a
     # running clock, the cluster engine real event times)
     submit_h: float = 0.0       # became ready / was submitted
@@ -112,10 +162,30 @@ class AttemptLedger:
     # flat legacy reservation at alloc_gb)
     plan: ReservationPlan | None = None
     grow_failures: int = 0
+    # failure-handling strategy of this task's interruptions (engine passes
+    # the method's choice; the serial replay never interrupts, so the
+    # default is inert there)
+    failure_strategy: str = "retry_same"
+    checkpoint_frac: float = DEFAULT_CHECKPOINT_FRAC
+    # work retained from checkpoints: the re-run executes [completed_frac,1]
+    completed_frac: float = 0.0
+    # straggler stretch of the CURRENT attempt's wall time (>= 1.0; set by
+    # the engine at dispatch, reset to 1.0 for every new dispatch)
+    slowdown: float = 1.0
+    # waste attribution by cause (see TaskOutcome)
+    oom_gbh: float = 0.0
+    interruption_gbh: float = 0.0
+    # retry_scaled: set after an interruption; the engine re-sizes the task
+    # through the method before the next dispatch, then clears it
+    refresh_pending: bool = False
 
     def __post_init__(self):
         self.alloc_gb = self.first_alloc_gb
         self._violation: float | None | bool = False  # False = not computed
+        if self.failure_strategy not in FAILURE_STRATEGIES:
+            raise ValueError(
+                f"unknown failure strategy {self.failure_strategy!r} "
+                f"(have {FAILURE_STRATEGIES})")
 
     # ------------------------------------------------------------ temporal
     def set_plan(self, plan: ReservationPlan | None) -> None:
@@ -159,11 +229,33 @@ class AttemptLedger:
         return self._violation
 
     def _reserved_gbh(self, upto_frac: float) -> float:
-        """GB·h reserved over the first ``upto_frac`` of the runtime under
-        the current attempt's reservation (plan or flat)."""
+        """GB·h reserved over the first ``upto_frac`` of the (straggler-
+        stretched) runtime under the current attempt's reservation (plan or
+        flat). ``upto_frac`` is a fraction of *nominal* runtime; a straggler
+        holds the same reservation ``slowdown`` times longer in wall time."""
         if self.plan is not None:
-            return self.plan.gbh(self.task.runtime_h, upto_frac)
-        return self.alloc_gb * upto_frac * self.task.runtime_h
+            return self.plan.gbh(self.task.runtime_h, upto_frac) \
+                * self.slowdown
+        return self.alloc_gb * upto_frac * self.task.runtime_h \
+            * self.slowdown
+
+    # ----------------------------------------------------- engine controls
+    def set_slowdown(self, slowdown: float) -> None:
+        """Straggler stretch for the attempt about to dispatch (>= 1)."""
+        if slowdown < 1.0:
+            raise ValueError(f"slowdown must be >= 1, got {slowdown}")
+        self.slowdown = slowdown
+
+    def refresh_alloc(self, alloc_gb: float) -> float:
+        """retry_scaled re-size after an interruption: the method's fresh
+        allocation replaces the current one (clamped to capacity) WITHOUT
+        an attempt/ladder step — the crash was not the sizing's fault. Any
+        plan is dropped (the re-run is flat). Clears ``refresh_pending``."""
+        self.alloc_gb = min(float(alloc_gb), self.cap_gb)
+        self.plan = None
+        self._violation = False
+        self.refresh_pending = False
+        return self.alloc_gb
 
     # ------------------------------------------------------------- queries
     @property
@@ -177,16 +269,19 @@ class AttemptLedger:
 
     @property
     def attempt_duration_h(self) -> float:
-        """Wall time of the *next* attempt: full runtime on success. A
-        flat attempt that will OOM runs for the ttf-scaled prefix (the
-        paper's simulation parameter); a temporal attempt dies exactly at
-        the curve's first crossing of the plan (the violation time IS the
-        time-to-failure, so ttf does not apply)."""
+        """Wall time of the *next* attempt: full (remaining) runtime on
+        success. A flat attempt that will OOM runs for the ttf-scaled
+        prefix (the paper's simulation parameter); a temporal attempt dies
+        exactly at the curve's first crossing of the plan (the violation
+        time IS the time-to-failure, so ttf does not apply). A straggler
+        attempt stretches by ``slowdown``; checkpoint retention shrinks a
+        succeeding re-run to the un-retained suffix."""
         if self.will_succeed:
-            return self.task.runtime_h
+            return self.task.runtime_h * self.slowdown \
+                * (1.0 - self.completed_frac)
         if self.plan is not None:
-            return self.violation_frac * self.task.runtime_h
-        return self.ttf * self.task.runtime_h
+            return self.violation_frac * self.task.runtime_h * self.slowdown
+        return self.ttf * self.task.runtime_h * self.slowdown
 
     # ------------------------------------------------------------- records
     def record_failure(self) -> bool:
@@ -205,42 +300,96 @@ class AttemptLedger:
             burn = self._reserved_gbh(frac)
             self.wastage_gbh += burn
             self.tw_gbh += burn
-            self.runtime_h += frac * self.task.runtime_h
+            self.runtime_h += frac * self.task.runtime_h * self.slowdown
         else:
-            burn = self.alloc_gb * self.ttf * self.task.runtime_h
+            burn = self.alloc_gb * self.ttf * self.task.runtime_h \
+                * self.slowdown
             self.wastage_gbh += burn
             self.tw_gbh += burn
-            self.runtime_h += self.ttf * self.task.runtime_h
+            self.runtime_h += self.ttf * self.task.runtime_h * self.slowdown
+        self.oom_gbh += burn
+        # an OOM kill loses the process: checkpoints of the too-small
+        # attempt are not resumable by the larger re-run (strict-limit
+        # semantics — the working set never fit), so retention resets
+        self.completed_frac = 0.0
         self.failures += 1
         if self.alloc_gb >= self.cap_gb or self.attempts >= MAX_ATTEMPTS:
             self.aborted = True
         return self.aborted
 
-    def record_interruption(self, elapsed_h: float) -> None:
+    def record_interruption(self, elapsed_h: float, *,
+                            charge_interruption: bool = True) -> None:
         """A preemption or node crash killed the attempt ``elapsed_h`` into
-        its run. The partial reservation is burned (its time integral —
-        nothing useful was produced) but this is NOT an OOM failure: no
-        failure count, no retry-ladder step, no abort pressure. The attempt
-        re-runs later under the same reservation (plan included)."""
-        if self.plan is not None:
-            frac = min(elapsed_h / max(self.task.runtime_h, 1e-12), 1.0)
-            burn = self._reserved_gbh(frac)
+        its run. This is NOT an OOM failure: no failure count, no
+        retry-ladder step, no abort pressure.
+
+        ``charge_interruption=False`` keeps the burn out of
+        ``interruption_gbh``: temporal grow *denials* use the same
+        burn-and-requeue arithmetic but are placement congestion, not a
+        failure event — they must not pollute the Ponder-style
+        failure-waste axis of a crash-free run.
+
+        Under ``retry_same`` / ``retry_scaled`` the whole partial
+        reservation is burned (nothing useful survives the kill) and the
+        attempt re-runs in full. Under ``checkpoint`` a flat attempt that
+        would have succeeded retains the prefix up to its last checkpoint:
+        only the since-checkpoint reservation is truly lost
+        (``interruption_gbh``); the retained prefix is charged its
+        over-provisioning headroom, and ``completed_frac`` advances so the
+        re-run executes only the suffix. Temporal plans and doomed
+        attempts never retain (see module docstring)."""
+        retained = self.completed_frac
+        if (self.failure_strategy == "checkpoint" and self.plan is None
+                and self.checkpoint_frac > 0 and self.will_succeed):
+            wall_rt = self.task.runtime_h * self.slowdown
+            pos = self.completed_frac + elapsed_h / max(wall_rt, 1e-12)
+            retained = min(math.floor(pos / self.checkpoint_frac)
+                           * self.checkpoint_frac, 1.0)
+            retained = max(retained, self.completed_frac)
+        if retained > self.completed_frac:
+            wall_rt = self.task.runtime_h * self.slowdown
+            retained_dt = (retained - self.completed_frac) * wall_rt
+            lost_dt = max(elapsed_h - retained_dt, 0.0)
+            lost = self.alloc_gb * lost_dt
+            # the retained prefix DID useful work: charge only headroom
+            # (peak-based for wastage_gbh, curve-integrated for tw_gbh —
+            # the same split record_success uses)
+            used_gbh = (self.task.usage_gbh(retained)
+                        - self.task.usage_gbh(self.completed_frac)) \
+                * self.slowdown
+            self.wastage_gbh += lost + (self.alloc_gb
+                                        - self.task.actual_peak_gb) \
+                * retained_dt
+            self.tw_gbh += lost + (self.alloc_gb * retained_dt - used_gbh)
+            if charge_interruption:
+                self.interruption_gbh += lost
+            self.completed_frac = retained
         else:
-            burn = self.alloc_gb * elapsed_h
-        self.wastage_gbh += burn
-        self.tw_gbh += burn
+            if self.plan is not None:
+                frac = min(elapsed_h / max(self.task.runtime_h
+                                           * self.slowdown, 1e-12), 1.0)
+                burn = self._reserved_gbh(frac)
+            else:
+                burn = self.alloc_gb * elapsed_h
+            self.wastage_gbh += burn
+            self.tw_gbh += burn
+            if charge_interruption:
+                self.interruption_gbh += burn
         self.runtime_h += elapsed_h
         self.interruptions += 1
 
     def record_grow_failure(self, elapsed_h: float) -> None:
         """A segment-boundary grow found its node too full: interruption
         accounting (the partial plan integral is burned, no OOM), plus a
-        grow-failure count. After ``MAX_GROW_FAILURES`` denied grows the
-        plan flattens to a constant ``alloc_gb`` (== the plan peak)
-        reservation — placement then treats the task like any peak attempt
-        and serializes it, so two growers can never requeue-livelock each
-        other on a saturated node."""
-        self.record_interruption(elapsed_h)
+        grow-failure count — but NOT charged to ``interruption_gbh``: a
+        denied grow is placement congestion, not a failure event, so the
+        failure-waste axis of a crash-free run stays zero. After
+        ``MAX_GROW_FAILURES`` denied grows the plan flattens to a constant
+        ``alloc_gb`` (== the plan peak) reservation — placement then
+        treats the task like any peak attempt and serializes it, so two
+        growers can never requeue-livelock each other on a saturated
+        node."""
+        self.record_interruption(elapsed_h, charge_interruption=False)
         self.grow_failures += 1
         if self.grow_failures >= MAX_GROW_FAILURES:
             self.plan = None
@@ -259,8 +408,16 @@ class AttemptLedger:
         return self.alloc_gb
 
     def record_success(self) -> None:
-        rt = self.task.runtime_h
-        used = self.task.usage_gbh()   # == peak * rt for curve-less traces
+        # wall time of the successful run: straggler-stretched, shrunk to
+        # the un-retained suffix under checkpoint retention (both factors
+        # are exactly 1.0 on the default path — bitwise-inert)
+        rt = self.task.runtime_h * self.slowdown * (1.0 - self.completed_frac)
+        if self.completed_frac > 0.0:
+            used = (self.task.usage_gbh()
+                    - self.task.usage_gbh(self.completed_frac)) \
+                * self.slowdown
+        else:
+            used = self.task.usage_gbh() * self.slowdown
         if self.plan is not None:
             tw = self._reserved_gbh(1.0) - used
             # a temporal attempt's "peak-based" wastage IS its integral —
@@ -281,5 +438,7 @@ class AttemptLedger:
                            interruptions=self.interruptions,
                            tw_gbh=self.tw_gbh,
                            grow_failures=self.grow_failures,
+                           oom_gbh=self.oom_gbh,
+                           interruption_gbh=self.interruption_gbh,
                            submit_h=submit_h, start_h=start_h,
                            finish_h=finish_h)

@@ -35,6 +35,14 @@ possibly different) memory capacity:
     as wastage, but no failure count / retry-ladder step) and requeued at
     their original FIFO seq. Preemption (the ``preemptive`` policy) uses
     the same interruption semantics;
+  * *correlated* rack failures (``rack_fail_rate_per_h``) crash every up
+    node of a rack (:attr:`NodeSpec.rack`) in ONE event, with per-rack
+    repair times; a *straggler* model (``straggler_rate``) stretches a
+    seeded subset of attempts in wall time, flowing through every
+    reservation time-integral and RESIZE boundary. What an interruption
+    costs — full re-run, re-sized re-run, or checkpoint-resumed suffix —
+    is the method's ``failure_strategy``
+    (:data:`~repro.workflow.accounting.FAILURE_STRATEGIES`);
   * node reservations are tracked *exactly*: ``Node.free_gb`` is the
     capacity minus an exactly-rounded sum (``math.fsum``) of the
     outstanding allocations, never an incrementally drifting ``+=``/``-=``
@@ -93,14 +101,19 @@ from typing import Callable, Sequence
 
 import numpy as np
 
-from repro.workflow.accounting import AttemptLedger, TaskOutcome
+from repro.utils.misc import stable_hash
+from repro.workflow.accounting import (DEFAULT_CHECKPOINT_FRAC,
+                                       FAILURE_STRATEGIES, AttemptLedger,
+                                       TaskOutcome)
 from repro.workflow.simulator import ClusterMetrics, SimResult, SizingMethod
 from repro.workflow.trace import TaskInstance, WorkflowTrace
 
 __all__ = ["NodeSpec", "Node", "machine_label", "node_specs_from_caps",
-           "simulate_cluster", "PLACEMENT_POLICIES"]
+           "node_specs_from_racks", "simulate_cluster",
+           "PLACEMENT_POLICIES", "FAILURE_STRATEGIES"]
 
-_ARRIVE, _FINISH, _CRASH, _RECOVER, _RESIZE = 0, 1, 2, 3, 4
+(_ARRIVE, _FINISH, _CRASH, _RECOVER, _RESIZE,
+ _RACK_CRASH, _RACK_RECOVER) = range(7)
 
 _DEFAULT_CLASS = "default"
 
@@ -111,11 +124,16 @@ class NodeSpec:
 
     ``machine`` is the node's class label; tasks whose
     ``TaskInstance.machine`` equals a label are constrained to that class.
-    ``None`` means the node accepts any task.
+    ``None`` means the node accepts any task. ``rack`` is the node's
+    failure domain: a correlated rack-failure event
+    (``rack_fail_rate_per_h``) crashes every node sharing the label at
+    once. ``None`` means the node belongs to no rack (it only fails
+    through the independent per-node schedule).
     """
     name: str
     cap_gb: float
     machine: str | None = None
+    rack: str | None = None
 
 
 def machine_label(cap_gb: float) -> str:
@@ -127,12 +145,20 @@ def machine_label(cap_gb: float) -> str:
 
 
 def node_specs_from_caps(caps: Sequence[float],
-                         n_nodes: int | None = None) -> list[NodeSpec]:
+                         n_nodes: int | None = None,
+                         n_racks: int | None = None) -> list[NodeSpec]:
     """Build a heterogeneous node set by cycling ``caps`` over ``n_nodes``
     nodes (default: one node per cap). Class labels come from
     :func:`machine_label` — the same labels
     :func:`repro.workflow.generators.generate_workflow` should be given
-    via ``machine_caps_gb={machine_label(c): c for c in caps}``."""
+    via ``machine_caps_gb={machine_label(c): c for c in caps}``.
+
+    ``n_racks`` additionally splits the nodes into that many *contiguous*
+    rack failure domains (``rack00``, ``rack01``, ...). Contiguous blocks
+    (not ``i % n_racks``, which would alias with the cap cycle and give
+    each rack a single class): any block of at least ``len(caps)`` nodes
+    carries every node class, so a rack outage degrades the cluster
+    evenly instead of deleting one class wholesale."""
     caps = [float(c) for c in caps]
     if not caps:
         raise ValueError("need at least one node capacity")
@@ -143,8 +169,35 @@ def node_specs_from_caps(caps: Sequence[float],
         # the misconfiguration loud instead
         raise ValueError(f"n_nodes={n} drops node classes: need at least "
                          f"one node per capacity in {caps}")
+    if n_racks is not None and not 1 <= n_racks <= n:
+        # more racks than nodes would silently yield fewer (gap-labeled)
+        # failure domains than asked for — be loud, like the node-class
+        # guard above
+        raise ValueError(f"n_racks must be in [1, {n}], got {n_racks}")
     return [NodeSpec(f"node{i:02d}", caps[i % len(caps)],
-                     machine_label(caps[i % len(caps)])) for i in range(n)]
+                     machine_label(caps[i % len(caps)]),
+                     rack=(f"rack{(i * n_racks) // n:02d}" if n_racks
+                           else None))
+            for i in range(n)]
+
+
+def node_specs_from_racks(
+        rack_caps: Sequence[Sequence[float]]) -> list[NodeSpec]:
+    """Build a node set from an explicit rack topology: one inner sequence
+    of node capacities per rack (the ``--rack-caps 16,32;16,32`` CLI
+    shape). Machine-class labels come from :func:`machine_label`, rack
+    labels are ``rack00``, ``rack01``, ... in the order given."""
+    specs: list[NodeSpec] = []
+    for ri, caps in enumerate(rack_caps):
+        caps = [float(c) for c in caps]
+        if not caps:
+            raise ValueError(f"rack {ri} names no node capacities")
+        for c in caps:
+            specs.append(NodeSpec(f"node{len(specs):02d}", c,
+                                  machine_label(c), rack=f"rack{ri:02d}"))
+    if not specs:
+        raise ValueError("need at least one rack with at least one node")
+    return specs
 
 
 class Node:
@@ -223,6 +276,8 @@ class _Queued:
     task: TaskInstance
     ledger: AttemptLedger | None = None   # None until sized
     start_h: float | None = None          # first dispatch time
+    n_dispatches: int = 0       # straggler draws are keyed per dispatch
+    task_hash: int | None = None  # cached stable_hash of the task key
 
 
 @dataclasses.dataclass
@@ -379,30 +434,70 @@ def simulate_cluster(trace: WorkflowTrace, method: SizingMethod,
                      backfill_depth: int = 32,
                      fail_rate_per_node_h: float = 0.0,
                      repair_h: float = 1.0,
-                     fail_seed: int = 0) -> SimResult:
+                     fail_seed: int = 0,
+                     rack_fail_rate_per_h: float = 0.0,
+                     rack_repair_h: float | dict[str, float] = 2.0,
+                     straggler_rate: float = 0.0,
+                     straggler_factor: float = 4.0,
+                     straggler_seed: int | None = None) -> SimResult:
     """Execute ``trace`` concurrently on a cluster.
 
     The node set is either ``node_specs`` (heterogeneous: per-node
-    capacities and machine-class labels) or ``n_nodes`` homogeneous nodes
-    of ``node_cap_gb`` memory each (default: the trace's machine
-    capacity). ``fail_rate_per_node_h > 0`` injects a deterministic seeded
-    schedule of node crash/recover events (exponential inter-crash times,
-    ``repair_h`` downtime); killed attempts are requeued at their original
-    FIFO seq with interruption (non-OOM) accounting.
+    capacities, machine-class labels, and optional rack failure domains)
+    or ``n_nodes`` homogeneous nodes of ``node_cap_gb`` memory each
+    (default: the trace's machine capacity).
+
+    Failure injection (all schedules deterministic and seeded by
+    ``fail_seed``, independent of event interleaving):
+
+      * ``fail_rate_per_node_h > 0`` — independent node crash/recover
+        events (exponential inter-crash times, ``repair_h`` downtime);
+      * ``rack_fail_rate_per_h > 0`` — *correlated* rack outages: each
+        rack draws its own exponential schedule and an outage crashes
+        every up node in the rack at once, recovering them together after
+        ``rack_repair_h`` (a scalar, or a per-rack-label mapping).
+        Requires rack-labeled ``node_specs`` (see
+        :func:`node_specs_from_caps` / :func:`node_specs_from_racks`);
+      * ``straggler_rate > 0`` — each dispatched attempt straggles with
+        this probability: its wall time (and therefore every reservation
+        time-integral and RESIZE boundary) stretches by a factor drawn as
+        ``1 + Exp(straggler_factor - 1)`` (mean ``straggler_factor``),
+        keyed by ``(task, dispatch#)`` from ``straggler_seed`` (default:
+        ``fail_seed``), so schedules replay bit-identically.
+
+    Killed attempts are requeued at their original FIFO seq with
+    interruption (non-OOM) accounting. What an interruption costs — and
+    how the attempt re-runs — follows the method's ``failure_strategy``
+    (``retry_same`` / ``retry_scaled`` / ``checkpoint``; see
+    :mod:`repro.workflow.accounting`). ``retry_scaled`` re-sizes
+    interrupted tasks through the method before re-dispatch; methods
+    exposing ``note_interruption`` observe every crash (crash-aware
+    sizing feeds on this).
 
     Any :class:`SizingMethod` runs unmodified; methods exposing
     ``allocate_batch`` (Sizey) get each ready wave as one burst. Returns a
     :class:`SimResult` whose ``cluster`` field carries makespan, queueing
     delay (dispatched tasks only — admission rejections are counted in
     ``n_aborted`` instead), per-node and per-node-class utilization, peak
-    concurrent reservation, preemption/crash counters, and wave /
-    sizing-call counts; ``wastage_over_time()`` is event-timestamped and
-    directly comparable to the serial curve.
+    concurrent reservation, preemption/crash/rack/straggler counters, and
+    wave / sizing-call counts; ``wastage_over_time()`` is
+    event-timestamped and directly comparable to the serial curve.
     """
     if policy not in PLACEMENT_POLICIES:
         raise ValueError(f"unknown placement policy {policy!r} "
                          f"(have {sorted(PLACEMENT_POLICIES)})")
     place = PLACEMENT_POLICIES[policy]
+    failure_strategy = getattr(method, "failure_strategy", "retry_same")
+    if failure_strategy not in FAILURE_STRATEGIES:
+        raise ValueError(f"unknown failure strategy {failure_strategy!r} "
+                         f"(have {FAILURE_STRATEGIES})")
+    checkpoint_frac = float(getattr(method, "checkpoint_frac",
+                                    DEFAULT_CHECKPOINT_FRAC))
+    if straggler_factor < 1.0:
+        raise ValueError(f"straggler_factor must be >= 1, "
+                         f"got {straggler_factor}")
+    if straggler_seed is None:
+        straggler_seed = fail_seed
     if node_specs is None:
         cap = trace.machine_cap_gb if node_cap_gb is None else node_cap_gb
         specs = [NodeSpec(f"node{i:02d}", cap) for i in range(n_nodes)]
@@ -416,6 +511,23 @@ def simulate_cluster(trace: WorkflowTrace, method: SizingMethod,
     has_batch = hasattr(method, "allocate_batch")
     has_plan = hasattr(method, "plan_for")
     has_complete_batch = hasattr(method, "complete_batch")
+    has_note = hasattr(method, "note_interruption")
+    rack_names = sorted({s.rack for s in specs if s.rack is not None})
+    rack_members = {r: [i for i, s in enumerate(specs) if s.rack == r]
+                    for r in rack_names}
+    if rack_fail_rate_per_h > 0.0 and not rack_names:
+        raise ValueError("rack_fail_rate_per_h > 0 needs rack-labeled "
+                         "node_specs (node_specs_from_caps(n_racks=...) or "
+                         "node_specs_from_racks)")
+
+    def _rack_repair(rack: str) -> float:
+        if isinstance(rack_repair_h, dict):
+            try:
+                return float(rack_repair_h[rack])
+            except KeyError:
+                raise ValueError(f"rack_repair_h names no repair time for "
+                                 f"rack {rack!r}") from None
+        return float(rack_repair_h)
 
     def eligible(task: TaskInstance, node: Node) -> bool:
         # unlabeled nodes take anything; a task whose machine label names
@@ -465,10 +577,25 @@ def simulate_cluster(trace: WorkflowTrace, method: SizingMethod,
             t_crash = float(fail_rngs[i].exponential(
                 1.0 / fail_rate_per_node_h))
             heapq.heappush(events, (t_crash, next(eseq), _CRASH, i))
+    # rack outages draw from their own per-rack streams (3-element seed
+    # sequences: disjoint from the 2-element per-node streams above, so
+    # adding rack injection never perturbs the node schedules)
+    rack_rngs = {r: np.random.default_rng([fail_seed, 7919, ri])
+                 for ri, r in enumerate(rack_names)}
+    if rack_fail_rate_per_h > 0.0:
+        for r in rack_names:
+            t_crash = float(rack_rngs[r].exponential(
+                1.0 / rack_fail_rate_per_h))
+            heapq.heappush(events, (t_crash, next(eseq), _RACK_CRASH, r))
 
     queue: list[_Queued] = []
     qseq = itertools.count()
     atok = itertools.count()    # attempt tokens (reservation + finish ids)
+    dtok = itertools.count()    # crash-ownership tokens: a recover event
+    # only brings a node back if it still owns the downing (rack outages
+    # and independent faults can overlap on one node)
+    down_token: dict[int, int] = {}
+    down_due: dict[int, float] = {}   # when the owning outage repairs
     running: dict[int, tuple[_Queued, Node, float]] = {}
     outcomes: list[TaskOutcome] = []
     delays: list[float] = []    # queue delays of *dispatched* tasks only
@@ -476,6 +603,9 @@ def simulate_cluster(trace: WorkflowTrace, method: SizingMethod,
     n_waves = n_size_calls = n_aborted = 0
     n_preemptions = n_node_failures = 0
     n_resizes = n_grow_failures = n_complete_waves = 0
+    n_failure_events = n_rack_failures = n_straggler_attempts = 0
+    straggler_extra_h = 0.0
+    rack_outage_node_h = {r: 0.0 for r in rack_names}
     warned_admission = False
 
     def unlock_children(key: tuple[str, int], t: float) -> None:
@@ -502,15 +632,58 @@ def simulate_cluster(trace: WorkflowTrace, method: SizingMethod,
         # every instance of the trace gets an outcome (serial semantics)
         unlock_children(entry.task.key, t)
 
+    def note_straggle(led: AttemptLedger, elapsed_h: float) -> None:
+        """Straggler overhead actually incurred: the extra wall time of
+        the ``elapsed_h`` the attempt really ran (a killed straggler is
+        charged only its elapsed stretch, not the planned one)."""
+        nonlocal straggler_extra_h
+        if led.slowdown > 1.0:
+            straggler_extra_h += elapsed_h * (1.0 - 1.0 / led.slowdown)
+
     def interrupt(token: int, t: float) -> None:
         """Kill a running attempt (crash or preemption): burn the partial
-        reservation, requeue at the original FIFO seq — no OOM failure."""
+        reservation per the failure strategy, requeue at the original FIFO
+        seq — no OOM failure. ``retry_scaled`` marks the entry for a fresh
+        sizing pass before re-dispatch; crash-aware methods observe the
+        interruption through ``note_interruption``."""
         nonlocal total_reserved
         entry, node, started = running.pop(token)
         gb = node.release(t, token)
         total_reserved -= gb
+        note_straggle(entry.ledger, t - started)
         entry.ledger.record_interruption(t - started)
+        if failure_strategy == "retry_scaled":
+            entry.ledger.refresh_pending = True
+        if has_note:
+            method.note_interruption(entry.task, t - started)
         queue.append(entry)   # keeps its original FIFO seq
+
+    def crash_node(idx: int, t: float, due: float) -> int:
+        """Down one node (if up) until ``due``: interrupt its attempts,
+        take a crash-ownership token. Returns the token, or -1 if the
+        node was already down (an overlapping outage absorbed the
+        fault — the caller decides whether it extends the downtime)."""
+        nonlocal n_node_failures
+        node = nodes[idx]
+        if not node.up:
+            return -1
+        token = next(dtok)
+        down_token[idx] = token
+        down_due[idx] = due
+        node.crash(t)
+        n_node_failures += 1
+        for atok_ in [k for k, (_, n, _) in running.items() if n is node]:
+            interrupt(atok_, t)
+        return token
+
+    def recover_node(idx: int, token: int, t: float) -> bool:
+        """Bring a node back iff ``token`` still owns its downing."""
+        if down_token.get(idx) != token:
+            return False
+        del down_token[idx]
+        down_due.pop(idx, None)
+        nodes[idx].recover(t)
+        return True
 
     while True:
         if not queue and not running and pending_arrivals == 0:
@@ -549,32 +722,96 @@ def simulate_cluster(trace: WorkflowTrace, method: SizingMethod,
                         running.pop(token)
                         gb = node.release(clock, token)
                         total_reserved -= gb
+                        note_straggle(led, clock - started)
                         led.record_grow_failure(clock - started)
                         queue.append(entry)
                     continue
                 if kind == _CRASH:
-                    node = nodes[payload]
-                    node.crash(clock)
-                    n_node_failures += 1
-                    for token in [k for k, (_, n, _) in running.items()
-                                  if n is node]:
-                        interrupt(token, clock)
-                    heapq.heappush(events, (clock + repair_h, next(eseq),
-                                            _RECOVER, payload))
-                    continue
-                if kind == _RECOVER:
-                    nodes[payload].recover(clock)
-                    if pending_arrivals or queue or running:
+                    n_failure_events += 1
+                    node_due = clock + repair_h
+                    token = crash_node(payload, clock, node_due)
+                    if token < 0 and node_due > down_due[payload] + 1e-12:
+                        # already down (rack outage) but THIS fault
+                        # repairs later: take ownership so the node stays
+                        # down past the rack recover — symmetric with the
+                        # rack-takeover branch below ("latest due wins")
+                        token = next(dtok)
+                        down_token[payload] = token
+                        down_due[payload] = node_due
+                    if token >= 0:
+                        heapq.heappush(events, (node_due, next(eseq),
+                                                _RECOVER,
+                                                (payload, token)))
+                    elif pending_arrivals or queue or running:
+                        # absorbed outright (the rack outage outlasts the
+                        # fault): keep the node's crash stream alive
                         nxt = clock + float(fail_rngs[payload].exponential(
                             1.0 / fail_rate_per_node_h))
                         heapq.heappush(events, (nxt, next(eseq), _CRASH,
                                                 payload))
                     continue
+                if kind == _RECOVER:
+                    idx, token = payload
+                    # the recovery is a no-op when a later rack outage
+                    # took ownership of the downing (the node then stays
+                    # down until the RACK recovers), but the node's crash
+                    # stream continues either way
+                    recover_node(idx, token, clock)
+                    if pending_arrivals or queue or running:
+                        nxt = clock + float(fail_rngs[idx].exponential(
+                            1.0 / fail_rate_per_node_h))
+                        heapq.heappush(events, (nxt, next(eseq), _CRASH,
+                                                idx))
+                    continue
+                if kind == _RACK_CRASH:
+                    # correlated outage: every node of the rack is down
+                    # until the rack repairs — ONE failure event, N node
+                    # failures. A member already down from an independent
+                    # fault is taken over only when the rack repairs
+                    # LATER (its own recover goes stale and it comes back
+                    # with the rack); a fault outlasting the outage keeps
+                    # the node down past the rack repair — a node always
+                    # returns at the latest due among its outages
+                    n_failure_events += 1
+                    n_rack_failures += 1
+                    rack_due = clock + _rack_repair(payload)
+                    # downed: (node idx, ownership token, time from which
+                    # the downtime is ATTRIBUTABLE to this rack outage)
+                    downed = []
+                    for idx in rack_members[payload]:
+                        token = crash_node(idx, clock, rack_due)
+                        if token >= 0:
+                            downed.append((idx, token, clock))
+                        elif rack_due > down_due[idx] + 1e-12:
+                            token = next(dtok)
+                            attrib_from = down_due[idx]
+                            down_token[idx] = token
+                            down_due[idx] = rack_due
+                            downed.append((idx, token, attrib_from))
+                    heapq.heappush(events,
+                                   (rack_due, next(eseq), _RACK_RECOVER,
+                                    (payload, downed)))
+                    continue
+                if kind == _RACK_RECOVER:
+                    rack, downed = payload
+                    for idx, token, attrib_from in downed:
+                        recover_node(idx, token, clock)
+                        # rack-ATTRIBUTED downtime: the MARGINAL node-
+                        # hours this outage added (a taken-over member
+                        # counts only the extension past its own repair)
+                        rack_outage_node_h[rack] += clock - attrib_from
+                    if pending_arrivals or queue or running:
+                        nxt = clock + float(rack_rngs[rack].exponential(
+                            1.0 / rack_fail_rate_per_h))
+                        heapq.heappush(events, (nxt, next(eseq),
+                                                _RACK_CRASH, rack))
+                    continue
                 if payload not in running:
                     continue   # attempt was preempted / crash-killed
-                entry, node, _ = running.pop(payload)
+                entry, node, started = running.pop(payload)
                 gb = node.release(clock, payload)
                 total_reserved -= gb
+                note_straggle(entry.ledger, clock - started)
                 if entry.ledger.will_succeed:
                     entry.ledger.record_success()
                     outcomes.append(entry.ledger.outcome(
@@ -623,8 +860,10 @@ def simulate_cluster(trace: WorkflowTrace, method: SizingMethod,
                 allocs = [method.allocate(e.task) for e in unsized]
             rejected: set[int] = set()
             for entry, alloc in zip(unsized, allocs):
-                entry.ledger = AttemptLedger(entry.task, float(alloc),
-                                             cap_for(entry.task), ttf)
+                entry.ledger = AttemptLedger(
+                    entry.task, float(alloc), cap_for(entry.task), ttf,
+                    failure_strategy=failure_strategy,
+                    checkpoint_frac=checkpoint_frac)
                 if has_plan:
                     # temporal reservation schedule for the first attempt
                     # (set_plan drops 1-segment plans onto the flat path)
@@ -657,6 +896,22 @@ def simulate_cluster(trace: WorkflowTrace, method: SizingMethod,
                     rejected.add(id(entry))
             if rejected:
                 queue = [e for e in queue if id(e) not in rejected]
+        if failure_strategy == "retry_scaled":
+            # crash-interrupted tasks are re-sized through the method (one
+            # batched dispatch when available) before re-entering placement:
+            # a tightened prediction shrinks what the next crash can burn
+            refresh = [e for e in queue
+                       if e.ledger is not None and e.ledger.refresh_pending]
+            if refresh:
+                if has_batch:
+                    n_size_calls += 1
+                    rallocs = method.allocate_batch(
+                        [e.task for e in refresh])
+                else:
+                    n_size_calls += len(refresh)
+                    rallocs = [method.allocate(e.task) for e in refresh]
+                for entry, alloc in zip(refresh, rallocs):
+                    entry.ledger.refresh_alloc(float(alloc))
         ctx = PlacementContext(nodes, backfill_depth, eligible, priority,
                                running)
         placements, evictions = place(queue, ctx)
@@ -676,20 +931,41 @@ def simulate_cluster(trace: WorkflowTrace, method: SizingMethod,
                 peak_reserved = max(peak_reserved, total_reserved)
                 if entry.start_h is None:
                     entry.start_h = clock
+                if straggler_rate > 0.0:
+                    # per-attempt straggler draw, keyed by (task, dispatch#)
+                    # so the schedule replays bit-identically whatever the
+                    # event interleaving; re-dispatches re-draw
+                    entry.n_dispatches += 1
+                    if entry.task_hash is None:
+                        entry.task_hash = stable_hash(
+                            f"{entry.task.task_type}"
+                            f":{entry.task.index}") % (2 ** 31)
+                    srng = np.random.default_rng(
+                        [straggler_seed, entry.task_hash,
+                         entry.n_dispatches])
+                    if float(srng.random()) < straggler_rate:
+                        led.set_slowdown(1.0 + float(srng.exponential(
+                            max(straggler_factor - 1.0, 1e-9))))
+                        n_straggler_attempts += 1
+                    else:
+                        led.set_slowdown(1.0)
                 duration = led.attempt_duration_h
                 heapq.heappush(
                     events, (clock + duration, next(eseq), _FINISH, token))
                 if led.temporal_active:
                     # resize at every predicted segment boundary the
                     # attempt survives to (a doomed plan dies at its
-                    # violation time; later boundaries never happen)
+                    # violation time; later boundaries never happen).
+                    # Boundaries live in nominal-runtime fractions, so a
+                    # straggler's stretch moves them in wall time too
                     vf = led.violation_frac
                     horizon = 1.0 if vf is None else vf
                     for si, (end, _gb) in enumerate(led.plan.segments[:-1]):
                         if end < horizon - 1e-12:
                             heapq.heappush(
                                 events,
-                                (clock + end * led.task.runtime_h,
+                                (clock + end * led.task.runtime_h
+                                 * led.slowdown,
                                  next(eseq), _RESIZE, (token, si + 1)))
 
     makespan = clock
@@ -716,5 +992,10 @@ def simulate_cluster(trace: WorkflowTrace, method: SizingMethod,
         n_preemptions=n_preemptions, n_node_failures=n_node_failures,
         node_downtime_h={n.name: n.down_h for n in nodes},
         n_resizes=n_resizes, n_grow_failures=n_grow_failures,
-        n_complete_waves=n_complete_waves)
+        n_complete_waves=n_complete_waves,
+        failure_strategy=failure_strategy,
+        n_failure_events=n_failure_events, n_rack_failures=n_rack_failures,
+        n_straggler_attempts=n_straggler_attempts,
+        straggler_extra_h=straggler_extra_h,
+        rack_downtime_h=dict(rack_outage_node_h))
     return SimResult(trace.name, method.name, ttf, outcomes, cluster=metrics)

@@ -90,6 +90,21 @@ class ClusterMetrics:
     n_resizes: int = 0                 # successful reservation resizes
     n_grow_failures: int = 0           # denied grows (node full at boundary)
     n_complete_waves: int = 0          # event drains with >= 1 completion
+    # failure-model expansion fields (PR 5). Counting convention:
+    # ``n_failure_events`` counts injected crash EVENTS (one per node fault
+    # and one per rack outage), ``n_node_failures`` counts crashed NODES
+    # (a rack outage downing 4 nodes adds 4) — correlated and independent
+    # failure runs are therefore comparable on either axis.
+    failure_strategy: str = "retry_same"
+    n_failure_events: int = 0          # injected crash events (node + rack)
+    n_rack_failures: int = 0           # rack-outage events
+    n_straggler_attempts: int = 0      # dispatched attempts with slowdown > 1
+    straggler_extra_h: float = 0.0     # wall time added by straggler stretch
+    # node-hours held down by COMPLETED rack outages of each rack (the
+    # correlated-failure attribution axis; independent-fault downtime
+    # stays in node_downtime_h only)
+    rack_downtime_h: dict[str, float] = \
+        dataclasses.field(default_factory=dict)
 
     @property
     def mean_util(self) -> float:
@@ -130,6 +145,25 @@ class SimResult:
         Equals ``wastage_gbh`` when the trace carries no usage curves.
         """
         return sum(o.tw_gbh for o in self.outcomes)
+
+    @property
+    def oom_wastage_gbh(self) -> float:
+        """GB·h burned by OOM kills (underprediction cost)."""
+        return sum(o.oom_gbh for o in self.outcomes)
+
+    @property
+    def interruption_wastage_gbh(self) -> float:
+        """GB·h burned by crashes/preemptions (lost reservation only —
+        checkpoint-retained work is charged as headroom, not here)."""
+        return sum(o.interruption_gbh for o in self.outcomes)
+
+    @property
+    def failure_wastage_gbh(self) -> float:
+        """Total failure-caused waste (OOM + interruption GB·h): the one
+        axis on which failure-handling strategies compete (Ponder-style
+        comparison — headroom waste belongs to the sizing method, failure
+        waste to the strategy x sizing interaction)."""
+        return self.oom_wastage_gbh + self.interruption_wastage_gbh
 
     @property
     def total_runtime_h(self) -> float:

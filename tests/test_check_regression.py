@@ -1,0 +1,128 @@
+"""The CI regression gate (benchmarks/check_regression.py): path
+resolution incl. list-element selectors, every bound kind, and the
+end-to-end pass/fail contract against the committed baselines."""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from benchmarks.check_regression import RULES, check_file, resolve
+
+REPO = Path(__file__).resolve().parent.parent
+
+DOC = {
+    "a": {"b": 3.0},
+    "frontier": [
+        {"mix": "homo", "policy": "fifo", "makespan_h": 2.0},
+        {"mix": "het", "policy": "fifo", "makespan_h": 5.0},
+    ],
+    "flag": True,
+}
+
+
+def test_resolve_dotted_and_list_selector():
+    assert resolve(DOC, "a.b") == 3.0
+    assert resolve(DOC, "frontier[mix=het,policy=fifo].makespan_h") == 5.0
+    with pytest.raises(KeyError):
+        resolve(DOC, "a.missing")
+    with pytest.raises(KeyError, match="0 elements"):
+        resolve(DOC, "frontier[mix=nope].makespan_h")
+
+
+def _check(rules, fresh, base):
+    saved = RULES.get("X.json")
+    RULES["X.json"] = rules
+    try:
+        return check_file("X.json", fresh, base)
+    finally:
+        if saved is None:
+            del RULES["X.json"]
+        else:
+            RULES["X.json"] = saved
+
+
+def test_bound_kinds():
+    # absolute floor / ceiling on the fresh value
+    assert _check([{"path": "a.b", "min": 2.0}], DOC, {}) == []
+    assert _check([{"path": "a.b", "min": 4.0}], DOC, {}) != []
+    assert _check([{"path": "a.b", "max": 4.0}], DOC, {}) == []
+    assert _check([{"path": "a.b", "max": 2.0}], DOC, {}) != []
+    # equals (booleans)
+    assert _check([{"path": "flag", "equals": True}], DOC, {}) == []
+    assert _check([{"path": "flag", "equals": False}], DOC, {}) != []
+    # relative vs the baseline
+    base = {"a": {"b": 2.0}}
+    assert _check([{"path": "a.b", "max_growth": 0.6}], DOC, base) == []
+    assert _check([{"path": "a.b", "max_growth": 0.4}], DOC, base) != []
+    base = {"a": {"b": 4.0}}
+    assert _check([{"path": "a.b", "max_drop": 0.5}], DOC, base) == []
+    assert _check([{"path": "a.b", "max_drop": 0.1}], DOC, base) != []
+    # a path the fresh output stopped emitting is itself a failure
+    assert _check([{"path": "gone", "min": 0.0}], DOC, {}) != []
+
+
+def test_zero_growth_pins_deterministic_counts():
+    # the dispatch-count contract: max_growth 0.0 means "may not grow"
+    fresh = {"n": 29}
+    assert _check([{"path": "n", "max_growth": 0.0}], fresh, {"n": 29}) == []
+    assert _check([{"path": "n", "max_growth": 0.0}], fresh, {"n": 28}) != []
+    assert _check([{"path": "n", "max_growth": 0.0}], fresh, {"n": 30}) == []
+
+
+def test_committed_baselines_satisfy_their_own_rules():
+    """The repo must never commit a baseline that already violates an
+    absolute bound — otherwise the gate is red on a clean checkout."""
+    for name, rules in RULES.items():
+        path = REPO / name
+        assert path.exists(), f"committed baseline {name} missing"
+        with open(path) as f:
+            doc = json.load(f)
+        relative = {"max_growth", "max_drop"}
+        absolute_rules = [r for r in rules
+                          if not (relative & set(r))]
+        problems = _check(absolute_rules, doc, doc)
+        assert problems == [], problems
+
+
+def test_cli_exit_codes(tmp_path):
+    env_cmd = [sys.executable, "-m", "benchmarks.check_regression"]
+    # identical fresh == baseline: green
+    fresh = tmp_path / "fresh"
+    fresh.mkdir()
+    for name in RULES:
+        src = REPO / name
+        (fresh / Path(name).name).write_text(src.read_text())
+    ok = subprocess.run(env_cmd + ["--fresh-dir", str(fresh),
+                                   "--baseline-dir", str(REPO)],
+                        cwd=REPO, capture_output=True, text=True)
+    assert ok.returncode == 0, ok.stdout + ok.stderr
+    # a missing fresh file fails the gate
+    missing = subprocess.run(
+        env_cmd + ["--fresh-dir", str(tmp_path / "empty"),
+                   "--baseline-dir", str(REPO)],
+        cwd=REPO, capture_output=True, text=True)
+    assert missing.returncode == 1
+    assert "did not emit" in missing.stderr
+    # unknown file names are a usage error
+    bad = subprocess.run(env_cmd + ["no_rules_for_this.json"], cwd=REPO,
+                         capture_output=True, text=True)
+    assert bad.returncode == 2
+
+
+def test_update_baselines_copies_fresh(tmp_path):
+    fresh = tmp_path / "fresh"
+    base = tmp_path / "base"
+    fresh.mkdir()
+    (fresh / "BENCH_failure.json").write_text(json.dumps(
+        {"headline": {"crash_aware_beats_retry_same": True,
+                      "best_margin_frac": 0.5}}))
+    r = subprocess.run(
+        [sys.executable, "-m", "benchmarks.check_regression",
+         "--fresh-dir", str(fresh), "--baseline-dir", str(base),
+         "--update-baselines", "BENCH_failure.json"],
+        cwd=REPO, capture_output=True, text=True)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert json.load(open(base / "BENCH_failure.json"))[
+        "headline"]["best_margin_frac"] == 0.5
