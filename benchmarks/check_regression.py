@@ -67,6 +67,19 @@ RULES: dict[str, list[dict]] = {
         {"path": "headline.crash_aware_beats_retry_same", "equals": True},
         {"path": "headline.best_margin_frac", "min": 0.0},
     ],
+    "BENCH_durability.json": [
+        # the acceptance contract: EVERY warm (journal-replay) resume
+        # must reproduce the uninterrupted SimResult bitwise, whatever
+        # byte the kill landed on
+        {"path": "headline.all_warm_resumes_bitwise", "equals": True},
+        {"path": "headline.n_kill_points", "min": 8},
+        # cold re-execution must still finish every task
+        {"path": "cold.all_tasks_completed", "equals": True},
+        # replay volume and re-burned GB·h are deterministic at fixed
+        # seed; bound their growth (wall times stay ungated — CI noise)
+        {"path": "warm.total_replayed_steps", "max_growth": 0.25},
+        {"path": "cold.mean_reburn_gbh", "max_growth": 0.50},
+    ],
     "results/bench_results.json": [
         # decision dispatches may not grow: each cluster ready wave stays
         # ONE fused launch per pool

@@ -1,0 +1,176 @@
+"""Durability benchmark: seeded kill/resume sweep over a journaled
+cluster run, measuring what a crash actually costs (PR 6 tentpole,
+part 4).
+
+    PYTHONPATH=src python -m benchmarks.durability_bench [--scale 0.05]
+                          [--kills 8] [--out BENCH_durability.json]
+
+One complete journaled run (Sizey on the failure-injected event engine)
+is the baseline; :mod:`tests.chaos` then kills it at ``--kills`` seeded
+byte offsets — step boundaries, mid-step orphan rows and torn final
+lines alike — and resumes each cut both ways:
+
+  * ``warm`` (journal replay): repair + snapshot restore + WAL-tail
+    replay. Reports the recovery wall time (repair+replay, the restart
+    latency a crashed service pays) and the replayed step count, and
+    asserts the resumed run's SimResult is *bitwise* the uninterrupted
+    one — the headline ``all_warm_resumes_bitwise``.
+  * ``cold`` (re-execution): everything running at the crash is
+    re-entered through the failure strategy and re-run. Reports the
+    re-burned reservation GB·h (``reburn_gbh`` = resumed total waste
+    minus baseline; can be negative under checkpoint+temporal, where a
+    forced re-entry lands on a tighter sizing) and the makespan stretch.
+
+Gated in ``benchmarks.check_regression``: the bitwise headline (exact),
+cold-resume task completion (exact), and warm replay volume (growth-
+bounded). Wall times are reported but never gated — CI runners are
+noisy.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir,
+                                "tests"))
+
+from benchmarks._util import dump_json
+from chaos import (assert_results_equal, kill_at, kill_points,
+                   run_journaled)
+
+from repro.baselines.sizey_method import SizeyMethod
+from repro.workflow import generate_workflow
+from repro.workflow.journal import recover_run
+
+CAP_GB = 64.0
+N_COLD = 3          # cold re-execution cells (slower: no replay shortcut)
+
+
+def _method_factory(path):
+    return SizeyMethod(machine_cap_gb=CAP_GB, persist_path=path)
+
+
+def run(scale: float = 0.05, workflow: str = "eager", kills: int = 8,
+        seed: int = 0, out_path: str = "BENCH_durability.json") -> dict:
+    trace = generate_workflow(workflow, seed=seed, scale=scale,
+                              machine_cap_gb=CAP_GB)
+    kw = dict(n_nodes=4, fail_rate_per_node_h=0.05, straggler_rate=0.1,
+              fail_seed=seed)
+    report: dict = {"workflow": workflow, "scale": scale, "seed": seed,
+                    "n_tasks": len(trace.tasks)}
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "run.jsonl")
+        t0 = time.perf_counter()
+        baseline = run_journaled(trace, _method_factory, path,
+                                 snapshot_every=16, **kw)
+        base_wall = time.perf_counter() - t0
+        size = os.path.getsize(path)
+        report["baseline"] = {
+            "tw_gbh": baseline.temporal_wastage_gbh,
+            "wastage_gbh": baseline.wastage_gbh,
+            "makespan_h": baseline.cluster.makespan_h,
+            "journal_bytes": size,
+            "wall_s": base_wall,
+        }
+        cuts = kill_points(path, kills, seed=seed)
+
+        warm_cells, all_bitwise, total_replayed = [], True, 0
+        for cut in cuts:
+            scratch = kill_at(path, cut, os.path.join(d, "warm.jsonl"))
+            t0 = time.perf_counter()
+            eng = recover_run(scratch, trace, _method_factory,
+                              snapshot_every=16)
+            recovery_wall = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            res = eng.run()
+            resume_wall = time.perf_counter() - t0
+            try:
+                assert_results_equal(baseline, res)
+                bitwise = True
+            except AssertionError:
+                bitwise = False
+            all_bitwise &= bitwise
+            total_replayed += res.cluster.n_replayed_steps
+            warm_cells.append({
+                "cut_byte": cut, "cut_frac": cut / size,
+                "bitwise": bitwise,
+                "replayed_steps": res.cluster.n_replayed_steps,
+                "recovery_wall_s": recovery_wall,
+                "resume_wall_s": resume_wall,
+            })
+            print(f"durability_bench/warm,cut={cut},"
+                  f"frac={cut / size:.2f},bitwise={bitwise},"
+                  f"replayed={res.cluster.n_replayed_steps},"
+                  f"recovery_s={recovery_wall:.3f}")
+
+        # cold re-execution: spread N_COLD cells across the cut range
+        cold_cells, cold_completed = [], True
+        stride = max(1, len(cuts) // N_COLD)
+        for cut in cuts[::stride][:N_COLD]:
+            scratch = kill_at(path, cut, os.path.join(d, "cold.jsonl"))
+            t0 = time.perf_counter()
+            eng = recover_run(scratch, trace, _method_factory,
+                              resume="cold", snapshot_every=16)
+            res = eng.run()
+            wall = time.perf_counter() - t0
+            completed = (len(res.outcomes) == len(baseline.outcomes)
+                         and res.cluster.n_aborted
+                         == baseline.cluster.n_aborted)
+            cold_completed &= completed
+            cold_cells.append({
+                "cut_byte": cut, "cut_frac": cut / size,
+                "completed": completed,
+                "reburn_gbh": res.temporal_wastage_gbh - baseline.temporal_wastage_gbh,
+                "makespan_stretch_h": res.cluster.makespan_h
+                - baseline.cluster.makespan_h,
+                "wall_s": wall,
+            })
+            print(f"durability_bench/cold,cut={cut},"
+                  f"frac={cut / size:.2f},completed={completed},"
+                  f"reburn_gbh={res.temporal_wastage_gbh - baseline.temporal_wastage_gbh:.2f}")
+
+    report["warm"] = {
+        "cells": warm_cells,
+        "total_replayed_steps": total_replayed,
+        "mean_recovery_wall_s": sum(c["recovery_wall_s"]
+                                    for c in warm_cells) / len(warm_cells),
+    }
+    report["cold"] = {
+        "cells": cold_cells,
+        "all_tasks_completed": cold_completed,
+        "mean_reburn_gbh": sum(c["reburn_gbh"] for c in cold_cells)
+        / len(cold_cells),
+    }
+    report["headline"] = {
+        "all_warm_resumes_bitwise": all_bitwise,
+        "n_kill_points": len(cuts),
+    }
+    print(f"durability_bench/headline,"
+          f"all_warm_resumes_bitwise={all_bitwise},"
+          f"n_kill_points={len(cuts)},"
+          f"total_replayed_steps={total_replayed},"
+          f"mean_reburn_gbh={report['cold']['mean_reburn_gbh']:.2f}")
+
+    if out_path:
+        dump_json(out_path, report)
+        print(f"# wrote {out_path}")
+    return report
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.05)
+    ap.add_argument("--workflow", default="eager")
+    ap.add_argument("--kills", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_durability.json")
+    args = ap.parse_args()
+    run(scale=args.scale, workflow=args.workflow, kills=args.kills,
+        seed=args.seed, out_path=args.out)
+
+
+if __name__ == "__main__":
+    main()

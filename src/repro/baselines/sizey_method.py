@@ -26,8 +26,10 @@ from __future__ import annotations
 
 import math
 
+import numpy as np
+
 from repro.core import SizeyConfig
-from repro.core.predictor import SizeyPredictor
+from repro.core.predictor import SizeyPredictor, SizingDecision
 from repro.core.provenance import ProvenanceDB
 from repro.workflow.accounting import (DEFAULT_CHECKPOINT_FRAC,
                                        FAILURE_STRATEGIES)
@@ -176,3 +178,102 @@ class SizeyMethod:
         """Task aborted (cap/attempt limit): drop its pending decision so
         the in-flight map cannot grow without bound."""
         self._pending.pop(id(task), None)
+
+    # ----------------------------------------------------- durability hooks
+    # The cluster engine's journal (repro.workflow.journal) persists the
+    # method-side state that seeds cannot re-derive: the crash-aware
+    # counters (export_state / restore_state, journaled once per step) and
+    # the in-flight sizing decisions of dispatched-but-unfinished attempts
+    # (export_pending / restore_pending, journaled with each sizing wave
+    # and each snapshot). Decisions round-trip through JSON bitwise: every
+    # array is float32, and a float32 value survives the float64 JSON
+    # detour exactly.
+
+    def export_state(self) -> dict:
+        """Crash-aware sizing counters (JSON-safe)."""
+        return {"crash_events": self._crash_events,
+                "exposure_h": self._exposure_h,
+                "runtime_sum_h": self._runtime_sum_h,
+                "n_completed": self._n_completed}
+
+    def restore_state(self, state: dict) -> None:
+        self._crash_events = int(state["crash_events"])
+        self._exposure_h = float(state["exposure_h"])
+        self._runtime_sum_h = float(state["runtime_sum_h"])
+        self._n_completed = int(state["n_completed"])
+
+    def export_pending(self, task: TaskInstance) -> dict | None:
+        """In-flight decision for ``task`` as a JSON-safe blob (None when
+        the task has no pending decision)."""
+        decision = self._pending.get(id(task))
+        if decision is None:
+            return None
+        if self.temporal:
+            return {"kind": "temporal",
+                    "task_type": decision.task_type,
+                    "machine": decision.machine,
+                    "boundaries": [float(b) for b in decision.boundaries],
+                    "seg_decisions": [_decision_to_json(d)
+                                      for d in decision.seg_decisions],
+                    "plan": [[float(e), float(g)]
+                             for e, g in decision.plan.segments]}
+        return _decision_to_json(decision)
+
+    def restore_pending(self, task: TaskInstance, blob: dict) -> None:
+        """Rebuild the in-flight decision of ``task`` from a journal blob
+        (recovery: later retries / completions of the attempt must see the
+        decision it was sized with)."""
+        if blob.get("kind") == "temporal":
+            from repro.core.temporal.predictor import TemporalDecision
+            from repro.core.temporal.segments import ReservationPlan
+            decision = TemporalDecision(
+                task_type=blob["task_type"], machine=blob["machine"],
+                boundaries=tuple(float(b) for b in blob["boundaries"]),
+                seg_decisions=[_decision_from_json(d)
+                               for d in blob["seg_decisions"]],
+                plan=ReservationPlan(tuple(
+                    (float(e), float(g)) for e, g in blob["plan"])))
+        else:
+            decision = _decision_from_json(blob)
+        self._pending[id(task)] = decision
+
+
+def _arr_to_json(arr) -> dict | None:
+    if arr is None:
+        return None
+    arr = np.asarray(arr)
+    return {"dtype": str(arr.dtype), "a": [float(v) for v in arr.ravel()]}
+
+
+def _arr_from_json(d: dict | None):
+    if d is None:
+        return None
+    return np.asarray(d["a"], dtype=np.dtype(d["dtype"]))
+
+
+def _decision_to_json(d: SizingDecision) -> dict:
+    return {"kind": "peak", "task_type": d.task_type, "machine": d.machine,
+            "features": [float(f) for f in d.features], "source": d.source,
+            "allocation_gb": float(d.allocation_gb),
+            "user_preset_gb": float(d.user_preset_gb),
+            "machine_cap_gb": float(d.machine_cap_gb),
+            "model_preds": _arr_to_json(d.model_preds),
+            "raq": _arr_to_json(d.raq),
+            "weights": _arr_to_json(d.weights),
+            "agg_pred_gb": float(d.agg_pred_gb),
+            "offset_gb": float(d.offset_gb),
+            "offset_idx": int(d.offset_idx)}
+
+
+def _decision_from_json(blob: dict) -> SizingDecision:
+    return SizingDecision(
+        task_type=blob["task_type"], machine=blob["machine"],
+        features=tuple(float(f) for f in blob["features"]),
+        source=blob["source"], allocation_gb=blob["allocation_gb"],
+        user_preset_gb=blob["user_preset_gb"],
+        machine_cap_gb=blob["machine_cap_gb"],
+        model_preds=_arr_from_json(blob["model_preds"]),
+        raq=_arr_from_json(blob["raq"]),
+        weights=_arr_from_json(blob["weights"]),
+        agg_pred_gb=blob["agg_pred_gb"], offset_gb=blob["offset_gb"],
+        offset_idx=blob["offset_idx"])

@@ -29,6 +29,8 @@ import dataclasses
 import functools
 import json
 import os
+import tempfile
+import warnings
 from typing import Iterator
 
 import jax
@@ -39,6 +41,54 @@ INITIAL_CAP = 128
 # doubling (not x4) keeps at most 2x padding overhead in every masked
 # kernel over the buffers while still bounding compiles at O(log history)
 GROWTH = 2
+
+
+def read_jsonl_lines(path: str) -> tuple[list[str], bool]:
+    """Read a checkpoint JSONL as raw lines, tolerating a torn FINAL line
+    (the one failure mode of a crash mid-append on a POSIX filesystem:
+    appends are sequential, so only the last record can be partial).
+    Returns ``(intact_lines, truncated)``. A malformed line anywhere BUT
+    the end is real corruption and raises — silently skipping it would
+    desynchronize the predictor history from the journal."""
+    with open(path) as f:
+        lines = [ln for ln in f.read().splitlines() if ln.strip()]
+    truncated = False
+    if lines:
+        try:
+            json.loads(lines[-1])
+        except json.JSONDecodeError:
+            lines = lines[:-1]
+            truncated = True
+    for i, ln in enumerate(lines):
+        try:
+            json.loads(ln)
+        except json.JSONDecodeError as e:
+            raise ValueError(
+                f"{path}: corrupt (non-final) checkpoint line {i + 1}: "
+                f"{e}") from None
+    return lines, truncated
+
+
+def atomic_rewrite_jsonl(path: str, lines: list[str]) -> None:
+    """Replace ``path`` with ``lines`` atomically (write-temp + fsync +
+    rename): readers — and a recovery racing a crash — see either the old
+    file or the complete new one, never a torn intermediate."""
+    d = os.path.dirname(os.path.abspath(path)) or "."
+    fd, tmp = tempfile.mkstemp(dir=d, prefix=os.path.basename(path) + ".",
+                               suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            for ln in lines:
+                f.write(ln + "\n")
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
 
 
 @dataclasses.dataclass
@@ -246,20 +296,24 @@ class ProvenanceDB:
                     np.asarray([r["runtime_h"] for r in rows], np.float32))
 
     def _read_jsonl(self, path: str) -> Iterator[tuple[str, object]]:
-        with open(path) as f:
-            for line in f:
-                line = line.strip()
-                if not line:
-                    continue
-                d = json.loads(line)
-                kind = d.pop("kind", None)
-                if kind is None or kind == "task":
-                    d["features"] = tuple(d["features"])
-                    yield "task", TaskRecord(**d)
-                elif kind == "log":
-                    yield "log", d
-                else:
-                    yield kind, d
+        lines, truncated = read_jsonl_lines(path)
+        if truncated:
+            # a crash tore the last append mid-line; the intact prefix is
+            # a consistent checkpoint (appends are sequential), so restore
+            # from it — loudly, because one record was lost
+            warnings.warn(f"{path}: dropped a torn final checkpoint line "
+                          f"(crash mid-append); restoring from the intact "
+                          f"prefix", RuntimeWarning, stacklevel=2)
+        for line in lines:
+            d = json.loads(line)
+            kind = d.pop("kind", None)
+            if kind is None or kind == "task":
+                d["features"] = tuple(d["features"])
+                yield "task", TaskRecord(**d)
+            elif kind == "log":
+                yield "log", d
+            else:
+                yield kind, d
 
     def pool(self, task_type: str, machine: str) -> _PoolBuffers:
         key = (task_type, machine)

@@ -1,1 +1,5 @@
 from repro.serving.engine import ServeEngine, Request
+from repro.serving.scheduler_service import (AdmissionError,
+                                             SchedulerService,
+                                             TransientRejection,
+                                             WorkflowHandle)

@@ -8,5 +8,7 @@ from repro.workflow.accounting import (FAILURE_STRATEGIES, MAX_ATTEMPTS,
                                        AttemptLedger, TaskOutcome)
 from repro.workflow.generators import WORKFLOWS, generate_workflow
 from repro.workflow.simulator import ClusterMetrics, SimResult, simulate
-from repro.workflow.cluster import (Node, NodeSpec, node_specs_from_caps,
+from repro.workflow.cluster import (ClusterEngine, Node, NodeSpec,
+                                    node_specs_from_caps,
                                     node_specs_from_racks, simulate_cluster)
+from repro.workflow.journal import Journal, recover_run

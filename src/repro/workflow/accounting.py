@@ -31,11 +31,15 @@ strategy, so the sizing comparison stays apples-to-apples:
     since the last checkpoint (``interruption_gbh``) and the mere
     *headroom* for the retained prefix, and the re-run executes only the
     remaining ``1 - completed_frac`` of the task. Retention applies to
-    flat attempts that would have succeeded (a doomed attempt was running
+    attempts that would have succeeded (a doomed attempt was running
     over-limit — its "progress" is an artifact, so it burns in full, and
     an OOM kill always restarts from scratch: the bigger-allocation rerun
-    re-executes everything). Temporal (multi-segment-plan) attempts never
-    retain either — a plan is a whole-runtime schedule, so it restarts.
+    re-executes everything). A *temporal* (multi-segment-plan) attempt
+    retains up to the last plan segment boundary it completed: the plan
+    survives the interruption and the re-run resumes the reservation
+    schedule from that boundary (``start_alloc_gb`` is the plan value
+    there, RESIZE events cover only the remaining boundaries) instead of
+    re-running — and re-burning — the whole plan from segment 0.
 
 Every ledger splits its waste by *cause*: ``oom_gbh`` (burned by OOM
 kills) + ``interruption_gbh`` (burned by crashes/preemptions, the truly
@@ -207,9 +211,15 @@ class AttemptLedger:
 
     @property
     def start_alloc_gb(self) -> float:
-        """What dispatch actually reserves: the plan's first segment for a
-        temporal attempt, the flat allocation otherwise."""
-        return self.plan.start_gb if self.plan is not None else self.alloc_gb
+        """What dispatch actually reserves: the plan's value at the resume
+        point for a temporal attempt (its FIRST segment when nothing is
+        retained — checkpoint retention resumes mid-plan), the flat
+        allocation otherwise."""
+        if self.plan is not None:
+            if self.completed_frac > 0.0:
+                return self.plan.value_at(self.completed_frac)
+            return self.plan.start_gb
+        return self.alloc_gb
 
     @property
     def violation_frac(self) -> float | None:
@@ -228,13 +238,20 @@ class AttemptLedger:
                 self._violation = self.plan.first_violation(curve)
         return self._violation
 
-    def _reserved_gbh(self, upto_frac: float) -> float:
-        """GB·h reserved over the first ``upto_frac`` of the (straggler-
-        stretched) runtime under the current attempt's reservation (plan or
-        flat). ``upto_frac`` is a fraction of *nominal* runtime; a straggler
-        holds the same reservation ``slowdown`` times longer in wall time."""
+    def _reserved_gbh(self, upto_frac: float, frm: float = 0.0) -> float:
+        """GB·h reserved over the ``[frm, upto_frac]`` window of the
+        (straggler-stretched) runtime under the current attempt's
+        reservation (plan or flat). Fractions are of *nominal* runtime; a
+        straggler holds the same reservation ``slowdown`` times longer in
+        wall time. ``frm > 0`` is the mid-plan resume window (a retained
+        attempt never re-reserves its completed prefix)."""
         if self.plan is not None:
-            return self.plan.gbh(self.task.runtime_h, upto_frac) \
+            gbh = self.plan.gbh(self.task.runtime_h, upto_frac)
+            if frm > 0.0:
+                gbh -= self.plan.gbh(self.task.runtime_h, frm)
+            return gbh * self.slowdown
+        if frm > 0.0:
+            return self.alloc_gb * (upto_frac - frm) * self.task.runtime_h \
                 * self.slowdown
         return self.alloc_gb * upto_frac * self.task.runtime_h \
             * self.slowdown
@@ -280,7 +297,10 @@ class AttemptLedger:
             return self.task.runtime_h * self.slowdown \
                 * (1.0 - self.completed_frac)
         if self.plan is not None:
-            return self.violation_frac * self.task.runtime_h * self.slowdown
+            # a resumed plan runs [completed_frac, violation]; cf == 0.0
+            # keeps the subtraction bitwise-inert
+            return max(self.violation_frac - self.completed_frac, 0.0) \
+                * self.task.runtime_h * self.slowdown
         return self.ttf * self.task.runtime_h * self.slowdown
 
     # ------------------------------------------------------------- records
@@ -296,11 +316,14 @@ class AttemptLedger:
         """
         if self.plan is not None:
             # temporal OOM: everything reserved up to the violation burned
+            # (from the resume point for a retained plan; cf == 0.0 keeps
+            # the default path bitwise)
             frac = self.violation_frac
-            burn = self._reserved_gbh(frac)
+            burn = self._reserved_gbh(frac, self.completed_frac)
             self.wastage_gbh += burn
             self.tw_gbh += burn
-            self.runtime_h += frac * self.task.runtime_h * self.slowdown
+            self.runtime_h += max(frac - self.completed_frac, 0.0) \
+                * self.task.runtime_h * self.slowdown
         else:
             burn = self.alloc_gb * self.ttf * self.task.runtime_h \
                 * self.slowdown
@@ -331,36 +354,63 @@ class AttemptLedger:
 
         Under ``retry_same`` / ``retry_scaled`` the whole partial
         reservation is burned (nothing useful survives the kill) and the
-        attempt re-runs in full. Under ``checkpoint`` a flat attempt that
-        would have succeeded retains the prefix up to its last checkpoint:
-        only the since-checkpoint reservation is truly lost
-        (``interruption_gbh``); the retained prefix is charged its
-        over-provisioning headroom, and ``completed_frac`` advances so the
-        re-run executes only the suffix. Temporal plans and doomed
-        attempts never retain (see module docstring)."""
+        attempt re-runs in full. Under ``checkpoint`` an attempt that
+        would have succeeded retains completed work: a flat attempt the
+        prefix up to its last ``checkpoint_frac`` checkpoint, a temporal
+        attempt the prefix up to the last *plan segment boundary* it
+        passed (segment boundaries are the plan's natural checkpoints —
+        the reservation changes there anyway). Only the since-checkpoint
+        reservation is truly lost (``interruption_gbh``); the retained
+        prefix is charged its over-provisioning headroom, and
+        ``completed_frac`` advances so the re-run executes only the
+        suffix. A retained temporal attempt KEEPS its plan and resumes
+        the reservation schedule mid-plan (``start_alloc_gb`` /
+        ``_reserved_gbh`` read from ``completed_frac``). Doomed attempts
+        never retain (see module docstring)."""
         retained = self.completed_frac
-        if (self.failure_strategy == "checkpoint" and self.plan is None
+        if (self.failure_strategy == "checkpoint"
                 and self.checkpoint_frac > 0 and self.will_succeed):
             wall_rt = self.task.runtime_h * self.slowdown
             pos = self.completed_frac + elapsed_h / max(wall_rt, 1e-12)
-            retained = min(math.floor(pos / self.checkpoint_frac)
-                           * self.checkpoint_frac, 1.0)
-            retained = max(retained, self.completed_frac)
+            if self.plan is None:
+                retained = min(math.floor(pos / self.checkpoint_frac)
+                               * self.checkpoint_frac, 1.0)
+                retained = max(retained, self.completed_frac)
+            else:
+                # temporal: the last plan boundary reached (1.0 is the plan
+                # end, not a resumable boundary)
+                for end, _gb in self.plan.segments[:-1]:
+                    if self.completed_frac < end <= pos + 1e-12:
+                        retained = end
         if retained > self.completed_frac:
             wall_rt = self.task.runtime_h * self.slowdown
             retained_dt = (retained - self.completed_frac) * wall_rt
-            lost_dt = max(elapsed_h - retained_dt, 0.0)
-            lost = self.alloc_gb * lost_dt
             # the retained prefix DID useful work: charge only headroom
             # (peak-based for wastage_gbh, curve-integrated for tw_gbh —
             # the same split record_success uses)
             used_gbh = (self.task.usage_gbh(retained)
                         - self.task.usage_gbh(self.completed_frac)) \
                 * self.slowdown
-            self.wastage_gbh += lost + (self.alloc_gb
-                                        - self.task.actual_peak_gb) \
-                * retained_dt
-            self.tw_gbh += lost + (self.alloc_gb * retained_dt - used_gbh)
+            if self.plan is not None:
+                # reservation followed the plan: the retained window is
+                # charged plan-minus-used, the lost [retained, pos] window
+                # burned in full (a temporal attempt's wastage IS its
+                # integral — same convention as record_success)
+                pos = min(self.completed_frac
+                          + elapsed_h / max(wall_rt, 1e-12), 1.0)
+                res_retained = self._reserved_gbh(retained,
+                                                  self.completed_frac)
+                lost = self._reserved_gbh(pos, retained)
+                self.wastage_gbh += lost + (res_retained - used_gbh)
+                self.tw_gbh += lost + (res_retained - used_gbh)
+            else:
+                lost_dt = max(elapsed_h - retained_dt, 0.0)
+                lost = self.alloc_gb * lost_dt
+                self.wastage_gbh += lost + (self.alloc_gb
+                                            - self.task.actual_peak_gb) \
+                    * retained_dt
+                self.tw_gbh += lost + (self.alloc_gb * retained_dt
+                                       - used_gbh)
             if charge_interruption:
                 self.interruption_gbh += lost
             self.completed_frac = retained
@@ -407,6 +457,51 @@ class AttemptLedger:
         self._violation = False
         return self.alloc_gb
 
+    def apply_retry_alloc(self, alloc_gb: float) -> float:
+        """Journal-replay variant of :meth:`apply_retry`: apply a
+        previously *recorded* retry allocation without consulting the
+        method (whose mutable pool state has moved on since the decision
+        was journaled). Same ladder semantics: clamp, count the attempt,
+        drop any plan."""
+        self.alloc_gb = min(float(alloc_gb), self.cap_gb)
+        self.attempts += 1
+        self.plan = None
+        self._violation = False
+        return self.alloc_gb
+
+    # -------------------------------------------------------- durability
+    _STATE_FIELDS = ("first_alloc_gb", "cap_gb", "ttf", "alloc_gb",
+                     "attempts", "failures", "wastage_gbh", "runtime_h",
+                     "aborted", "interruptions", "tw_gbh", "grow_failures",
+                     "failure_strategy", "checkpoint_frac", "completed_frac",
+                     "slowdown", "oom_gbh", "interruption_gbh",
+                     "refresh_pending")
+
+    def to_state(self) -> dict:
+        """JSON-safe snapshot of the ledger (task carried by key — the
+        trace is the caller's to re-resolve). Floats round-trip exactly
+        through ``json`` (shortest-repr), so a restored ledger is bitwise
+        the live one."""
+        state = {f: getattr(self, f) for f in self._STATE_FIELDS}
+        state["task"] = list(self.task.key)
+        state["plan"] = ([list(s) for s in self.plan.segments]
+                        if self.plan is not None else None)
+        return state
+
+    @classmethod
+    def from_state(cls, task: TaskInstance, state: dict) -> "AttemptLedger":
+        led = cls(task, state["first_alloc_gb"], state["cap_gb"],
+                  state["ttf"], failure_strategy=state["failure_strategy"],
+                  checkpoint_frac=state["checkpoint_frac"])
+        for f in cls._STATE_FIELDS:
+            setattr(led, f, state[f])
+        if state["plan"] is not None:
+            led.plan = ReservationPlan(
+                tuple((float(e), float(g)) for e, g in state["plan"]))
+        # _violation stays un-computed: the cache is re-derived on demand
+        # from (plan, curve), both of which round-trip exactly
+        return led
+
     def record_success(self) -> None:
         # wall time of the successful run: straggler-stretched, shrunk to
         # the un-retained suffix under checkpoint retention (both factors
@@ -419,7 +514,7 @@ class AttemptLedger:
         else:
             used = self.task.usage_gbh() * self.slowdown
         if self.plan is not None:
-            tw = self._reserved_gbh(1.0) - used
+            tw = self._reserved_gbh(1.0, self.completed_frac) - used
             # a temporal attempt's "peak-based" wastage IS its integral —
             # there is no meaningful constant-reservation reading of a plan
             self.wastage_gbh += tw

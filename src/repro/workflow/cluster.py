@@ -109,7 +109,7 @@ from repro.workflow.simulator import ClusterMetrics, SimResult, SizingMethod
 from repro.workflow.trace import TaskInstance, WorkflowTrace
 
 __all__ = ["NodeSpec", "Node", "machine_label", "node_specs_from_caps",
-           "node_specs_from_racks", "simulate_cluster",
+           "node_specs_from_racks", "simulate_cluster", "ClusterEngine",
            "PLACEMENT_POLICIES", "FAILURE_STRATEGIES"]
 
 (_ARRIVE, _FINISH, _CRASH, _RECOVER, _RESIZE,
@@ -426,6 +426,1057 @@ PLACEMENT_POLICIES = {
 }
 
 
+class ClusterEngine:
+    """Stepwise, journal-able form of the event-driven cluster simulator.
+
+    One :meth:`step` is one iteration of the classic simulate-cluster
+    loop: drain every event at the next clock value (completions batched
+    into one ``complete_batch``), then run one scheduling round (size the
+    newly-ready wave, re-size ``retry_scaled`` refreshes, place, dispatch).
+    :func:`simulate_cluster` is exactly ``ClusterEngine(...).run()`` — the
+    refactor is bitwise-neutral (asserted across the existing suite).
+
+    Durability (PR 6): pass a :class:`~repro.workflow.journal.Journal` and
+    every step appends a WAL record of the method interactions that are
+    *not* re-derivable from seeds — the sized/refreshed allocations with
+    their in-flight decision blobs, OOM retry allocations (the retry
+    ladder reads the pool's mutable ``max_seen_gb``), completion keys and
+    the method's counter state — plus a compacted full-state snapshot
+    every ``Journal.snapshot_every`` steps. :meth:`recover` rebuilds a
+    mid-workflow engine from the journal: restore the last snapshot,
+    re-execute the WAL tail in *replay mode* (journaled allocations are
+    applied verbatim; completions are NOT re-observed — their provenance
+    rows are already in the warm-start prefix), then continue live.
+
+    Resume modes:
+
+      * ``"warm"`` — the journaled finish/resize events of in-flight
+        attempts are still in the restored event heap, so execution
+        continues exactly where the scheduler died: at a fixed seed the
+        final :class:`SimResult` is *bitwise* the uninterrupted run's
+        (asserted across kill points in ``tests/test_durability.py``);
+      * ``"cold"`` — the crash took the workers with the scheduler: every
+        in-flight attempt is interrupted at the recovery clock and
+        re-enters the queue through the ``failure_strategy`` machinery
+        (checkpoint retention / retry_scaled re-sizing apply to scheduler
+        crashes exactly as to node crashes). The re-burned GB·h is what
+        ``benchmarks/durability_bench.py`` measures.
+    """
+
+    def __init__(self, trace: WorkflowTrace, method: SizingMethod,
+                 ttf: float = 1.0, *, n_nodes: int = 8,
+                 node_cap_gb: float | None = None,
+                 node_specs: Sequence[NodeSpec] | None = None,
+                 policy: str = "backfill",
+                 backfill_depth: int = 32,
+                 fail_rate_per_node_h: float = 0.0,
+                 repair_h: float = 1.0,
+                 fail_seed: int = 0,
+                 rack_fail_rate_per_h: float = 0.0,
+                 rack_repair_h: float | dict[str, float] = 2.0,
+                 straggler_rate: float = 0.0,
+                 straggler_factor: float = 4.0,
+                 straggler_seed: int | None = None,
+                 journal=None):
+        if policy not in PLACEMENT_POLICIES:
+            raise ValueError(f"unknown placement policy {policy!r} "
+                             f"(have {sorted(PLACEMENT_POLICIES)})")
+        self.place = PLACEMENT_POLICIES[policy]
+        self.policy = policy
+        self.backfill_depth = backfill_depth
+        self.failure_strategy = getattr(method, "failure_strategy",
+                                        "retry_same")
+        if self.failure_strategy not in FAILURE_STRATEGIES:
+            raise ValueError(f"unknown failure strategy "
+                             f"{self.failure_strategy!r} "
+                             f"(have {FAILURE_STRATEGIES})")
+        self.checkpoint_frac = float(getattr(method, "checkpoint_frac",
+                                             DEFAULT_CHECKPOINT_FRAC))
+        if straggler_factor < 1.0:
+            raise ValueError(f"straggler_factor must be >= 1, "
+                             f"got {straggler_factor}")
+        if straggler_seed is None:
+            straggler_seed = fail_seed
+        self.trace = trace
+        self.method = method
+        self.ttf = ttf
+        self.fail_rate_per_node_h = fail_rate_per_node_h
+        self.repair_h = repair_h
+        self.fail_seed = fail_seed
+        self.rack_fail_rate_per_h = rack_fail_rate_per_h
+        self.rack_repair_h = rack_repair_h
+        self.straggler_rate = straggler_rate
+        self.straggler_factor = straggler_factor
+        self.straggler_seed = straggler_seed
+        if node_specs is None:
+            cap = trace.machine_cap_gb if node_cap_gb is None else node_cap_gb
+            specs = [NodeSpec(f"node{i:02d}", cap) for i in range(n_nodes)]
+        else:
+            specs = list(node_specs)
+            if not specs:
+                raise ValueError("node_specs must name at least one node")
+        self.specs = specs
+        self.nodes = [Node(s) for s in specs]
+        self.max_cap = max(n.cap_gb for n in self.nodes)
+        self.classes = {n.machine for n in self.nodes
+                        if n.machine is not None}
+        self.has_batch = hasattr(method, "allocate_batch")
+        self.has_plan = hasattr(method, "plan_for")
+        self.has_complete_batch = hasattr(method, "complete_batch")
+        self.has_note = hasattr(method, "note_interruption")
+        self.has_abandon = hasattr(method, "abandon")
+        # durability protocol (optional; see SizeyMethod): without the
+        # hooks, journal replay still re-applies the recorded allocations
+        # but cannot restore in-flight decision state — best-effort only
+        self.has_export_state = hasattr(method, "export_state")
+        self.has_restore_state = hasattr(method, "restore_state")
+        self.has_export_pending = hasattr(method, "export_pending")
+        self.has_restore_pending = hasattr(method, "restore_pending")
+        self.rack_names = sorted({s.rack for s in specs
+                                  if s.rack is not None})
+        self.rack_members = {r: [i for i, s in enumerate(specs)
+                                 if s.rack == r] for r in self.rack_names}
+        if rack_fail_rate_per_h > 0.0 and not self.rack_names:
+            raise ValueError("rack_fail_rate_per_h > 0 needs rack-labeled "
+                             "node_specs (node_specs_from_caps(n_racks=...) "
+                             "or node_specs_from_racks)")
+
+        self.by_key = {t.key: t for t in trace.tasks}
+        if len(self.by_key) != len(trace.tasks):
+            raise ValueError("duplicate (task_type, index) keys in trace")
+        self.indeg: dict[tuple[str, int], int] = {}
+        self.children: dict[tuple[str, int], list[TaskInstance]] = \
+            collections.defaultdict(list)
+        for t in trace.tasks:
+            live = [d for d in t.deps if d in self.by_key]
+            self.indeg[t.key] = len(live)
+            for d in live:
+                self.children[d].append(t)
+
+        self.events: list[tuple[float, int, int, object]] = []
+        self._eseq = 0
+        self.pending_arrivals = 0
+        for t in trace.tasks:
+            if self.indeg[t.key] == 0:
+                heapq.heappush(self.events, (t.arrival_h, self._next_eseq(),
+                                             _ARRIVE, t))
+                self.pending_arrivals += 1
+
+        # deterministic seeded failure schedule: one generator per node,
+        # drawn lazily (crash -> recover -> next crash), independent of
+        # event interleaving so runs are bit-reproducible. Generator
+        # STATES serialize into snapshots (bit_generator.state), so a
+        # recovered engine re-draws the identical schedule suffix.
+        self.fail_rngs = [np.random.default_rng([fail_seed, i])
+                          for i in range(len(self.nodes))]
+        if fail_rate_per_node_h > 0.0:
+            for i in range(len(self.nodes)):
+                t_crash = float(self.fail_rngs[i].exponential(
+                    1.0 / fail_rate_per_node_h))
+                heapq.heappush(self.events, (t_crash, self._next_eseq(),
+                                             _CRASH, i))
+        # rack outages draw from their own per-rack streams (3-element
+        # seed sequences: disjoint from the 2-element per-node streams
+        # above, so adding rack injection never perturbs node schedules)
+        self.rack_rngs = {r: np.random.default_rng([fail_seed, 7919, ri])
+                          for ri, r in enumerate(self.rack_names)}
+        if rack_fail_rate_per_h > 0.0:
+            for r in self.rack_names:
+                t_crash = float(self.rack_rngs[r].exponential(
+                    1.0 / rack_fail_rate_per_h))
+                heapq.heappush(self.events, (t_crash, self._next_eseq(),
+                                             _RACK_CRASH, r))
+
+        self.queue: list[_Queued] = []
+        self._qseq = 0
+        self._atok = 0   # attempt tokens (reservation + finish ids)
+        self._dtok = 0   # crash-ownership tokens: a recover event only
+        # brings a node back if it still owns the downing (rack outages
+        # and independent faults can overlap on one node)
+        self.down_token: dict[int, int] = {}
+        self.down_due: dict[int, float] = {}
+        self.running: dict[int, tuple[_Queued, Node, float]] = {}
+        self.outcomes: list[TaskOutcome] = []
+        self.delays: list[float] = []   # delays of *dispatched* tasks only
+        self.clock = self.total_reserved = self.peak_reserved = 0.0
+        self.n_waves = self.n_size_calls = self.n_aborted = 0
+        self.n_preemptions = self.n_node_failures = 0
+        self.n_resizes = self.n_grow_failures = self.n_complete_waves = 0
+        self.n_failure_events = self.n_rack_failures = 0
+        self.n_straggler_attempts = 0
+        self.straggler_extra_h = 0.0
+        self.rack_outage_node_h = {r: 0.0 for r in self.rack_names}
+        self.warned_admission = False
+        self.n_recoveries = 0
+        self.n_replayed_steps = 0
+
+        # durability plumbing
+        self._config = {
+            "ttf": ttf, "n_nodes": n_nodes, "node_cap_gb": node_cap_gb,
+            "node_specs": ([dataclasses.asdict(s) for s in node_specs]
+                           if node_specs is not None else None),
+            "policy": policy, "backfill_depth": backfill_depth,
+            "fail_rate_per_node_h": fail_rate_per_node_h,
+            "repair_h": repair_h, "fail_seed": fail_seed,
+            "rack_fail_rate_per_h": rack_fail_rate_per_h,
+            "rack_repair_h": rack_repair_h,
+            "straggler_rate": straggler_rate,
+            "straggler_factor": straggler_factor,
+            "straggler_seed": straggler_seed,
+        }
+        self._journal = None
+        self._jrec: dict | None = None     # WAL record of the LIVE step
+        self._replay: collections.deque | None = None
+        self._step_idx = 0
+        self._ended = False
+        if journal is not None:
+            self._attach_journal(journal)
+
+    # ------------------------------------------------------------ counters
+    def _next_eseq(self) -> int:
+        v = self._eseq
+        self._eseq += 1
+        return v
+
+    def _next_qseq(self) -> int:
+        v = self._qseq
+        self._qseq += 1
+        return v
+
+    def _next_atok(self) -> int:
+        v = self._atok
+        self._atok += 1
+        return v
+
+    def _next_dtok(self) -> int:
+        v = self._dtok
+        self._dtok += 1
+        return v
+
+    # ------------------------------------------------------------- helpers
+    def _rack_repair_of(self, rack: str) -> float:
+        if isinstance(self.rack_repair_h, dict):
+            try:
+                return float(self.rack_repair_h[rack])
+            except KeyError:
+                raise ValueError(f"rack_repair_h names no repair time for "
+                                 f"rack {rack!r}") from None
+        return float(self.rack_repair_h)
+
+    def _eligible(self, task: TaskInstance, node: Node) -> bool:
+        # unlabeled nodes take anything; a task whose machine label names
+        # no node class carries no affinity information (homogeneous
+        # traces keep running anywhere on a labeled cluster)
+        return (node.machine is None or task.machine == node.machine
+                or task.machine not in self.classes)
+
+    def _cap_for(self, task: TaskInstance) -> float:
+        """Largest node this task could ever be placed on: the clamp/abort
+        capacity of its ledger. 0.0 when no node is eligible (the request
+        is then admission-rejected whatever its size)."""
+        return max((n.cap_gb for n in self.nodes
+                    if self._eligible(task, n)), default=0.0)
+
+    def _priority(self, task: TaskInstance) -> int:
+        """DAG criticality: how many instances this one gates."""
+        return len(self.children.get(task.key, ()))
+
+    def _jev(self, *row) -> None:
+        """Append one transition to the live step's WAL record (pure
+        observability: replay derives transitions from the event stream)."""
+        if self._jrec is not None:
+            self._jrec["ev"].append(list(row))
+
+    def _unlock_children(self, key: tuple[str, int], t: float) -> None:
+        for child in self.children[key]:
+            self.indeg[child.key] -= 1
+            if self.indeg[child.key] == 0:
+                heapq.heappush(self.events, (max(t, child.arrival_h),
+                                             self._next_eseq(), _ARRIVE,
+                                             child))
+                self.pending_arrivals += 1
+
+    def _finish_aborted(self, entry: _Queued, t: float) -> None:
+        if self.has_abandon:
+            self.method.abandon(entry.task)
+        self.outcomes.append(entry.ledger.outcome(
+            submit_h=entry.ready_h,
+            start_h=entry.start_h if entry.start_h is not None else t,
+            finish_h=t))
+        self.n_aborted += 1
+        self._jev("abort", list(entry.task.key))
+        if entry.start_h is not None:
+            self.delays.append(entry.start_h - entry.ready_h)
+        # an abort does not fail the subtree: dependents still execute, so
+        # every instance of the trace gets an outcome (serial semantics)
+        self._unlock_children(entry.task.key, t)
+
+    def _note_straggle(self, led: AttemptLedger, elapsed_h: float) -> None:
+        """Straggler overhead actually incurred: the extra wall time of
+        the ``elapsed_h`` the attempt really ran (a killed straggler is
+        charged only its elapsed stretch, not the planned one)."""
+        if led.slowdown > 1.0:
+            self.straggler_extra_h += elapsed_h * (1.0 - 1.0 / led.slowdown)
+
+    def _interrupt(self, token: int, t: float) -> None:
+        """Kill a running attempt (crash or preemption): burn the partial
+        reservation per the failure strategy, requeue at the original FIFO
+        seq — no OOM failure. ``retry_scaled`` marks the entry for a fresh
+        sizing pass before re-dispatch; crash-aware methods observe the
+        interruption through ``note_interruption`` (live mode only —
+        replayed interruptions were already observed, and the method's
+        counters restore from the journaled state)."""
+        entry, node, started = self.running.pop(token)
+        gb = node.release(t, token)
+        self.total_reserved -= gb
+        self._note_straggle(entry.ledger, t - started)
+        entry.ledger.record_interruption(t - started)
+        if self.failure_strategy == "retry_scaled":
+            entry.ledger.refresh_pending = True
+        if self.has_note and self._replay is None:
+            self.method.note_interruption(entry.task, t - started)
+        self._jev("interrupt", list(entry.task.key))
+        self.queue.append(entry)   # keeps its original FIFO seq
+
+    def _crash_node(self, idx: int, t: float, due: float) -> int:
+        """Down one node (if up) until ``due``: interrupt its attempts,
+        take a crash-ownership token. Returns the token, or -1 if the
+        node was already down (an overlapping outage absorbed the
+        fault — the caller decides whether it extends the downtime)."""
+        node = self.nodes[idx]
+        if not node.up:
+            return -1
+        token = self._next_dtok()
+        self.down_token[idx] = token
+        self.down_due[idx] = due
+        node.crash(t)
+        self.n_node_failures += 1
+        self._jev("crash", node.name)
+        for atok_ in [k for k, (_, n, _) in self.running.items()
+                      if n is node]:
+            self._interrupt(atok_, t)
+        return token
+
+    def _recover_node(self, idx: int, token: int, t: float) -> bool:
+        """Bring a node back iff ``token`` still owns its downing."""
+        if self.down_token.get(idx) != token:
+            return False
+        del self.down_token[idx]
+        self.down_due.pop(idx, None)
+        self.nodes[idx].recover(t)
+        self._jev("recover", self.nodes[idx].name)
+        return True
+
+    # ---------------------------------------------------------------- step
+    def step(self) -> bool:
+        """Advance the engine by one event-drain + scheduling round.
+        Returns False (and journals the run's ``end`` marker) once every
+        task has an outcome."""
+        if not self.queue and not self.running \
+                and self.pending_arrivals == 0:
+            self._finish_journal()
+            return False   # all outcomes recorded (or DAG unsatisfiable)
+        rec = None
+        if self._replay is not None:
+            rec = self._replay.popleft()
+            if rec["step"] != self._step_idx:
+                raise RuntimeError(
+                    f"journal divergence: engine at step {self._step_idx}, "
+                    f"journal record is step {rec['step']}")
+        jrec = None
+        if self._journal is not None and rec is None:
+            jrec = {"rec": "step", "step": self._step_idx, "ev": [],
+                    "sized": [], "refresh": [], "retries": [], "done": []}
+        self._jrec = jrec
+        replay_retries = (collections.deque(rec["retries"])
+                          if rec is not None else None)
+        method = self.method
+        events = self.events
+        if events:
+            self.clock = events[0][0]
+            clock = self.clock
+            completed: list[tuple[_Queued, float]] = []
+            while events and events[0][0] <= clock:
+                _, _, kind, payload = heapq.heappop(events)
+                if kind == _ARRIVE:
+                    self.pending_arrivals -= 1
+                    self.queue.append(_Queued(self._next_qseq(), clock,
+                                              payload))
+                    self._jev("arrive", list(payload.key))
+                    continue
+                if kind == _RESIZE:
+                    token, seg_idx = payload
+                    if token not in self.running:
+                        continue   # attempt already killed/grow-flattened
+                    entry, node, started = self.running[token]
+                    led = entry.ledger
+                    if not led.temporal_active \
+                            or seg_idx >= len(led.plan.segments):
+                        continue   # plan flattened since scheduling
+                    new_gb = led.plan.segments[seg_idx][1]
+                    delta = new_gb - node.held_gb(token)
+                    if delta <= 0 or node.free_gb >= delta - 1e-9:
+                        self.total_reserved += node.resize(clock, token,
+                                                           new_gb)
+                        self.peak_reserved = max(self.peak_reserved,
+                                                 self.total_reserved)
+                        self.n_resizes += 1
+                        self._jev("resize", list(entry.task.key), new_gb)
+                    else:
+                        # grow failure: node too full at the boundary —
+                        # burn the partial plan integral (interruption, no
+                        # OOM accounting) and requeue at the original seq;
+                        # repeated denials flatten the plan to a constant
+                        # peak reservation (guaranteed progress)
+                        self.n_grow_failures += 1
+                        self.running.pop(token)
+                        gb = node.release(clock, token)
+                        self.total_reserved -= gb
+                        self._note_straggle(led, clock - started)
+                        led.record_grow_failure(clock - started)
+                        self._jev("grow_denied", list(entry.task.key))
+                        self.queue.append(entry)
+                    continue
+                if kind == _CRASH:
+                    self.n_failure_events += 1
+                    node_due = clock + self.repair_h
+                    token = self._crash_node(payload, clock, node_due)
+                    if token < 0 \
+                            and node_due > self.down_due[payload] + 1e-12:
+                        # already down (rack outage) but THIS fault
+                        # repairs later: take ownership so the node stays
+                        # down past the rack recover — symmetric with the
+                        # rack-takeover branch below ("latest due wins")
+                        token = self._next_dtok()
+                        self.down_token[payload] = token
+                        self.down_due[payload] = node_due
+                    if token >= 0:
+                        heapq.heappush(events, (node_due, self._next_eseq(),
+                                                _RECOVER,
+                                                (payload, token)))
+                    elif self.pending_arrivals or self.queue \
+                            or self.running:
+                        # absorbed outright (the rack outage outlasts the
+                        # fault): keep the node's crash stream alive
+                        nxt = clock + float(
+                            self.fail_rngs[payload].exponential(
+                                1.0 / self.fail_rate_per_node_h))
+                        heapq.heappush(events, (nxt, self._next_eseq(),
+                                                _CRASH, payload))
+                    continue
+                if kind == _RECOVER:
+                    idx, token = payload
+                    # the recovery is a no-op when a later rack outage
+                    # took ownership of the downing (the node then stays
+                    # down until the RACK recovers), but the node's crash
+                    # stream continues either way
+                    self._recover_node(idx, token, clock)
+                    if self.pending_arrivals or self.queue or self.running:
+                        nxt = clock + float(
+                            self.fail_rngs[idx].exponential(
+                                1.0 / self.fail_rate_per_node_h))
+                        heapq.heappush(events, (nxt, self._next_eseq(),
+                                                _CRASH, idx))
+                    continue
+                if kind == _RACK_CRASH:
+                    # correlated outage: every node of the rack is down
+                    # until the rack repairs — ONE failure event, N node
+                    # failures. A member already down from an independent
+                    # fault is taken over only when the rack repairs
+                    # LATER (its own recover goes stale and it comes back
+                    # with the rack); a fault outlasting the outage keeps
+                    # the node down past the rack repair — a node always
+                    # returns at the latest due among its outages
+                    self.n_failure_events += 1
+                    self.n_rack_failures += 1
+                    rack_due = clock + self._rack_repair_of(payload)
+                    self._jev("rack_crash", payload)
+                    # downed: (node idx, ownership token, time from which
+                    # the downtime is ATTRIBUTABLE to this rack outage)
+                    downed = []
+                    for idx in self.rack_members[payload]:
+                        token = self._crash_node(idx, clock, rack_due)
+                        if token >= 0:
+                            downed.append((idx, token, clock))
+                        elif rack_due > self.down_due[idx] + 1e-12:
+                            token = self._next_dtok()
+                            attrib_from = self.down_due[idx]
+                            self.down_token[idx] = token
+                            self.down_due[idx] = rack_due
+                            downed.append((idx, token, attrib_from))
+                    heapq.heappush(events,
+                                   (rack_due, self._next_eseq(),
+                                    _RACK_RECOVER, (payload, downed)))
+                    continue
+                if kind == _RACK_RECOVER:
+                    rack, downed = payload
+                    for idx, token, attrib_from in downed:
+                        self._recover_node(idx, token, clock)
+                        # rack-ATTRIBUTED downtime: the MARGINAL node-
+                        # hours this outage added (a taken-over member
+                        # counts only the extension past its own repair)
+                        self.rack_outage_node_h[rack] += clock - attrib_from
+                    if self.pending_arrivals or self.queue or self.running:
+                        nxt = clock + float(
+                            self.rack_rngs[rack].exponential(
+                                1.0 / self.rack_fail_rate_per_h))
+                        heapq.heappush(events, (nxt, self._next_eseq(),
+                                                _RACK_CRASH, rack))
+                    continue
+                if payload not in self.running:
+                    continue   # attempt was preempted / crash-killed
+                entry, node, started = self.running.pop(payload)
+                gb = node.release(clock, payload)
+                self.total_reserved -= gb
+                self._note_straggle(entry.ledger, clock - started)
+                if entry.ledger.will_succeed:
+                    entry.ledger.record_success()
+                    self.outcomes.append(entry.ledger.outcome(
+                        submit_h=entry.ready_h, start_h=entry.start_h,
+                        finish_h=clock))
+                    self.delays.append(entry.start_h - entry.ready_h)
+                    self._unlock_children(entry.task.key, clock)
+                    # model updates are flushed per drain: simultaneous
+                    # completions become ONE complete_batch call (one
+                    # fused observe dispatch per pool) below
+                    completed.append((entry, clock))
+                elif entry.ledger.record_failure():
+                    self._finish_aborted(entry, clock)
+                else:
+                    # the retry ladder reads mutable predictor state
+                    # (pool max_seen_gb), so replay applies the JOURNALED
+                    # allocation instead of re-asking the method
+                    if rec is not None:
+                        if not replay_retries:
+                            raise RuntimeError("journal divergence: "
+                                               "unjournaled OOM retry")
+                        rkey, ralloc = replay_retries.popleft()
+                        if tuple(rkey) != entry.task.key:
+                            raise RuntimeError(
+                                f"journal divergence: retry of "
+                                f"{entry.task.key}, journal has {rkey}")
+                        entry.ledger.apply_retry_alloc(ralloc)
+                    else:
+                        entry.ledger.apply_retry(method)
+                        if jrec is not None:
+                            jrec["retries"].append(
+                                [list(entry.task.key),
+                                 entry.ledger.alloc_gb])
+                    self.queue.append(entry)   # original FIFO seq
+            if completed:
+                self.n_complete_waves += 1
+                items = [(e.task, e.ledger.first_alloc_gb,
+                          e.ledger.attempts) for e, _ in completed]
+                if jrec is not None:
+                    jrec["done"] = [list(e.task.key) for e, _ in completed]
+                    for e, _ in completed:
+                        self._jev("complete", list(e.task.key))
+                if rec is not None:
+                    # replayed completions were observed before the crash
+                    # (their task/log/curve rows are in the warm-start
+                    # prefix): just drop the restored in-flight decisions
+                    if self.has_abandon:
+                        for e, _ in completed:
+                            method.abandon(e.task)
+                elif self.has_complete_batch:
+                    method.complete_batch(items)
+                else:
+                    for task, first_alloc, attempts in items:
+                        method.complete(task, first_alloc, attempts)
+        elif self.queue:
+            # every queued task is sized, admitted (alloc <= its cap), all
+            # nodes are up (no recover event pending) and idle — the
+            # scheduling round below must place work, so reaching here
+            # again without events is an engine bug
+            raise RuntimeError("cluster scheduler stalled with "
+                               "placeable tasks queued")
+
+        # ----------------------------------------------- scheduling round
+        clock = self.clock
+        self.queue.sort(key=lambda e: e.seq)
+        unsized = [e for e in self.queue if e.ledger is None]
+        if unsized:
+            # dynamic ready-set burst: one sizing call for the whole wave
+            # (one fused device dispatch per pool for batched methods)
+            self.n_waves += 1
+            allocs = self._wave_allocs(rec, jrec, "sized", unsized)
+            rejected: set[int] = set()
+            for entry, alloc in zip(unsized, allocs):
+                entry.ledger = AttemptLedger(
+                    entry.task, float(alloc), self._cap_for(entry.task),
+                    self.ttf, failure_strategy=self.failure_strategy,
+                    checkpoint_frac=self.checkpoint_frac)
+                if self.has_plan:
+                    # temporal reservation schedule for the first attempt
+                    # (set_plan drops 1-segment plans onto the flat path)
+                    plan = method.plan_for(entry.task)
+                    if plan is not None:
+                        entry.ledger.set_plan(
+                            plan.clamped(entry.ledger.cap_gb))
+                if entry.ledger.alloc_gb > entry.ledger.cap_gb:
+                    # no node can ever satisfy the request: reject at
+                    # admission (it would otherwise head-of-line block)
+                    if (not self.warned_admission
+                            and entry.ledger.alloc_gb
+                            <= self.trace.machine_cap_gb):
+                        # the method sized for the trace's machine cap but
+                        # every eligible node is smaller: almost always a
+                        # trace/node-set mismatch, so be loud about it
+                        warnings.warn(
+                            f"admission-rejecting a "
+                            f"{entry.ledger.alloc_gb:.1f} GB request that "
+                            f"fits the trace's machine cap "
+                            f"({self.trace.machine_cap_gb:g} GB) but not "
+                            f"the largest eligible node "
+                            f"({entry.ledger.cap_gb:g} GB); generate the "
+                            f"trace with machine_caps_gb matching the node "
+                            f"classes, or raise node capacities",
+                            RuntimeWarning, stacklevel=2)
+                        self.warned_admission = True
+                    entry.ledger.aborted = True
+                    self._finish_aborted(entry, clock)
+                    rejected.add(id(entry))
+            if rejected:
+                self.queue = [e for e in self.queue
+                              if id(e) not in rejected]
+        if self.failure_strategy == "retry_scaled":
+            # crash-interrupted tasks are re-sized through the method (one
+            # batched dispatch when available) before re-entering
+            # placement: a tightened prediction shrinks what the next
+            # crash can burn
+            refresh = [e for e in self.queue
+                       if e.ledger is not None
+                       and e.ledger.refresh_pending]
+            if refresh:
+                rallocs = self._wave_allocs(rec, jrec, "refresh", refresh)
+                for entry, alloc in zip(refresh, rallocs):
+                    entry.ledger.refresh_alloc(float(alloc))
+        ctx = PlacementContext(self.nodes, self.backfill_depth,
+                               self._eligible, self._priority, self.running)
+        placements, evictions = self.place(self.queue, ctx)
+        for token in evictions:
+            self.n_preemptions += 1
+            self._interrupt(token, clock)
+        if placements:
+            placed = set(map(id, (e for e, _ in placements)))
+            self.queue = [e for e in self.queue if id(e) not in placed]
+            for entry, node in placements:
+                led = entry.ledger
+                alloc = led.start_alloc_gb
+                token = self._next_atok()
+                node.reserve(clock, token, alloc)
+                self.running[token] = (entry, node, clock)
+                self.total_reserved += alloc
+                self.peak_reserved = max(self.peak_reserved,
+                                         self.total_reserved)
+                if entry.start_h is None:
+                    entry.start_h = clock
+                self._jev("dispatch", list(entry.task.key), node.name,
+                          alloc)
+                if self.straggler_rate > 0.0:
+                    # per-attempt straggler draw keyed by (task, dispatch#)
+                    # so the schedule replays bit-identically whatever the
+                    # event interleaving; re-dispatches re-draw
+                    entry.n_dispatches += 1
+                    if entry.task_hash is None:
+                        entry.task_hash = stable_hash(
+                            f"{entry.task.task_type}"
+                            f":{entry.task.index}") % (2 ** 31)
+                    srng = np.random.default_rng(
+                        [self.straggler_seed, entry.task_hash,
+                         entry.n_dispatches])
+                    if float(srng.random()) < self.straggler_rate:
+                        led.set_slowdown(1.0 + float(srng.exponential(
+                            max(self.straggler_factor - 1.0, 1e-9))))
+                        self.n_straggler_attempts += 1
+                    else:
+                        led.set_slowdown(1.0)
+                duration = led.attempt_duration_h
+                heapq.heappush(
+                    self.events, (clock + duration, self._next_eseq(),
+                                  _FINISH, token))
+                if led.temporal_active:
+                    # resize at every predicted segment boundary the
+                    # attempt survives to (a doomed plan dies at its
+                    # violation time; later boundaries never happen).
+                    # Boundaries live in nominal-runtime fractions, so a
+                    # straggler's stretch moves them in wall time too; a
+                    # checkpoint-retained plan resumes mid-schedule, so
+                    # only boundaries PAST the resume point are scheduled,
+                    # offset by the completed prefix
+                    vf = led.violation_frac
+                    horizon = 1.0 if vf is None else vf
+                    base = led.completed_frac
+                    for si, (end, _gb) in \
+                            enumerate(led.plan.segments[:-1]):
+                        if end <= base + 1e-12:
+                            continue   # boundary precedes the resume point
+                        if end < horizon - 1e-12:
+                            heapq.heappush(
+                                self.events,
+                                (clock + (end - base) * led.task.runtime_h
+                                 * led.slowdown,
+                                 self._next_eseq(), _RESIZE,
+                                 (token, si + 1)))
+
+        self._step_idx += 1
+        self._jrec = None
+        if jrec is not None:
+            jrec["clock"] = self.clock
+            if self.has_export_state:
+                jrec["mstate"] = method.export_state()
+            self._journal.append_step(jrec)
+            self._journal.maybe_snapshot(self._step_idx, self.export_state)
+        if rec is not None:
+            if replay_retries:
+                raise RuntimeError("journal divergence: journaled retries "
+                                   "the replayed drain never consumed")
+            if not self._replay:
+                self._replay = None   # tail consumed -> back to live mode
+        return True
+
+    def _wave_allocs(self, rec, jrec, field: str,
+                     wave: list[_Queued]) -> list[float]:
+        """Size one wave (ready burst or retry_scaled refresh): live mode
+        asks the method (journaling the allocations + in-flight decision
+        blobs), replay mode re-applies the journaled wave verbatim —
+        including restoring each task's decision blob, so later retries /
+        completions of the attempt see the decision it was sized with."""
+        method = self.method
+        if rec is not None:
+            js = rec[field]
+            if [list(e.task.key) for e in wave] != [s[0] for s in js]:
+                raise RuntimeError(f"journal divergence: {field} wave "
+                                   f"keys do not match the journal")
+            self.n_size_calls += 1 if self.has_batch else len(wave)
+            if self.has_restore_pending:
+                for e, s in zip(wave, js):
+                    if s[2] is not None:
+                        method.restore_pending(e.task, s[2])
+            return [s[1] for s in js]
+        if self.has_batch:
+            self.n_size_calls += 1
+            allocs = method.allocate_batch([e.task for e in wave])
+        else:
+            self.n_size_calls += len(wave)
+            allocs = [method.allocate(e.task) for e in wave]
+        if jrec is not None:
+            jrec[field] = [
+                [list(e.task.key), float(a),
+                 (method.export_pending(e.task)
+                  if self.has_export_pending else None)]
+                for e, a in zip(wave, allocs)]
+        return allocs
+
+    # ----------------------------------------------------------- lifecycle
+    def run(self) -> SimResult:
+        while self.step():
+            pass
+        return self.result()
+
+    def result(self) -> SimResult:
+        makespan = self.clock
+        by_class: dict[str, list[Node]] = collections.defaultdict(list)
+        for node in self.nodes:
+            node._advance(makespan)
+            by_class[node.machine or _DEFAULT_CLASS].append(node)
+        class_util = {
+            cls: (sum(n.reserved_gbh for n in grp)
+                  / (sum(n.cap_gb for n in grp) * makespan)
+                  if makespan > 0 else 0.0)
+            for cls, grp in sorted(by_class.items())
+        }
+        metrics = ClusterMetrics(
+            n_nodes=len(self.nodes), node_cap_gb=self.max_cap,
+            makespan_h=makespan,
+            mean_queue_delay_h=(sum(self.delays) / len(self.delays)
+                                if self.delays else 0.0),
+            max_queue_delay_h=max(self.delays, default=0.0),
+            node_util={n.name: (n.reserved_gbh / (n.cap_gb * makespan)
+                                if makespan > 0 else 0.0)
+                       for n in self.nodes},
+            peak_reserved_gb=self.peak_reserved, n_waves=self.n_waves,
+            n_size_calls=self.n_size_calls, policy=self.policy,
+            node_caps_gb={n.name: n.cap_gb for n in self.nodes},
+            class_util=class_util, n_aborted=self.n_aborted,
+            n_preemptions=self.n_preemptions,
+            n_node_failures=self.n_node_failures,
+            node_downtime_h={n.name: n.down_h for n in self.nodes},
+            n_resizes=self.n_resizes,
+            n_grow_failures=self.n_grow_failures,
+            n_complete_waves=self.n_complete_waves,
+            failure_strategy=self.failure_strategy,
+            n_failure_events=self.n_failure_events,
+            n_rack_failures=self.n_rack_failures,
+            n_straggler_attempts=self.n_straggler_attempts,
+            straggler_extra_h=self.straggler_extra_h,
+            rack_downtime_h=dict(self.rack_outage_node_h),
+            n_recoveries=self.n_recoveries,
+            n_replayed_steps=self.n_replayed_steps)
+        return SimResult(self.trace.name, self.method.name, self.ttf,
+                         self.outcomes, cluster=metrics)
+
+    def _finish_journal(self) -> None:
+        if self._journal is not None and not self._ended:
+            self._ended = True
+            self._journal.end(step=self._step_idx,
+                              n_outcomes=len(self.outcomes))
+
+    def _attach_journal(self, journal, *, resumed_from=None) -> None:
+        self._journal = journal
+        journal.begin(config=self._config, trace_fp=self._trace_fp(),
+                      method_name=getattr(self.method, "name", "?"),
+                      resumed_from=resumed_from)
+
+    def _trace_fp(self) -> int:
+        keys = ",".join(f"{t}:{i}" for t, i in sorted(self.by_key))
+        return stable_hash(f"{self.trace.name}|{len(self.by_key)}|{keys}")
+
+    # ---------------------------------------------------------- durability
+    _OUTCOME_FIELDS = ("first_alloc_gb", "final_alloc_gb", "attempts",
+                       "failures", "wastage_gbh", "runtime_h", "aborted",
+                       "interruptions", "tw_gbh", "grow_failures",
+                       "oom_gbh", "interruption_gbh", "submit_h",
+                       "start_h", "finish_h")
+
+    def _ev_to_json(self, ev) -> list:
+        t, seq, kind, payload = ev
+        if kind == _ARRIVE:
+            p = list(payload.key)
+        elif kind in (_FINISH, _CRASH):
+            p = payload
+        elif kind in (_RECOVER, _RESIZE):
+            p = list(payload)
+        elif kind == _RACK_CRASH:
+            p = payload
+        else:   # _RACK_RECOVER: (rack, [(idx, token, attrib_from), ...])
+            p = [payload[0], [list(d) for d in payload[1]]]
+        return [t, seq, kind, p]
+
+    def _ev_from_json(self, e) -> tuple[float, int, int, object]:
+        t, seq, kind, p = e
+        if kind == _ARRIVE:
+            payload = self.by_key[tuple(p)]
+        elif kind in (_FINISH, _CRASH):
+            payload = int(p)
+        elif kind in (_RECOVER, _RESIZE):
+            payload = (int(p[0]), int(p[1]))
+        elif kind == _RACK_CRASH:
+            payload = p
+        else:
+            payload = (p[0], [(int(i), int(tok), af) for i, tok, af in p[1]])
+        return (t, int(seq), int(kind), payload)
+
+    def _entry_to_json(self, e: _Queued) -> dict:
+        return {"seq": e.seq, "ready_h": e.ready_h,
+                "task": list(e.task.key),
+                "ledger": (None if e.ledger is None
+                           else e.ledger.to_state()),
+                "start_h": e.start_h, "n_dispatches": e.n_dispatches,
+                "task_hash": e.task_hash}
+
+    def _entry_from_json(self, d: dict) -> _Queued:
+        task = self.by_key[tuple(d["task"])]
+        led = (None if d["ledger"] is None
+               else AttemptLedger.from_state(task, d["ledger"]))
+        return _Queued(int(d["seq"]), d["ready_h"], task, led,
+                       d["start_h"], int(d["n_dispatches"]), d["task_hash"])
+
+    def export_state(self) -> dict:
+        """Full JSON-safe engine state at a step boundary: the compacted
+        snapshot the journal persists. Covers the event horizon (heap
+        order + payloads), ready/pending queue with complete ledgers,
+        running attempts with node bindings, exact per-node reservations
+        and time integrals, crash-ownership tokens of unrepaired outages,
+        DAG in-degrees, recorded outcomes, all counters, and the failure
+        rng states — everything :meth:`_restore_state` needs to rebuild a
+        bitwise-identical engine mid-workflow."""
+        state = {
+            "step": self._step_idx, "clock": self.clock,
+            "eseq": self._eseq, "qseq": self._qseq,
+            "atok": self._atok, "dtok": self._dtok,
+            "events": [self._ev_to_json(e) for e in self.events],
+            "queue": [self._entry_to_json(e) for e in self.queue],
+            "running": [[tok, self._entry_to_json(e), n.name, started]
+                        for tok, (e, n, started) in self.running.items()],
+            "nodes": [{"name": n.name, "up": n.up,
+                       "held": [[t, g] for t, g in n._held.items()],
+                       "reserved_gbh": n.reserved_gbh, "down_h": n.down_h,
+                       "last_t": n.last_t, "n_crashes": n.n_crashes}
+                      for n in self.nodes],
+            "down_token": [[i, t] for i, t in self.down_token.items()],
+            "down_due": [[i, d] for i, d in self.down_due.items()],
+            "indeg": [[list(k), v] for k, v in self.indeg.items()],
+            "pending_arrivals": self.pending_arrivals,
+            "outcomes": [dict({f: getattr(o, f)
+                               for f in self._OUTCOME_FIELDS},
+                              task=list(o.task.key))
+                         for o in self.outcomes],
+            "delays": list(self.delays),
+            "counters": {
+                "total_reserved": self.total_reserved,
+                "peak_reserved": self.peak_reserved,
+                "n_waves": self.n_waves,
+                "n_size_calls": self.n_size_calls,
+                "n_aborted": self.n_aborted,
+                "n_preemptions": self.n_preemptions,
+                "n_node_failures": self.n_node_failures,
+                "n_resizes": self.n_resizes,
+                "n_grow_failures": self.n_grow_failures,
+                "n_complete_waves": self.n_complete_waves,
+                "n_failure_events": self.n_failure_events,
+                "n_rack_failures": self.n_rack_failures,
+                "n_straggler_attempts": self.n_straggler_attempts,
+                "straggler_extra_h": self.straggler_extra_h,
+            },
+            "rack_outage_node_h": dict(self.rack_outage_node_h),
+            "warned_admission": self.warned_admission,
+            "fail_rng": [r.bit_generator.state for r in self.fail_rngs],
+            "rack_rng": {k: r.bit_generator.state
+                         for k, r in self.rack_rngs.items()},
+            "n_recoveries": self.n_recoveries,
+            "n_replayed_steps": self.n_replayed_steps,
+        }
+        if self.has_export_state:
+            state["mstate"] = self.method.export_state()
+        if self.has_export_pending:
+            pend = []
+            for e in self.queue:
+                if e.ledger is not None and not e.ledger.aborted:
+                    pend.append([list(e.task.key),
+                                 self.method.export_pending(e.task)])
+            for e, _n, _s in self.running.values():
+                pend.append([list(e.task.key),
+                             self.method.export_pending(e.task)])
+            state["pending"] = pend
+        return state
+
+    def _restore_state(self, state: dict) -> None:
+        self._step_idx = int(state["step"])
+        self.clock = state["clock"]
+        self._eseq = int(state["eseq"])
+        self._qseq = int(state["qseq"])
+        self._atok = int(state["atok"])
+        self._dtok = int(state["dtok"])
+        self.events = [self._ev_from_json(e) for e in state["events"]]
+        self.queue = [self._entry_from_json(e) for e in state["queue"]]
+        byname = {n.name: n for n in self.nodes}
+        # running is an insertion-ordered dict: crash_node and the
+        # preemptive policy iterate it, so restore in recorded order
+        self.running = {}
+        for tok, ej, nname, started in state["running"]:
+            self.running[int(tok)] = (self._entry_from_json(ej),
+                                      byname[nname], started)
+        for nd in state["nodes"]:
+            n = byname[nd["name"]]
+            n.up = nd["up"]
+            n._held = {int(t): g for t, g in nd["held"]}
+            n.reserved_gbh = nd["reserved_gbh"]
+            n.down_h = nd["down_h"]
+            n.last_t = nd["last_t"]
+            n.n_crashes = int(nd["n_crashes"])
+        self.down_token = {int(i): int(t) for i, t in state["down_token"]}
+        self.down_due = {int(i): d for i, d in state["down_due"]}
+        self.indeg = {tuple(k): int(v) for k, v in state["indeg"]}
+        self.pending_arrivals = int(state["pending_arrivals"])
+        self.outcomes = [
+            TaskOutcome(self.by_key[tuple(d["task"])],
+                        **{f: d[f] for f in self._OUTCOME_FIELDS})
+            for d in state["outcomes"]]
+        self.delays = list(state["delays"])
+        for k, v in state["counters"].items():
+            setattr(self, k, v)
+        self.rack_outage_node_h = dict(state["rack_outage_node_h"])
+        self.warned_admission = bool(state["warned_admission"])
+        for r, s in zip(self.fail_rngs, state["fail_rng"]):
+            r.bit_generator.state = s
+        for k, s in state["rack_rng"].items():
+            self.rack_rngs[k].bit_generator.state = s
+        self.n_recoveries = int(state.get("n_recoveries", 0))
+        self.n_replayed_steps = int(state.get("n_replayed_steps", 0))
+        if state.get("mstate") is not None and self.has_restore_state:
+            self.method.restore_state(state["mstate"])
+        if self.has_restore_pending:
+            for key, blob in state.get("pending", []):
+                if blob is not None:
+                    self.method.restore_pending(self.by_key[tuple(key)],
+                                                blob)
+
+    def _cold_restart(self) -> None:
+        """The crash took the workers with the scheduler: interrupt every
+        in-flight attempt at the recovery clock. Each re-enters the queue
+        through the failure-strategy machinery — checkpoint retention
+        (including mid-plan resumption) and retry_scaled re-sizing apply
+        to scheduler crashes exactly as to node crashes. Stale FINISH /
+        RESIZE events of the killed attempts are skipped by the usual
+        ``token not in running`` guards."""
+        for token in list(self.running):
+            self._interrupt(token, self.clock)
+
+    @classmethod
+    def recover(cls, trace: WorkflowTrace, method: SizingMethod, journal,
+                *, resume: str = "warm") -> "ClusterEngine":
+        """Rebuild a mid-workflow engine from ``journal`` (whose backing
+        file the caller repaired via ``Journal.repair`` BEFORE
+        constructing ``method``, so the predictor warm-started from a
+        journal-consistent prefix). Restores the last snapshot, replays
+        the WAL tail, restores the method's crash-aware counters to their
+        journaled kill-time values, then re-attaches the journal (new
+        generation + immediate snapshot — a second crash recovers from
+        here, never re-replaying history). ``resume='cold'`` additionally
+        interrupts all in-flight attempts (see :meth:`_cold_restart`)."""
+        if resume not in ("warm", "cold"):
+            raise ValueError(f"resume must be 'warm' or 'cold', "
+                             f"got {resume!r}")
+        run = journal.load()
+        if run is None:
+            raise ValueError("journal holds no run to recover")
+        if run.complete:
+            raise ValueError("journaled run already completed; "
+                             "nothing to recover")
+        cfg = run.config
+        specs = ([NodeSpec(**s) for s in cfg["node_specs"]]
+                 if cfg["node_specs"] is not None else None)
+        eng = cls(trace, method, cfg["ttf"], n_nodes=cfg["n_nodes"],
+                  node_cap_gb=cfg["node_cap_gb"], node_specs=specs,
+                  policy=cfg["policy"],
+                  backfill_depth=cfg["backfill_depth"],
+                  fail_rate_per_node_h=cfg["fail_rate_per_node_h"],
+                  repair_h=cfg["repair_h"], fail_seed=cfg["fail_seed"],
+                  rack_fail_rate_per_h=cfg["rack_fail_rate_per_h"],
+                  rack_repair_h=cfg["rack_repair_h"],
+                  straggler_rate=cfg["straggler_rate"],
+                  straggler_factor=cfg["straggler_factor"],
+                  straggler_seed=cfg["straggler_seed"])
+        if run.trace_fp != eng._trace_fp():
+            raise ValueError("journal was written for a different trace")
+        if run.method_name != getattr(method, "name", "?"):
+            raise ValueError(
+                f"journal was written by method {run.method_name!r}, "
+                f"recovering with {getattr(method, 'name', '?')!r}")
+        if run.snapshot is not None:
+            eng._restore_state(run.snapshot)
+        if run.mstate is not None and eng.has_restore_state:
+            # kill-time method counters: the tail's last journaled state
+            # (replay skips note_interruption/complete, so counters do
+            # not double-advance)
+            method.restore_state(run.mstate)
+        n_tail = len(run.tail)
+        if n_tail:
+            eng._replay = collections.deque(run.tail)
+            while eng._replay is not None:
+                if not eng.step():
+                    raise RuntimeError("journal divergence: engine "
+                                       "finished mid-replay")
+        eng.n_recoveries += 1
+        eng.n_replayed_steps += n_tail
+        if resume == "cold":
+            eng._cold_restart()
+        eng._attach_journal(journal, resumed_from=eng._step_idx)
+        journal.snapshot(eng.export_state())
+        return eng
+
+
 def simulate_cluster(trace: WorkflowTrace, method: SizingMethod,
                      ttf: float = 1.0, *, n_nodes: int = 8,
                      node_cap_gb: float | None = None,
@@ -439,7 +1490,8 @@ def simulate_cluster(trace: WorkflowTrace, method: SizingMethod,
                      rack_repair_h: float | dict[str, float] = 2.0,
                      straggler_rate: float = 0.0,
                      straggler_factor: float = 4.0,
-                     straggler_seed: int | None = None) -> SimResult:
+                     straggler_seed: int | None = None,
+                     journal=None) -> SimResult:
     """Execute ``trace`` concurrently on a cluster.
 
     The node set is either ``node_specs`` (heterogeneous: per-node
@@ -475,527 +1527,27 @@ def simulate_cluster(trace: WorkflowTrace, method: SizingMethod,
     sizing feeds on this).
 
     Any :class:`SizingMethod` runs unmodified; methods exposing
-    ``allocate_batch`` (Sizey) get each ready wave as one burst. Returns a
-    :class:`SimResult` whose ``cluster`` field carries makespan, queueing
-    delay (dispatched tasks only — admission rejections are counted in
-    ``n_aborted`` instead), per-node and per-node-class utilization, peak
-    concurrent reservation, preemption/crash/rack/straggler counters, and
-    wave / sizing-call counts; ``wastage_over_time()`` is
-    event-timestamped and directly comparable to the serial curve.
+    ``allocate_batch`` (Sizey) get each ready wave as one burst. Passing
+    a :class:`~repro.workflow.journal.Journal` makes the run *durable*:
+    every engine transition is WAL-logged and periodically snapshotted,
+    and a killed run resumes mid-workflow via
+    :meth:`ClusterEngine.recover`. Returns a :class:`SimResult` whose
+    ``cluster`` field carries makespan, queueing delay (dispatched tasks
+    only — admission rejections are counted in ``n_aborted`` instead),
+    per-node and per-node-class utilization, peak concurrent reservation,
+    preemption/crash/rack/straggler counters, and wave / sizing-call
+    counts; ``wastage_over_time()`` is event-timestamped and directly
+    comparable to the serial curve.
+
+    This is exactly ``ClusterEngine(...).run()``; use the engine class
+    directly for stepwise execution (the scheduler service does).
     """
-    if policy not in PLACEMENT_POLICIES:
-        raise ValueError(f"unknown placement policy {policy!r} "
-                         f"(have {sorted(PLACEMENT_POLICIES)})")
-    place = PLACEMENT_POLICIES[policy]
-    failure_strategy = getattr(method, "failure_strategy", "retry_same")
-    if failure_strategy not in FAILURE_STRATEGIES:
-        raise ValueError(f"unknown failure strategy {failure_strategy!r} "
-                         f"(have {FAILURE_STRATEGIES})")
-    checkpoint_frac = float(getattr(method, "checkpoint_frac",
-                                    DEFAULT_CHECKPOINT_FRAC))
-    if straggler_factor < 1.0:
-        raise ValueError(f"straggler_factor must be >= 1, "
-                         f"got {straggler_factor}")
-    if straggler_seed is None:
-        straggler_seed = fail_seed
-    if node_specs is None:
-        cap = trace.machine_cap_gb if node_cap_gb is None else node_cap_gb
-        specs = [NodeSpec(f"node{i:02d}", cap) for i in range(n_nodes)]
-    else:
-        specs = list(node_specs)
-        if not specs:
-            raise ValueError("node_specs must name at least one node")
-    nodes = [Node(s) for s in specs]
-    max_cap = max(n.cap_gb for n in nodes)
-    classes = {n.machine for n in nodes if n.machine is not None}
-    has_batch = hasattr(method, "allocate_batch")
-    has_plan = hasattr(method, "plan_for")
-    has_complete_batch = hasattr(method, "complete_batch")
-    has_note = hasattr(method, "note_interruption")
-    rack_names = sorted({s.rack for s in specs if s.rack is not None})
-    rack_members = {r: [i for i, s in enumerate(specs) if s.rack == r]
-                    for r in rack_names}
-    if rack_fail_rate_per_h > 0.0 and not rack_names:
-        raise ValueError("rack_fail_rate_per_h > 0 needs rack-labeled "
-                         "node_specs (node_specs_from_caps(n_racks=...) or "
-                         "node_specs_from_racks)")
-
-    def _rack_repair(rack: str) -> float:
-        if isinstance(rack_repair_h, dict):
-            try:
-                return float(rack_repair_h[rack])
-            except KeyError:
-                raise ValueError(f"rack_repair_h names no repair time for "
-                                 f"rack {rack!r}") from None
-        return float(rack_repair_h)
-
-    def eligible(task: TaskInstance, node: Node) -> bool:
-        # unlabeled nodes take anything; a task whose machine label names
-        # no node class carries no affinity information (homogeneous
-        # traces keep running anywhere on a labeled cluster)
-        return (node.machine is None or task.machine == node.machine
-                or task.machine not in classes)
-
-    def cap_for(task: TaskInstance) -> float:
-        """Largest node this task could ever be placed on: the clamp/abort
-        capacity of its ledger. 0.0 when no node is eligible (the request
-        is then admission-rejected whatever its size)."""
-        return max((n.cap_gb for n in nodes if eligible(task, n)),
-                   default=0.0)
-
-    by_key = {t.key: t for t in trace.tasks}
-    if len(by_key) != len(trace.tasks):
-        raise ValueError("duplicate (task_type, index) keys in trace")
-    indeg: dict[tuple[str, int], int] = {}
-    children: dict[tuple[str, int], list[TaskInstance]] = \
-        collections.defaultdict(list)
-    for t in trace.tasks:
-        live = [d for d in t.deps if d in by_key]
-        indeg[t.key] = len(live)
-        for d in live:
-            children[d].append(t)
-
-    def priority(task: TaskInstance) -> int:
-        """DAG criticality: how many instances this one gates."""
-        return len(children.get(task.key, ()))
-
-    events: list[tuple[float, int, int, object]] = []
-    eseq = itertools.count()
-    pending_arrivals = 0
-    for t in trace.tasks:
-        if indeg[t.key] == 0:
-            heapq.heappush(events, (t.arrival_h, next(eseq), _ARRIVE, t))
-            pending_arrivals += 1
-
-    # deterministic seeded failure schedule: one generator per node, drawn
-    # lazily (crash -> recover -> next crash), independent of event
-    # interleaving so runs are bit-reproducible
-    fail_rngs = [np.random.default_rng([fail_seed, i])
-                 for i in range(len(nodes))]
-    if fail_rate_per_node_h > 0.0:
-        for i in range(len(nodes)):
-            t_crash = float(fail_rngs[i].exponential(
-                1.0 / fail_rate_per_node_h))
-            heapq.heappush(events, (t_crash, next(eseq), _CRASH, i))
-    # rack outages draw from their own per-rack streams (3-element seed
-    # sequences: disjoint from the 2-element per-node streams above, so
-    # adding rack injection never perturbs the node schedules)
-    rack_rngs = {r: np.random.default_rng([fail_seed, 7919, ri])
-                 for ri, r in enumerate(rack_names)}
-    if rack_fail_rate_per_h > 0.0:
-        for r in rack_names:
-            t_crash = float(rack_rngs[r].exponential(
-                1.0 / rack_fail_rate_per_h))
-            heapq.heappush(events, (t_crash, next(eseq), _RACK_CRASH, r))
-
-    queue: list[_Queued] = []
-    qseq = itertools.count()
-    atok = itertools.count()    # attempt tokens (reservation + finish ids)
-    dtok = itertools.count()    # crash-ownership tokens: a recover event
-    # only brings a node back if it still owns the downing (rack outages
-    # and independent faults can overlap on one node)
-    down_token: dict[int, int] = {}
-    down_due: dict[int, float] = {}   # when the owning outage repairs
-    running: dict[int, tuple[_Queued, Node, float]] = {}
-    outcomes: list[TaskOutcome] = []
-    delays: list[float] = []    # queue delays of *dispatched* tasks only
-    clock = total_reserved = peak_reserved = 0.0
-    n_waves = n_size_calls = n_aborted = 0
-    n_preemptions = n_node_failures = 0
-    n_resizes = n_grow_failures = n_complete_waves = 0
-    n_failure_events = n_rack_failures = n_straggler_attempts = 0
-    straggler_extra_h = 0.0
-    rack_outage_node_h = {r: 0.0 for r in rack_names}
-    warned_admission = False
-
-    def unlock_children(key: tuple[str, int], t: float) -> None:
-        nonlocal pending_arrivals
-        for child in children[key]:
-            indeg[child.key] -= 1
-            if indeg[child.key] == 0:
-                heapq.heappush(events, (max(t, child.arrival_h),
-                                        next(eseq), _ARRIVE, child))
-                pending_arrivals += 1
-
-    def finish_aborted(entry: _Queued, t: float) -> None:
-        nonlocal n_aborted
-        if hasattr(method, "abandon"):
-            method.abandon(entry.task)
-        outcomes.append(entry.ledger.outcome(
-            submit_h=entry.ready_h,
-            start_h=entry.start_h if entry.start_h is not None else t,
-            finish_h=t))
-        n_aborted += 1
-        if entry.start_h is not None:
-            delays.append(entry.start_h - entry.ready_h)
-        # an abort does not fail the subtree: dependents still execute, so
-        # every instance of the trace gets an outcome (serial semantics)
-        unlock_children(entry.task.key, t)
-
-    def note_straggle(led: AttemptLedger, elapsed_h: float) -> None:
-        """Straggler overhead actually incurred: the extra wall time of
-        the ``elapsed_h`` the attempt really ran (a killed straggler is
-        charged only its elapsed stretch, not the planned one)."""
-        nonlocal straggler_extra_h
-        if led.slowdown > 1.0:
-            straggler_extra_h += elapsed_h * (1.0 - 1.0 / led.slowdown)
-
-    def interrupt(token: int, t: float) -> None:
-        """Kill a running attempt (crash or preemption): burn the partial
-        reservation per the failure strategy, requeue at the original FIFO
-        seq — no OOM failure. ``retry_scaled`` marks the entry for a fresh
-        sizing pass before re-dispatch; crash-aware methods observe the
-        interruption through ``note_interruption``."""
-        nonlocal total_reserved
-        entry, node, started = running.pop(token)
-        gb = node.release(t, token)
-        total_reserved -= gb
-        note_straggle(entry.ledger, t - started)
-        entry.ledger.record_interruption(t - started)
-        if failure_strategy == "retry_scaled":
-            entry.ledger.refresh_pending = True
-        if has_note:
-            method.note_interruption(entry.task, t - started)
-        queue.append(entry)   # keeps its original FIFO seq
-
-    def crash_node(idx: int, t: float, due: float) -> int:
-        """Down one node (if up) until ``due``: interrupt its attempts,
-        take a crash-ownership token. Returns the token, or -1 if the
-        node was already down (an overlapping outage absorbed the
-        fault — the caller decides whether it extends the downtime)."""
-        nonlocal n_node_failures
-        node = nodes[idx]
-        if not node.up:
-            return -1
-        token = next(dtok)
-        down_token[idx] = token
-        down_due[idx] = due
-        node.crash(t)
-        n_node_failures += 1
-        for atok_ in [k for k, (_, n, _) in running.items() if n is node]:
-            interrupt(atok_, t)
-        return token
-
-    def recover_node(idx: int, token: int, t: float) -> bool:
-        """Bring a node back iff ``token`` still owns its downing."""
-        if down_token.get(idx) != token:
-            return False
-        del down_token[idx]
-        down_due.pop(idx, None)
-        nodes[idx].recover(t)
-        return True
-
-    while True:
-        if not queue and not running and pending_arrivals == 0:
-            break   # all outcomes recorded (or the DAG is unsatisfiable)
-        if events:
-            clock = events[0][0]
-            completed: list[tuple[_Queued, float]] = []
-            while events and events[0][0] <= clock:
-                _, _, kind, payload = heapq.heappop(events)
-                if kind == _ARRIVE:
-                    pending_arrivals -= 1
-                    queue.append(_Queued(next(qseq), clock, payload))
-                    continue
-                if kind == _RESIZE:
-                    token, seg_idx = payload
-                    if token not in running:
-                        continue   # attempt already killed / grow-flattened
-                    entry, node, started = running[token]
-                    led = entry.ledger
-                    if not led.temporal_active \
-                            or seg_idx >= len(led.plan.segments):
-                        continue   # plan flattened since scheduling
-                    new_gb = led.plan.segments[seg_idx][1]
-                    delta = new_gb - node.held_gb(token)
-                    if delta <= 0 or node.free_gb >= delta - 1e-9:
-                        total_reserved += node.resize(clock, token, new_gb)
-                        peak_reserved = max(peak_reserved, total_reserved)
-                        n_resizes += 1
-                    else:
-                        # grow failure: node too full at the boundary —
-                        # burn the partial plan integral (interruption, no
-                        # OOM accounting) and requeue at the original seq;
-                        # repeated denials flatten the plan to a constant
-                        # peak reservation (guaranteed progress)
-                        n_grow_failures += 1
-                        running.pop(token)
-                        gb = node.release(clock, token)
-                        total_reserved -= gb
-                        note_straggle(led, clock - started)
-                        led.record_grow_failure(clock - started)
-                        queue.append(entry)
-                    continue
-                if kind == _CRASH:
-                    n_failure_events += 1
-                    node_due = clock + repair_h
-                    token = crash_node(payload, clock, node_due)
-                    if token < 0 and node_due > down_due[payload] + 1e-12:
-                        # already down (rack outage) but THIS fault
-                        # repairs later: take ownership so the node stays
-                        # down past the rack recover — symmetric with the
-                        # rack-takeover branch below ("latest due wins")
-                        token = next(dtok)
-                        down_token[payload] = token
-                        down_due[payload] = node_due
-                    if token >= 0:
-                        heapq.heappush(events, (node_due, next(eseq),
-                                                _RECOVER,
-                                                (payload, token)))
-                    elif pending_arrivals or queue or running:
-                        # absorbed outright (the rack outage outlasts the
-                        # fault): keep the node's crash stream alive
-                        nxt = clock + float(fail_rngs[payload].exponential(
-                            1.0 / fail_rate_per_node_h))
-                        heapq.heappush(events, (nxt, next(eseq), _CRASH,
-                                                payload))
-                    continue
-                if kind == _RECOVER:
-                    idx, token = payload
-                    # the recovery is a no-op when a later rack outage
-                    # took ownership of the downing (the node then stays
-                    # down until the RACK recovers), but the node's crash
-                    # stream continues either way
-                    recover_node(idx, token, clock)
-                    if pending_arrivals or queue or running:
-                        nxt = clock + float(fail_rngs[idx].exponential(
-                            1.0 / fail_rate_per_node_h))
-                        heapq.heappush(events, (nxt, next(eseq), _CRASH,
-                                                idx))
-                    continue
-                if kind == _RACK_CRASH:
-                    # correlated outage: every node of the rack is down
-                    # until the rack repairs — ONE failure event, N node
-                    # failures. A member already down from an independent
-                    # fault is taken over only when the rack repairs
-                    # LATER (its own recover goes stale and it comes back
-                    # with the rack); a fault outlasting the outage keeps
-                    # the node down past the rack repair — a node always
-                    # returns at the latest due among its outages
-                    n_failure_events += 1
-                    n_rack_failures += 1
-                    rack_due = clock + _rack_repair(payload)
-                    # downed: (node idx, ownership token, time from which
-                    # the downtime is ATTRIBUTABLE to this rack outage)
-                    downed = []
-                    for idx in rack_members[payload]:
-                        token = crash_node(idx, clock, rack_due)
-                        if token >= 0:
-                            downed.append((idx, token, clock))
-                        elif rack_due > down_due[idx] + 1e-12:
-                            token = next(dtok)
-                            attrib_from = down_due[idx]
-                            down_token[idx] = token
-                            down_due[idx] = rack_due
-                            downed.append((idx, token, attrib_from))
-                    heapq.heappush(events,
-                                   (rack_due, next(eseq), _RACK_RECOVER,
-                                    (payload, downed)))
-                    continue
-                if kind == _RACK_RECOVER:
-                    rack, downed = payload
-                    for idx, token, attrib_from in downed:
-                        recover_node(idx, token, clock)
-                        # rack-ATTRIBUTED downtime: the MARGINAL node-
-                        # hours this outage added (a taken-over member
-                        # counts only the extension past its own repair)
-                        rack_outage_node_h[rack] += clock - attrib_from
-                    if pending_arrivals or queue or running:
-                        nxt = clock + float(rack_rngs[rack].exponential(
-                            1.0 / rack_fail_rate_per_h))
-                        heapq.heappush(events, (nxt, next(eseq),
-                                                _RACK_CRASH, rack))
-                    continue
-                if payload not in running:
-                    continue   # attempt was preempted / crash-killed
-                entry, node, started = running.pop(payload)
-                gb = node.release(clock, payload)
-                total_reserved -= gb
-                note_straggle(entry.ledger, clock - started)
-                if entry.ledger.will_succeed:
-                    entry.ledger.record_success()
-                    outcomes.append(entry.ledger.outcome(
-                        submit_h=entry.ready_h, start_h=entry.start_h,
-                        finish_h=clock))
-                    delays.append(entry.start_h - entry.ready_h)
-                    unlock_children(entry.task.key, clock)
-                    # model updates are flushed per drain: simultaneous
-                    # completions become ONE complete_batch call (one
-                    # fused observe dispatch per pool) below
-                    completed.append((entry, clock))
-                elif entry.ledger.record_failure():
-                    finish_aborted(entry, clock)
-                else:
-                    entry.ledger.apply_retry(method)
-                    queue.append(entry)   # keeps its original FIFO seq
-            if completed:
-                n_complete_waves += 1
-                items = [(e.task, e.ledger.first_alloc_gb, e.ledger.attempts)
-                         for e, _ in completed]
-                if has_complete_batch:
-                    method.complete_batch(items)
-                else:
-                    for task, first_alloc, attempts in items:
-                        method.complete(task, first_alloc, attempts)
-        elif queue:
-            # every queued task is sized, admitted (alloc <= its cap), all
-            # nodes are up (no recover event pending) and idle — the
-            # scheduling round below must place work, so reaching here
-            # again without events is an engine bug
-            raise RuntimeError("cluster scheduler stalled with "
-                               "placeable tasks queued")
-
-        # ----------------------------------------------- scheduling round
-        queue.sort(key=lambda e: e.seq)
-        unsized = [e for e in queue if e.ledger is None]
-        if unsized:
-            # dynamic ready-set burst: one sizing call for the whole wave
-            # (one fused device dispatch per pool for batched methods)
-            n_waves += 1
-            if has_batch:
-                n_size_calls += 1
-                allocs = method.allocate_batch([e.task for e in unsized])
-            else:
-                n_size_calls += len(unsized)
-                allocs = [method.allocate(e.task) for e in unsized]
-            rejected: set[int] = set()
-            for entry, alloc in zip(unsized, allocs):
-                entry.ledger = AttemptLedger(
-                    entry.task, float(alloc), cap_for(entry.task), ttf,
-                    failure_strategy=failure_strategy,
-                    checkpoint_frac=checkpoint_frac)
-                if has_plan:
-                    # temporal reservation schedule for the first attempt
-                    # (set_plan drops 1-segment plans onto the flat path)
-                    plan = method.plan_for(entry.task)
-                    if plan is not None:
-                        entry.ledger.set_plan(
-                            plan.clamped(entry.ledger.cap_gb))
-                if entry.ledger.alloc_gb > entry.ledger.cap_gb:
-                    # no node can ever satisfy the request: reject at
-                    # admission (it would otherwise head-of-line block)
-                    if (not warned_admission
-                            and entry.ledger.alloc_gb
-                            <= trace.machine_cap_gb):
-                        # the method sized for the trace's machine cap but
-                        # every eligible node is smaller: almost always a
-                        # trace/node-set mismatch, so be loud about it
-                        warnings.warn(
-                            f"admission-rejecting a "
-                            f"{entry.ledger.alloc_gb:.1f} GB request that "
-                            f"fits the trace's machine cap "
-                            f"({trace.machine_cap_gb:g} GB) but not the "
-                            f"largest eligible node "
-                            f"({entry.ledger.cap_gb:g} GB); generate the "
-                            f"trace with machine_caps_gb matching the node "
-                            f"classes, or raise node capacities",
-                            RuntimeWarning, stacklevel=2)
-                        warned_admission = True
-                    entry.ledger.aborted = True
-                    finish_aborted(entry, clock)
-                    rejected.add(id(entry))
-            if rejected:
-                queue = [e for e in queue if id(e) not in rejected]
-        if failure_strategy == "retry_scaled":
-            # crash-interrupted tasks are re-sized through the method (one
-            # batched dispatch when available) before re-entering placement:
-            # a tightened prediction shrinks what the next crash can burn
-            refresh = [e for e in queue
-                       if e.ledger is not None and e.ledger.refresh_pending]
-            if refresh:
-                if has_batch:
-                    n_size_calls += 1
-                    rallocs = method.allocate_batch(
-                        [e.task for e in refresh])
-                else:
-                    n_size_calls += len(refresh)
-                    rallocs = [method.allocate(e.task) for e in refresh]
-                for entry, alloc in zip(refresh, rallocs):
-                    entry.ledger.refresh_alloc(float(alloc))
-        ctx = PlacementContext(nodes, backfill_depth, eligible, priority,
-                               running)
-        placements, evictions = place(queue, ctx)
-        for token in evictions:
-            n_preemptions += 1
-            interrupt(token, clock)
-        if placements:
-            placed = set(map(id, (e for e, _ in placements)))
-            queue = [e for e in queue if id(e) not in placed]
-            for entry, node in placements:
-                led = entry.ledger
-                alloc = led.start_alloc_gb
-                token = next(atok)
-                node.reserve(clock, token, alloc)
-                running[token] = (entry, node, clock)
-                total_reserved += alloc
-                peak_reserved = max(peak_reserved, total_reserved)
-                if entry.start_h is None:
-                    entry.start_h = clock
-                if straggler_rate > 0.0:
-                    # per-attempt straggler draw, keyed by (task, dispatch#)
-                    # so the schedule replays bit-identically whatever the
-                    # event interleaving; re-dispatches re-draw
-                    entry.n_dispatches += 1
-                    if entry.task_hash is None:
-                        entry.task_hash = stable_hash(
-                            f"{entry.task.task_type}"
-                            f":{entry.task.index}") % (2 ** 31)
-                    srng = np.random.default_rng(
-                        [straggler_seed, entry.task_hash,
-                         entry.n_dispatches])
-                    if float(srng.random()) < straggler_rate:
-                        led.set_slowdown(1.0 + float(srng.exponential(
-                            max(straggler_factor - 1.0, 1e-9))))
-                        n_straggler_attempts += 1
-                    else:
-                        led.set_slowdown(1.0)
-                duration = led.attempt_duration_h
-                heapq.heappush(
-                    events, (clock + duration, next(eseq), _FINISH, token))
-                if led.temporal_active:
-                    # resize at every predicted segment boundary the
-                    # attempt survives to (a doomed plan dies at its
-                    # violation time; later boundaries never happen).
-                    # Boundaries live in nominal-runtime fractions, so a
-                    # straggler's stretch moves them in wall time too
-                    vf = led.violation_frac
-                    horizon = 1.0 if vf is None else vf
-                    for si, (end, _gb) in enumerate(led.plan.segments[:-1]):
-                        if end < horizon - 1e-12:
-                            heapq.heappush(
-                                events,
-                                (clock + end * led.task.runtime_h
-                                 * led.slowdown,
-                                 next(eseq), _RESIZE, (token, si + 1)))
-
-    makespan = clock
-    by_class: dict[str, list[Node]] = collections.defaultdict(list)
-    for node in nodes:
-        node._advance(makespan)
-        by_class[node.machine or _DEFAULT_CLASS].append(node)
-    class_util = {
-        cls: (sum(n.reserved_gbh for n in grp)
-              / (sum(n.cap_gb for n in grp) * makespan)
-              if makespan > 0 else 0.0)
-        for cls, grp in sorted(by_class.items())
-    }
-    metrics = ClusterMetrics(
-        n_nodes=len(nodes), node_cap_gb=max_cap, makespan_h=makespan,
-        mean_queue_delay_h=sum(delays) / len(delays) if delays else 0.0,
-        max_queue_delay_h=max(delays, default=0.0),
-        node_util={n.name: (n.reserved_gbh / (n.cap_gb * makespan)
-                            if makespan > 0 else 0.0) for n in nodes},
-        peak_reserved_gb=peak_reserved, n_waves=n_waves,
-        n_size_calls=n_size_calls, policy=policy,
-        node_caps_gb={n.name: n.cap_gb for n in nodes},
-        class_util=class_util, n_aborted=n_aborted,
-        n_preemptions=n_preemptions, n_node_failures=n_node_failures,
-        node_downtime_h={n.name: n.down_h for n in nodes},
-        n_resizes=n_resizes, n_grow_failures=n_grow_failures,
-        n_complete_waves=n_complete_waves,
-        failure_strategy=failure_strategy,
-        n_failure_events=n_failure_events, n_rack_failures=n_rack_failures,
-        n_straggler_attempts=n_straggler_attempts,
-        straggler_extra_h=straggler_extra_h,
-        rack_downtime_h=dict(rack_outage_node_h))
-    return SimResult(trace.name, method.name, ttf, outcomes, cluster=metrics)
+    return ClusterEngine(
+        trace, method, ttf, n_nodes=n_nodes, node_cap_gb=node_cap_gb,
+        node_specs=node_specs, policy=policy,
+        backfill_depth=backfill_depth,
+        fail_rate_per_node_h=fail_rate_per_node_h, repair_h=repair_h,
+        fail_seed=fail_seed, rack_fail_rate_per_h=rack_fail_rate_per_h,
+        rack_repair_h=rack_repair_h, straggler_rate=straggler_rate,
+        straggler_factor=straggler_factor, straggler_seed=straggler_seed,
+        journal=journal).run()

@@ -105,6 +105,13 @@ class ClusterMetrics:
     # stays in node_downtime_h only)
     rack_downtime_h: dict[str, float] = \
         dataclasses.field(default_factory=dict)
+    # durable-scheduler fields (PR 6): how many times this run's engine
+    # was crash-recovered from its journal, and how many journaled steps
+    # were replayed across those recoveries. Both 0 for an uninterrupted
+    # run — and the ONLY fields a warm (journal-complete) resume is
+    # allowed to change (see tests/chaos.py::results_equal).
+    n_recoveries: int = 0
+    n_replayed_steps: int = 0
 
     @property
     def mean_util(self) -> float:

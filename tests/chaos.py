@@ -1,0 +1,162 @@
+"""Chaos harness: seeded SIGKILL-style interruption of journaled cluster
+runs with automatic resume (PR 6 tentpole, part 4).
+
+A journal file is append-only, so killing the scheduler process at an
+arbitrary instant leaves exactly a *byte prefix* of the file a completed
+run would have written. The harness therefore injects crashes by
+truncating a completed journaled run's file at chosen byte offsets —
+equivalent to a live SIGKILL at that write, with the kill point exactly
+reproducible. Cut points are drawn seeded, mixing step boundaries (clean
+WAL rows), mid-step offsets (orphan provenance rows the repair must
+truncate) and mid-line offsets (torn final line).
+
+``python tests/chaos.py --cycles N`` is the CI chaos smoke: N seeded
+kill/resume cycles, each asserting the recovered run's SimResult is
+bitwise the uninterrupted one. The same helpers drive the parametrized
+sweep in ``tests/test_durability.py`` and the recovery-cost measurement
+in ``benchmarks/durability_bench.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+
+import numpy as np
+
+from repro.workflow.journal import Journal, recover_run
+
+# metric fields a warm (journal-complete) resume may legitimately change:
+# recovery bookkeeping only — everything else must round-trip bitwise
+RECOVERY_FIELDS = ("n_recoveries", "n_replayed_steps")
+
+OUTCOME_FIELDS = ("first_alloc_gb", "final_alloc_gb", "attempts",
+                  "failures", "wastage_gbh", "runtime_h", "aborted",
+                  "interruptions", "tw_gbh", "grow_failures", "oom_gbh",
+                  "interruption_gbh", "submit_h", "start_h", "finish_h")
+
+
+def assert_results_equal(expected, got, *, allow=RECOVERY_FIELDS) -> None:
+    """Bitwise SimResult equivalence (== on every float, no approx):
+    outcome-by-outcome in completion order, plus every cluster metric
+    except the ``allow``-listed recovery counters."""
+    assert got.workflow == expected.workflow
+    assert got.method == expected.method
+    assert len(got.outcomes) == len(expected.outcomes), (
+        f"{len(got.outcomes)} outcomes, expected {len(expected.outcomes)}")
+    for a, b in zip(expected.outcomes, got.outcomes):
+        assert a.task.key == b.task.key, (a.task.key, b.task.key)
+        for f in OUTCOME_FIELDS:
+            va, vb = getattr(a, f), getattr(b, f)
+            assert va == vb, (f"outcome {a.task.key}: {f} diverged "
+                              f"({vb!r} != {va!r})")
+    ca = dataclasses.asdict(expected.cluster)
+    cb = dataclasses.asdict(got.cluster)
+    for k, va in ca.items():
+        if k in allow:
+            continue
+        assert cb[k] == va, f"cluster metric {k} diverged ({cb[k]!r} != {va!r})"
+
+
+def run_journaled(trace, method_factory, path, *, snapshot_every=16,
+                  **engine_kwargs):
+    """One complete journaled run; returns its SimResult (the journal file
+    at ``path`` then holds every byte a crash could have truncated to)."""
+    from repro.workflow.cluster import ClusterEngine
+    method = method_factory(path)
+    journal = Journal.attach(method, snapshot_every=snapshot_every)
+    return ClusterEngine(trace, method, journal=journal,
+                         **engine_kwargs).run()
+
+
+def kill_points(path: str, n: int, seed: int = 0) -> list[int]:
+    """``n`` seeded byte offsets to kill at: one third clean line
+    boundaries, the rest arbitrary mid-line bytes. Always includes an
+    early and a late cut so the sweep covers snapshot-less and
+    nearly-done recoveries."""
+    size = os.path.getsize(path)
+    with open(path, "rb") as f:
+        data = f.read()
+    bounds = [i + 1 for i, b in enumerate(data) if b == 0x0A]
+    rng = np.random.default_rng([seed, size])
+    pts = set()
+    n_lines = max(1, n // 3)
+    lo = max(1, len(bounds) // 10)
+    for i in rng.choice(len(bounds), size=min(n_lines, len(bounds)),
+                        replace=False):
+        pts.add(bounds[int(i)])
+    while len(pts) < n:
+        pts.add(int(rng.integers(bounds[lo], size)))
+    pts.add(bounds[lo])                    # early: pre-first-snapshot
+    pts.add(bounds[-2] if len(bounds) > 1 else bounds[-1])   # nearly done
+    return sorted(pts)[:max(n, 2)]
+
+
+def kill_at(path: str, cut: int, out_path: str) -> str:
+    """Materialize the crash: the first ``cut`` bytes of ``path`` are what
+    a SIGKILL at that write would have left on disk."""
+    with open(path, "rb") as f:
+        data = f.read(cut)
+    with open(out_path, "wb") as f:
+        f.write(data)
+    return out_path
+
+
+def kill_and_resume(path: str, cut: int, trace, method_factory, *,
+                    resume: str = "warm", snapshot_every: int = 16,
+                    scratch: str | None = None):
+    """One chaos cycle: kill the journaled run at byte ``cut``, repair,
+    recover, run to completion. Returns ``(SimResult, engine)``."""
+    out = scratch or (path + f".cut{cut}")
+    kill_at(path, cut, out)
+    eng = recover_run(out, trace, method_factory, resume=resume,
+                      snapshot_every=snapshot_every)
+    return eng.run(), eng
+
+
+def _default_method_factory(path):
+    from repro.baselines.sizey_method import SizeyMethod
+    return SizeyMethod(machine_cap_gb=64.0, persist_path=path)
+
+
+def chaos_smoke(cycles: int = 5, seed: int = 0, scale: float = 0.04,
+                verbose: bool = True) -> int:
+    """CI smoke: one journaled run, ``cycles`` seeded kill/resume cycles,
+    resume-equivalence asserted on each. Returns total replayed steps."""
+    import tempfile
+
+    from repro.workflow import generate_workflow
+
+    trace = generate_workflow("eager", seed=seed, scale=scale,
+                              machine_cap_gb=64.0)
+    kw = dict(n_nodes=4, fail_rate_per_node_h=0.05, straggler_rate=0.1,
+              fail_seed=seed)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "run.jsonl")
+        baseline = run_journaled(trace, _default_method_factory, path,
+                                 **kw)
+        replayed = 0
+        for cut in kill_points(path, cycles, seed=seed):
+            res, _eng = kill_and_resume(path, cut, trace,
+                                        _default_method_factory)
+            assert_results_equal(baseline, res)
+            assert res.cluster.n_recoveries >= 1
+            replayed += res.cluster.n_replayed_steps
+            if verbose:
+                print(f"  kill@byte {cut}: resume bitwise OK "
+                      f"(replayed {res.cluster.n_replayed_steps} steps)")
+    return replayed
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--cycles", type=int, default=5,
+                    help="seeded kill/resume cycles to run")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--scale", type=float, default=0.04,
+                    help="trace scale (instance-count multiplier)")
+    args = ap.parse_args()
+    n = chaos_smoke(cycles=args.cycles, seed=args.seed, scale=args.scale)
+    print(f"chaos smoke PASS: {args.cycles} kill/resume cycles bitwise, "
+          f"{n} steps replayed")
