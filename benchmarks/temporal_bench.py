@@ -1,6 +1,6 @@
 """Temporal-subsystem benchmark: time-integrated (GB·h) waste of temporal
-vs peak-based allocators on ramp-shaped traces, and the cluster engine's
-resize-event overhead.
+vs peak-based allocators on ramp-shaped traces, the temporal/peak
+wall-clock ratio, and the cluster engine's resize-event overhead.
 
     PYTHONPATH=src python -m benchmarks.temporal_bench [--scale 0.1]
                           [--workflow mag] [--k 4] [--nodes 4]
@@ -14,13 +14,20 @@ Three comparisons:
     reservation over-reserves most). Headline:
     ``temporal_reduction_vs_peak`` of time-integrated GB·h waste, which
     the acceptance criteria require to be positive;
+  * temporal cost — the two fused methods run TWICE: the first pass pays
+    the one-off XLA compiles (recorded as ``serial_cold.*`` artifacts),
+    the second measures the steady-state wall the jit cache makes
+    representative of any longer run. ``wall_ratio`` (steady temporal /
+    steady peak) is the headline the fused temporal path keeps <= 1.2x;
+    the deterministic work counters behind it (full refits, fused
+    refreshes, boundary fits/hits) land in ``counters`` and are gated at
+    zero growth in CI — wall-clock itself stays an ungated artifact
+    (runners are noisy);
   * cluster resizing — the same workload (Poisson root arrivals, so the
     predictor has history before whole-type waves hit) through the event
-    engine with RESIZE events live: waste, resize/grow-failure counts,
-    makespan;
-  * resize overhead — wall-clock of the temporal cluster run vs the peak
-    cluster run (the delta prices the extra events + plan bookkeeping),
-    plus events-per-second.
+    engine with RESIZE events live: waste, resize/wave/grow-failure
+    counts, makespan, and the temporal-vs-peak cluster wall ratio (jit
+    already warm from the serial section).
 """
 from __future__ import annotations
 
@@ -32,9 +39,12 @@ from benchmarks._util import dump_json
 from repro.baselines import make_method
 from repro.baselines.sizey_method import SizeyMethod
 from repro.core import SizeyConfig
+from repro.core.predictor import DISPATCH_COUNTS
+from repro.core.temporal.predictor import BOUNDARY_COUNTS
 from repro.workflow import generate_workflow, simulate, simulate_cluster
 
 METHODS = ("sizey", "sizey_temporal", "ks_plus", "workflow_presets")
+FUSED = ("sizey", "sizey_temporal")
 
 
 def _method(name: str, ttf: float, k: int):
@@ -57,26 +67,65 @@ def run(scale: float = 0.1, workflow: str = "mag", k: int = 4,
                     "n_nodes": n_nodes}
 
     # ---------------------------------------------------- serial waste
+    # cold pass: first run of each fused method pays the XLA compiles
+    # (artifact only; the jitted programs are cached process-wide per
+    # frozen config, so the timed pass below is the steady state)
+    cold = {}
+    for name in FUSED:
+        t0 = time.perf_counter()
+        simulate(trace, _method(name, ttf, k), ttf=ttf)
+        cold[name] = {"wall_s": time.perf_counter() - t0}
+    report["serial_cold"] = cold
+    report["serial_cold"]["wall_ratio"] = (
+        cold["sizey_temporal"]["wall_s"] / max(cold["sizey"]["wall_s"],
+                                               1e-12))
+
     serial = {}
+    counters = {}
     for name in METHODS:
+        d0, b0 = dict(DISPATCH_COUNTS), dict(BOUNDARY_COUNTS)
         t0 = time.perf_counter()
         r = simulate(trace, _method(name, ttf, k), ttf=ttf)
+        wall = time.perf_counter() - t0
         serial[name] = {
             "tw_gbh": r.temporal_wastage_gbh,
             "wastage_gbh": r.wastage_gbh,
             "failures": r.n_failures,
-            "wall_s": time.perf_counter() - t0,
+            "wall_s": wall,
         }
+        if name == "sizey_temporal":
+            # deterministic work counters of the warm temporal run: the
+            # amortized-refit schedule and the generation-keyed boundary
+            # cache make all of these fixed at fixed seed/scale
+            counters = {
+                "full_refits": DISPATCH_COUNTS["observe_pool"]
+                - d0.get("observe_pool", 0),
+                "fused_refreshes": DISPATCH_COUNTS["refresh_pool"]
+                - d0.get("refresh_pool", 0),
+                "boundary_fits": BOUNDARY_COUNTS["fit"]
+                - b0.get("fit", 0),
+                "boundary_hits": BOUNDARY_COUNTS["hit"]
+                - b0.get("hit", 0),
+            }
         print(f"temporal_bench/serial,method={name},"
               f"tw_gbh={serial[name]['tw_gbh']:.1f},"
               f"wastage_gbh={serial[name]['wastage_gbh']:.1f},"
-              f"failures={serial[name]['failures']}")
+              f"failures={serial[name]['failures']},wall_s={wall:.2f}")
     report["serial"] = serial
+    report["counters"] = counters
     reduction = 1.0 - (serial["sizey_temporal"]["tw_gbh"]
                        / max(serial["sizey"]["tw_gbh"], 1e-12))
     report["temporal_reduction_vs_peak"] = reduction
+    wall_ratio = (serial["sizey_temporal"]["wall_s"]
+                  / max(serial["sizey"]["wall_s"], 1e-12))
+    report["wall_ratio"] = wall_ratio
     print(f"temporal_bench/headline,"
-          f"temporal_reduction_vs_peak={reduction:.3f}")
+          f"temporal_reduction_vs_peak={reduction:.3f},"
+          f"wall_ratio={wall_ratio:.2f},"
+          f"full_refits={counters['full_refits']},"
+          f"fused_refreshes={counters['fused_refreshes']},"
+          f"boundary_fits={counters['boundary_fits']},"
+          f"boundary_hits={counters['boundary_hits']}")
 
     # ------------------------------------------------- cluster + overhead
     # Poisson root arrivals stagger the first wave of each task type:
@@ -89,11 +138,19 @@ def run(scale: float = 0.1, workflow: str = "mag", k: int = 4,
     rp = simulate_cluster(ctrace, _method("sizey", ttf, k), ttf=ttf,
                           n_nodes=n_nodes)
     peak_wall = time.perf_counter() - t0
+    b0 = dict(BOUNDARY_COUNTS)
     t0 = time.perf_counter()
     rt = simulate_cluster(ctrace, _method("sizey_temporal", ttf, k), ttf=ttf,
                           n_nodes=n_nodes)
     temp_wall = time.perf_counter() - t0
     c = rt.cluster
+    # scheduling waves ask for every member's boundaries but a pool only
+    # refits once per completion generation — the hit count is the cache
+    # doing its job (deterministic, gated alongside the resize counters)
+    cluster_bounds = {
+        "boundary_fits": BOUNDARY_COUNTS["fit"] - b0.get("fit", 0),
+        "boundary_hits": BOUNDARY_COUNTS["hit"] - b0.get("hit", 0),
+    }
     report["cluster"] = {
         "peak": {"tw_gbh": rp.temporal_wastage_gbh,
                  "makespan_h": rp.cluster.makespan_h,
@@ -103,11 +160,13 @@ def run(scale: float = 0.1, workflow: str = "mag", k: int = 4,
                      "makespan_h": c.makespan_h,
                      "mean_util": c.mean_util,
                      "n_resizes": c.n_resizes,
+                     "n_resize_waves": c.n_resize_waves,
                      "n_grow_failures": c.n_grow_failures,
-                     "wall_s": temp_wall},
+                     "wall_s": temp_wall, **cluster_bounds},
         # the resize machinery's price: extra wall per successful resize
         "resize_overhead_s": temp_wall - peak_wall,
         "resizes_per_s": c.n_resizes / max(temp_wall, 1e-12),
+        "wall_ratio": temp_wall / max(peak_wall, 1e-12),
         "cluster_reduction_vs_peak":
             1.0 - rt.temporal_wastage_gbh
             / max(rp.temporal_wastage_gbh, 1e-12),
@@ -115,8 +174,10 @@ def run(scale: float = 0.1, workflow: str = "mag", k: int = 4,
     print(f"temporal_bench/cluster,"
           f"peak_tw={rp.temporal_wastage_gbh:.1f},"
           f"temporal_tw={rt.temporal_wastage_gbh:.1f},"
-          f"n_resizes={c.n_resizes},n_grow_failures={c.n_grow_failures},"
-          f"overhead_s={report['cluster']['resize_overhead_s']:.2f}")
+          f"n_resizes={c.n_resizes},n_resize_waves={c.n_resize_waves},"
+          f"n_grow_failures={c.n_grow_failures},"
+          f"overhead_s={report['cluster']['resize_overhead_s']:.2f},"
+          f"wall_ratio={report['cluster']['wall_ratio']:.2f}")
 
     if out_path:
         dump_json(out_path, report)

@@ -32,7 +32,17 @@ with K segments, ks_plus) and the time-integrated ``tw_gbh`` column; on
 boundaries (RESIZE events; ``resizes`` / ``grow_failures`` columns).
 ``--seed`` threads one master seed through trace generation (peaks,
 runtimes, usage curves), Poisson arrivals, and failure injection, so any
-CLI run is reproducible from a single number.
+CLI run is reproducible from a single number. ``--workflows`` restricts
+the sweep to a subset of the six paper workflows.
+
+``--plot-wastage [BASE]`` (with ``--cluster --temporal``) writes a
+Fig. 8-style wastage-over-time overlay of the peak sizey vs
+sizey_temporal cluster runs — cumulative time-integrated waste and
+concurrently wasted GB on one shared event-timestamped axis — to
+``BASE.csv`` plus ``BASE.png`` when matplotlib is importable:
+
+    PYTHONPATH=src python examples/workflow_sim.py --cluster --temporal \
+        --workflows mag --ttf 1.0 --plot-wastage results/wastage_timeline
 
 The expanded failure models (correlated rack outages, stragglers,
 Ponder-style failure strategies):
@@ -63,6 +73,7 @@ from repro.core import SizeyConfig
 from repro.workflow import (FAILURE_STRATEGIES, WORKFLOWS, generate_workflow,
                             node_specs_from_caps, node_specs_from_racks,
                             simulate, simulate_cluster)
+from repro.workflow.generators import CURVE_SHAPES
 from repro.workflow.cluster import PLACEMENT_POLICIES, machine_label
 
 METHODS = ["sizey", "witt_wastage", "witt_lr", "tovar_ppm",
@@ -81,6 +92,88 @@ def make(name, ttf, temporal_k, failure_strategy="retry_same"):
         return make_method(name, ttf=ttf, k_segments=temporal_k,
                            failure_strategy=failure_strategy)
     return make_method(name, ttf=ttf, failure_strategy=failure_strategy)
+
+
+def _wastage_series(res):
+    """Event-timestamped waste of one cluster run, two step series:
+    cumulative time-integrated waste (GB·h, stepping at each task finish)
+    and concurrently wasted GB (each task's mean reserved-minus-used
+    spread over its [start_h, finish_h] execution interval)."""
+    cum, total = [], 0.0
+    for t, tw in sorted((o.finish_h, o.tw_gbh) for o in res.outcomes):
+        total += tw
+        cum.append((t, total))
+    deltas = []
+    for o in res.outcomes:
+        dur = o.finish_h - o.start_h
+        if dur > 0:
+            deltas.append((o.start_h, o.tw_gbh / dur))
+            deltas.append((o.finish_h, -o.tw_gbh / dur))
+    rate, level = [], 0.0
+    for t, d in sorted(deltas):
+        level += d
+        rate.append((t, max(level, 0.0)))
+    return cum, rate
+
+
+def _sample_step(series, ts):
+    """Values of a step series at each (sorted) timestamp; 0 before the
+    first event."""
+    out, i, v = [], 0, 0.0
+    for t in ts:
+        while i < len(series) and series[i][0] <= t + 1e-12:
+            v = series[i][1]
+            i += 1
+        out.append(v)
+    return out
+
+
+def write_wastage_overlay(res_peak, res_temporal, base, title=""):
+    """Fig. 8-style overlay: peak vs temporal wastage over cluster time on
+    one shared event-timestamped axis. Writes ``base.csv`` always and
+    ``base.png`` when matplotlib is importable (the plot is an optional
+    artifact — the CSV carries the full series either way)."""
+    series = {"peak": _wastage_series(res_peak),
+              "temporal": _wastage_series(res_temporal)}
+    ts = sorted({t for cum, rate in series.values()
+                 for s in (cum, rate) for t, _ in s})
+    cols = {}
+    for name, (cum, rate) in series.items():
+        cols[f"cum_tw_{name}_gbh"] = _sample_step(cum, ts)
+        cols[f"wasted_{name}_gb"] = _sample_step(rate, ts)
+    os.makedirs(os.path.dirname(base) or ".", exist_ok=True)
+    with open(base + ".csv", "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(["t_h"] + list(cols))
+        for i, t in enumerate(ts):
+            w.writerow([round(t, 6)] + [round(cols[c][i], 4) for c in cols])
+    print(f"wrote {base}.csv ({len(ts)} event timestamps)")
+    try:
+        import matplotlib
+        matplotlib.use("Agg")
+        import matplotlib.pyplot as plt
+    except ImportError:
+        print("matplotlib unavailable; skipping the PNG")
+        return
+    fig, (ax0, ax1) = plt.subplots(2, 1, sharex=True, figsize=(8, 6))
+    styles = {"peak": dict(color="tab:red", label="peak (sizey)"),
+              "temporal": dict(color="tab:blue",
+                               label="temporal (sizey_temporal)")}
+    for name, (cum, rate) in series.items():
+        ax0.step(ts, cols[f"cum_tw_{name}_gbh"], where="post",
+                 **styles[name])
+        ax1.step(ts, cols[f"wasted_{name}_gb"], where="post",
+                 **styles[name])
+    ax0.set_ylabel("cumulative waste (GB·h)")
+    ax0.legend(loc="upper left")
+    ax1.set_ylabel("concurrently wasted GB")
+    ax1.set_xlabel("cluster time (h)")
+    if title:
+        ax0.set_title(title)
+    fig.tight_layout()
+    fig.savefig(base + ".png", dpi=120)
+    plt.close(fig)
+    print(f"wrote {base}.png")
 
 
 def main():
@@ -145,8 +238,26 @@ def main():
     ap.add_argument("--arrival-rate", type=float, default=None,
                     help="Poisson arrival rate (roots/hour) for the "
                          "cluster engine's open-system load model")
+    ap.add_argument("--workflows", nargs="+", default=None, metavar="WF",
+                    choices=sorted(WORKFLOWS),
+                    help="subset of workflows to run (default: all six)")
+    ap.add_argument("--curve-shapes", nargs="+", default=None,
+                    metavar="SHAPE", choices=CURVE_SHAPES,
+                    help="restrict generated usage-curve shapes (e.g. "
+                         "ramp — the workload where time-segmented "
+                         "reservations pay off most; default: all)")
+    ap.add_argument("--plot-wastage", nargs="?", default=None,
+                    const="results/wastage_timeline", metavar="BASE",
+                    help="write a Fig. 8-style wastage-over-time overlay "
+                         "(peak sizey vs sizey_temporal on one shared "
+                         "event-timestamped axis, first workflow/ttf "
+                         "cell) to BASE.csv and BASE.png; requires "
+                         "--cluster and --temporal")
     ap.add_argument("--out", default="results/workflow_sim.csv")
     args = ap.parse_args()
+    if args.plot_wastage and not (args.cluster and args.temporal):
+        ap.error("--plot-wastage overlays the cluster engine's peak vs "
+                 "temporal runs; combine it with --cluster and --temporal")
     for flag, val in (("--arrival-rate", args.arrival_rate),
                       ("--node-caps", args.node_caps),
                       ("--fail-rate", args.fail_rate),
@@ -204,10 +315,15 @@ def main():
     fail_seed = args.seed if args.fail_seed is None else args.fail_seed
     methods = METHODS + (TEMPORAL_METHODS if args.temporal else [])
     rows = []
-    for wf in WORKFLOWS:
+    plot_res: dict[str, object] = {}
+    for wf in (args.workflows or WORKFLOWS):
+        gen_kw = {}
+        if args.curve_shapes:
+            gen_kw["curve_shapes"] = tuple(args.curve_shapes)
         trace = generate_workflow(wf, seed=args.seed, scale=args.scale,
                                   machine_caps_gb=machine_caps,
-                                  arrival_rate_per_h=args.arrival_rate)
+                                  arrival_rate_per_h=args.arrival_rate,
+                                  **gen_kw)
         for ttf in args.ttf:
             for m in methods:
                 t0 = time.time()
@@ -271,6 +387,17 @@ def main():
                                     "grow_failures": c.n_grow_failures})
                 rows.append(row)
                 print(row, flush=True)
+                if (args.plot_wastage and m in ("sizey", "sizey_temporal")
+                        and m not in plot_res):
+                    # first (workflow, ttf) cell of each: the overlay pair
+                    plot_res[m] = (wf, ttf, r)
+    if args.plot_wastage:
+        wf, ttf, peak = plot_res["sizey"]
+        _, _, temporal = plot_res["sizey_temporal"]
+        write_wastage_overlay(
+            peak, temporal, args.plot_wastage,
+            title=f"{wf} on {n_nodes} nodes (ttf={ttf}, "
+                  f"scale={args.scale}, k={args.temporal})")
     with open(args.out, "w", newline="") as f:
         w = csv.DictWriter(f, fieldnames=rows[0].keys())
         w.writeheader()

@@ -48,6 +48,16 @@ class SizeyConfig:
     forest_depth: int = 3
     # knn
     knn_k: int = 5
+    # amortized refit schedule (full-retrain mode only): 0.0 refits every
+    # observe (the paper's online loop, bitwise-pinned default); r > 0
+    # refits a pool only once its history has grown by a fraction r since
+    # the last fit (plus forced refits on buffer growth), running a cheap
+    # fused refresh in between that keeps the in-sample predictions and
+    # the decision cache (offsets, adaptive alpha) fresh against slightly
+    # stale model states — O(log n) retrains per pool instead of O(n).
+    # The temporal subsystem turns this on for k > 1 (see
+    # repro.core.temporal.predictor.TEMPORAL_REFIT_GROWTH).
+    refit_growth: float = 0.0
     # ridge
     ridge_lambda: float = 1e-4
     # final allocation is clamped to [min_alloc_gb, machine_cap]
@@ -61,3 +71,6 @@ class SizeyConfig:
             raise ValueError(f"beta must be >= 1, got {self.beta}")
         if self.strategy not in ("argmax", "interpolation"):
             raise ValueError(f"unknown strategy {self.strategy!r}")
+        if self.refit_growth < 0.0:
+            raise ValueError(
+                f"refit_growth must be >= 0, got {self.refit_growth}")

@@ -44,6 +44,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import functools
+import math
 import time
 
 import jax
@@ -69,6 +70,12 @@ TRACE_COUNTS: collections.Counter = collections.Counter()
 # half), so cluster tests/benches can assert the O(waves x pools) bounds
 # on BOTH directions of the loop.
 DISPATCH_COUNTS: collections.Counter = collections.Counter()
+
+# aux-row kind journaling full-retrain horizons under the amortized-refit
+# schedule (cfg.refit_growth > 0): one row per FULL fit, carrying the pool
+# count the fit ran at, so warm_start can replay the exact fit whatever
+# wave shapes produced it. O(log n) rows per pool.
+FIT_KIND = "fit"
 
 
 def pallas_available() -> bool:
@@ -346,6 +353,29 @@ def _fused_observe_all(models: tuple[str, ...], cfg: SizeyConfig,
     return jax.jit(observe_fn)
 
 
+@functools.lru_cache(maxsize=None)
+def _fused_refresh_all(models: tuple[str, ...], cfg: SizeyConfig,
+                       ttf: float, use_pallas: bool):
+    """In-sample refresh + decision cache against EXISTING model states —
+    the cheap half of the observe dispatch, used between the amortized
+    full retrains of the ``refit_growth`` schedule. Newly appended history
+    and prequential-log rows flow into the accuracy score and the offset
+    selector immediately; only the model parameters stay at their last-fit
+    values. One dispatch, no training step."""
+
+    def refresh_fn(states, xs, ys, runtimes, mask, log_agg, log_actual,
+                   log_runtime, log_mask, log_model_preds):
+        TRACE_COUNTS["refresh"] += 1
+        insample = _pool_model_preds(models, cfg, use_pallas, states, xs)
+        cache = _decision_cache_core(
+            cfg.strategy, cfg.alpha, cfg.beta, ttf, cfg.adaptive_alpha,
+            insample, ys, runtimes, mask, log_agg, log_actual, log_runtime,
+            log_mask, log_model_preds)
+        return insample, cache
+
+    return jax.jit(refresh_fn)
+
+
 def _batch_bucket(k: int) -> int:
     """Round a batch size up to the next power of two (bounds compiles)."""
     b = 1
@@ -387,6 +417,12 @@ class SizeyPredictor:
         self._pview: dict[tuple[str, str], tuple] = {}
         self._predict_fn = None
         self._fit_serial: dict[tuple[str, str], int] = {}
+        # amortized-refit bookkeeping (cfg.refit_growth > 0): the history
+        # count a pool must reach before its next full retrain, and the
+        # buffer capacity its states were fit at (capacity growth forces a
+        # refit so every fit runs at the pool's current padded shape)
+        self._next_fit_at: dict[tuple[str, str], int] = {}
+        self._fit_cap: dict[tuple[str, str], int] = {}
         self.train_times_s: list[float] = []
         self.model_select_counts = np.zeros(len(self.models), np.int64)
 
@@ -559,7 +595,7 @@ class SizeyPredictor:
         if not self.fused:
             self._observe_loop(key, pool, seed)
         else:
-            self._refit_fused(key, pool, seed)
+            self._maybe_refit(key, pool, seed)
         self._fit_serial[key] = serial + 1
         self.train_times_s.append(time.perf_counter() - t0)
 
@@ -609,7 +645,7 @@ class SizeyPredictor:
             serial = self._fit_serial.get(key, 0)
             seed = (stable_hash(f"{key}") + serial + (m - 1)
                     + self.cfg.seed) % (2**31)
-            self._refit_fused(key, pool, seed)
+            self._maybe_refit(key, pool, seed)
             self._fit_serial[key] = serial + m
             self.train_times_s.append(time.perf_counter() - t0)
 
@@ -617,32 +653,117 @@ class SizeyPredictor:
         """Refit every pool restored from a JSONL checkpoint so prediction
         resumes warm (model states + decision cache, i.e. offsets and
         adaptive alpha, straight from the restored buffers and prequential
-        log). Exact for the full-retrain mode when the original process
-        observed completions one at a time: the rebuilt states use the
-        same seed as the original's last fit."""
+        log). Exact for the full-retrain mode: the rebuilt states use the
+        same seed as the original's last fit. Under the amortized-refit
+        schedule (``cfg.refit_growth > 0``) the original's last FULL fit
+        generally predates its newest records; its horizon is journaled
+        as a ``fit`` aux row on the same JSONL, so the restore replays
+        exactly that fit (the seed is a function of the fit-time count,
+        the mask truncated to the fit-time horizon) and then runs one
+        refresh over the full buffers — states, in-sample predictions,
+        and decision cache all land bitwise where the live process left
+        them, whatever the observe-wave shapes were."""
+        stride = (self.fused and not self.cfg.incremental
+                  and self.cfg.refit_growth > 0.0)
         for key, pool in self.db.pools.items():
             if pool.count < self.cfg.min_history or key in self.states:
                 continue
             m = max(pool.count - self.cfg.min_history + 1,
                     self._fit_serial.get(key, 0) + 1)
-            seed = (stable_hash(f"{key}") + (m - 1) + self.cfg.seed) \
-                % (2**31)
+            c_f = self._last_fit_count(key, pool) if stride else pool.count
+            seed = (stable_hash(f"{key}") + (c_f - self.cfg.min_history)
+                    + self.cfg.seed) % (2**31)
             if not self.fused:
                 self._observe_loop(key, pool, seed)
+            elif c_f < pool.count:
+                trunc = np.zeros(pool.cap, np.float32)
+                trunc[:c_f] = 1.0
+                self._refit_fused(key, pool, seed, mask=jnp.asarray(trunc))
+                fn = _fused_refresh_all(self.models, self.cfg, self.ttf,
+                                        self.use_pallas)
+                DISPATCH_COUNTS["refresh_pool"] += 1
+                insample, cache = fn(
+                    self.states[key], pool.xs, pool.ys, pool.runtimes,
+                    pool.mask, pool.log_agg, pool.log_actual,
+                    pool.log_runtime, pool.log_mask, pool.log_model_preds)
+                self._cache[key] = cache
+                pool.insample_preds = insample
             else:
                 self._refit_fused(key, pool, seed)
             self._fit_serial[key] = m
+            if stride:
+                self._fit_cap[key] = pool.cap
+                self._next_fit_at[key] = c_f + max(
+                    1, math.ceil(self.cfg.refit_growth * c_f))
 
-    def _refit_fused(self, key, pool, seed: int) -> None:
+    def _maybe_refit(self, key, pool, seed: int) -> None:
+        """Observe-half dispatcher under the amortized-refit schedule.
+
+        ``refit_growth == 0`` (default) retrains on every observe — the
+        paper's online loop, bitwise-pinned by the regression tests. With
+        ``refit_growth = r > 0`` a pool fully retrains only once its
+        history has grown by the fraction ``r`` since the last fit (or its
+        buffers grew, so every fit runs at the current padded shape); in
+        between, one cheap fused refresh recomputes the in-sample
+        predictions and the decision cache against the existing states, so
+        offsets and accuracy scores still see every completion. O(log n)
+        retrains per pool instead of O(n)."""
+        if (self.cfg.refit_growth <= 0.0 or self.cfg.incremental
+                or key not in self.states
+                or self._fit_cap.get(key) != pool.cap
+                or pool.count >= self._next_fit_at.get(key, 0)):
+            self._refit_fused(key, pool, seed)
+            self._note_fit(key, pool)
+            return
+        fn = _fused_refresh_all(self.models, self.cfg, self.ttf,
+                                self.use_pallas)
+        DISPATCH_COUNTS["refresh_pool"] += 1
+        insample, cache = fn(self.states[key], pool.xs, pool.ys,
+                             pool.runtimes, pool.mask, pool.log_agg,
+                             pool.log_actual, pool.log_runtime,
+                             pool.log_mask, pool.log_model_preds)
+        self._cache[key] = cache
+        pool.insample_preds = insample
+        jax.block_until_ready(insample)
+
+    def _note_fit(self, key, pool) -> None:
+        self._fit_cap[key] = pool.cap
+        self._next_fit_at[key] = pool.count + max(
+            1, math.ceil(self.cfg.refit_growth * pool.count))
+        if self.cfg.refit_growth > 0.0 and not self.cfg.incremental:
+            # journal the fit horizon (O(log n) rows per pool): which
+            # count the last FULL retrain ran at is a function of the
+            # observe-wave shapes, not of the count alone, so a restore
+            # reads it back instead of guessing (see warm_start)
+            self.db.add_aux(FIT_KIND, {"task_type": key[0],
+                                       "machine": key[1],
+                                       "count": pool.count})
+
+    def _last_fit_count(self, key, pool) -> int:
+        """The history count at which the amortized-refit schedule last
+        fully retrained this pool: the newest journaled fit row (falls
+        back to the full count for checkpoints predating the stride,
+        which then simply refit at the horizon — self-consistent, and
+        journaled again on the next fit)."""
+        c_f = pool.count
+        for row in self.db.aux.get(FIT_KIND, ()):
+            if (row["task_type"], row["machine"]) == key:
+                c_f = int(row["count"])
+        return min(c_f, pool.count)
+
+    def _refit_fused(self, key, pool, seed: int, mask=None) -> None:
         """One fused dispatch: all-model fit/update + in-sample refresh +
-        decision cache. The single device launch of the observe half."""
+        decision cache. The single device launch of the observe half.
+        ``mask`` overrides the pool mask (warm-start reconstruction of a
+        fit that ran before the newest records arrived)."""
         incremental = key in self.states and self.cfg.incremental
         fn = _fused_observe_all(self.models, self.cfg, self.ttf,
                                 self.use_pallas, incremental)
         DISPATCH_COUNTS["observe_pool"] += 1
         states, insample, cache = fn(
             self.states[key] if incremental else None, pool.xs, pool.ys,
-            pool.runtimes, pool.mask, pool.count - 1, seed,
+            pool.runtimes, pool.mask if mask is None else mask,
+            pool.count - 1, seed,
             pool.log_agg, pool.log_actual, pool.log_runtime,
             pool.log_mask, pool.log_model_preds)
         self.states[key] = states

@@ -37,6 +37,7 @@ same number of COMPLETED TASKS as the peak predictor's.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 
 import numpy as np
@@ -53,6 +54,20 @@ __all__ = ["TemporalDecision", "TemporalSizeyPredictor"]
 # aux-row kind for usage profiles in the provenance JSONL (the file keeps
 # every row; restore re-trims to the shared PROFILE_WINDOW)
 CURVE_KIND = "curve"
+
+# default amortized-refit growth factor the temporal predictor passes down
+# to the inner SizeyPredictor for k > 1 (see SizeyConfig.refit_growth):
+# full ensemble retrains happen once a pool's history grows 25% past the
+# last fit; in between, a cheap fused refresh keeps offsets and the
+# decision cache current. k = 1 never sets it — that configuration stays
+# bitwise-identical to the peak predictor's every-observe fit schedule.
+TEMPORAL_REFIT_GROWTH = 0.25
+
+# process-wide boundary-fit accounting, TRACE_COUNTS-style: "fit" counts
+# change-point sweeps actually run, "hit" counts cache servings (retries,
+# same-wave siblings), "uniform" counts no-history defaults. Tests and the
+# bench assert the refit bound with these (fits <= observe generations).
+BOUNDARY_COUNTS: collections.Counter = collections.Counter()
 
 
 @dataclasses.dataclass
@@ -90,7 +105,8 @@ class TemporalSizeyPredictor:
                  n_features: int = 1, ttf: float = 1.0,
                  default_machine_cap_gb: float = 128.0,
                  persist_path: str | None = None, fused: bool = True,
-                 use_pallas: bool | None = None):
+                 use_pallas: bool | None = None,
+                 refit_growth: float | None = None):
         if k_segments < 1:
             raise ValueError("k_segments must be >= 1")
         if n_grid < k_segments:
@@ -99,12 +115,22 @@ class TemporalSizeyPredictor:
         self.k = int(k_segments)
         self.n_grid = int(n_grid)
         self.base_features = int(n_features)
-        # k=1: NO segment feature and NO min_history scaling — the inner
-        # predictor sees exactly what the peak predictor would (bitwise)
+        # k=1: NO segment feature, NO min_history scaling and NO refit
+        # stride — the inner predictor sees exactly what the peak
+        # predictor would (bitwise). k>1 pools carry k rows per completion
+        # and amortize the full ensemble retrain (TEMPORAL_REFIT_GROWTH)
+        # unless the caller pins refit_growth (0.0 = fit every observe).
         inner_features = n_features + (1 if self.k > 1 else 0)
-        inner_cfg = (dataclasses.replace(
-            cfg, min_history=cfg.min_history * self.k)
-            if self.k > 1 else cfg)
+        if self.k > 1:
+            inner_cfg = dataclasses.replace(
+                cfg, min_history=cfg.min_history * self.k,
+                refit_growth=(TEMPORAL_REFIT_GROWTH if refit_growth is None
+                              else float(refit_growth)))
+        elif refit_growth is not None:
+            inner_cfg = dataclasses.replace(
+                cfg, refit_growth=float(refit_growth))
+        else:
+            inner_cfg = cfg
         db = ProvenanceDB(n_features=inner_features,
                           n_models=len(cfg.model_classes),
                           persist_path=persist_path)
@@ -113,12 +139,20 @@ class TemporalSizeyPredictor:
             default_machine_cap_gb=default_machine_cap_gb, fused=fused,
             use_pallas=use_pallas)
         self.cfg = inner_cfg
-        # host-side pool state: grid-sampled usage profiles + boundary fits
+        # host-side pool state: grid-sampled usage profiles + boundary
+        # fits. The boundary cache is keyed by pool GENERATION (bumped on
+        # every observe of the pool): retries and same-wave siblings hit
+        # the cached fit, a completion invalidates it, and nothing else
+        # does — so change-point sweeps run at most once per (pool,
+        # generation) however many tasks a wave schedules.
         self._profiles: dict[tuple[str, str], list[np.ndarray]] = {}
-        self._boundaries: dict[tuple[str, str], tuple[float, ...]] = {}
+        self._gen: dict[tuple[str, str], int] = {}
+        self._boundaries: dict[tuple[str, str],
+                               tuple[int, tuple[float, ...]]] = {}
         # checkpoint restore: replay profiles (k=1 checkpoints carry none),
         # then rebuild model states + decision caches from the bulk-loaded
-        # buffers so the per-segment offsets resume warm
+        # buffers so the per-segment offsets resume warm, and pre-fit the
+        # boundary cache so the first post-restore wave is served warm too
         for row in db.aux.get(CURVE_KIND, ()):
             self._profiles.setdefault(
                 (row["task_type"], row["machine"]), []).append(
@@ -127,28 +161,41 @@ class TemporalSizeyPredictor:
             del profs[:-PROFILE_WINDOW]
         if db.records:
             self.predictor.warm_start()
+        for key in self._profiles:
+            self._fit_pool(key)
 
     @property
     def db(self) -> ProvenanceDB:
         return self.predictor.db
 
     # --------------------------------------------------------- boundaries
+    def _fit_pool(self, key: tuple[str, str]) -> tuple[float, ...]:
+        """Fit (or default) the pool's boundaries and cache them under its
+        current generation."""
+        profs = self._profiles.get(key)
+        if not profs or len(profs) < 3:
+            bounds = uniform_boundaries(self.k)
+            BOUNDARY_COUNTS["uniform"] += 1
+        else:
+            bounds = fit_boundaries(np.stack(profs), self.k)
+            BOUNDARY_COUNTS["fit"] += 1
+        self._boundaries[key] = (self._gen.get(key, 0), bounds)
+        return bounds
+
     def boundaries(self, task_type: str, machine: str) -> tuple[float, ...]:
         """Current segment end fractions for one pool: the change-point
-        fit over its observed profiles (uniform until enough history)."""
+        fit over its observed profiles (uniform until enough history),
+        served from the generation-keyed cache — one fit per (pool,
+        generation) no matter how many submissions, retries, or same-wave
+        siblings ask."""
         if self.k == 1:
             return (1.0,)
         key = (task_type, machine)
         cached = self._boundaries.get(key)
-        if cached is not None:
-            return cached
-        profs = self._profiles.get(key)
-        if not profs or len(profs) < 3:
-            bounds = uniform_boundaries(self.k)
-        else:
-            bounds = fit_boundaries(np.stack(profs), self.k)
-        self._boundaries[key] = bounds
-        return bounds
+        if cached is not None and cached[0] == self._gen.get(key, 0):
+            BOUNDARY_COUNTS["hit"] += 1
+            return cached[1]
+        return self._fit_pool(key)
 
     def _seg_features(self, feats: tuple[float, ...],
                       bounds: tuple[float, ...]) -> list[tuple[float, ...]]:
@@ -219,7 +266,9 @@ class TemporalSizeyPredictor:
                 profs = self._profiles.setdefault(key, [])
                 profs.append(profile)
                 del profs[:-PROFILE_WINDOW]       # bounded fit window
-                self._boundaries.pop(key, None)   # refit lazily
+                # bump the pool generation: the cached boundary fit is
+                # stale from here; the next boundaries() call refits once
+                self._gen[key] = self._gen.get(key, 0) + 1
                 self.db.add_aux(CURVE_KIND, {
                     "task_type": key[0], "machine": key[1],
                     "profile": [float(v) for v in profile]})

@@ -16,16 +16,22 @@ engines. Two piecewise-constant step functions over *normalized runtime*
     events, legacy arithmetic) — that degenerate case is what makes the
     k=1 configuration bitwise-identical to the peak-based path.
 
-Segment boundaries are fit by a **vectorized change-point sweep**
+Segment boundaries are fit by a **change-point sweep**
 (:func:`fit_boundaries`): usage profiles are sampled onto a fixed grid, the
 per-interval over-reservation cost of covering grid columns [i, j) with one
-segment (allocated at the segment max) is built as one cumulative-max /
+segment (allocated at the segment max) is built as a cumulative-max /
 cumulative-sum sweep per start column, and an O(k·G²) dynamic program picks
 the boundaries minimizing total over-reservation across the pool history.
+The sweep runs batched over the pool's whole profile history as ONE jitted
+device program (``repro.kernels.segment_dp``, imported lazily so this
+module stays jax-free at import time); ``REPRO_SEGMENT_DP=numpy`` (env or
+``backend=`` argument) selects the numpy reference, which the jitted path
+reproduces bitwise.
 """
 from __future__ import annotations
 
 import dataclasses
+import os
 
 import numpy as np
 
@@ -77,22 +83,29 @@ def _merged_breakpoints(a, b) -> list[float]:
 class ReservationPlan:
     """A piecewise-constant reservation schedule over normalized runtime.
 
-    ``segments`` is ``((end_frac, gb), ...)`` with strictly increasing
-    ``end_frac`` and the last entry ending at 1.0. ``k == 1`` is a constant
-    reservation — the engines run it through the legacy peak path
-    unchanged (no RESIZE events), which is what makes resize-disabled runs
-    bitwise-equal to peak-based ones.
+    ``segments`` is ``((end_frac, gb), ...)`` with non-decreasing
+    ``end_frac`` and the last entry ending at 1.0. Coincident ends (a
+    zero-width segment, e.g. from duplicate breakpoints in a usage curve
+    hitting the grid twice) are tolerated at construction — they cover no
+    time and :meth:`simplify` drops them — but at least one segment must
+    have positive width. ``k == 1`` is a constant reservation — the
+    engines run it through the legacy peak path unchanged (no RESIZE
+    events), which is what makes resize-disabled runs bitwise-equal to
+    peak-based ones.
     """
     segments: tuple[tuple[float, float], ...]
 
     def __post_init__(self):
         if not self.segments:
             raise ValueError("a plan needs at least one segment")
-        prev = 0.0
+        prev, width = 0.0, False
         for end, gb in self.segments:
-            if end <= prev + _EPS:
-                raise ValueError(f"non-increasing segment end {end}")
-            prev = end
+            if end < prev - _EPS:
+                raise ValueError(f"decreasing segment end {end}")
+            width = width or end > prev + _EPS
+            prev = max(prev, end)
+        if not width:
+            raise ValueError("a plan needs a positive-width segment")
         if abs(prev - 1.0) > 1e-6:
             raise ValueError(f"plan must end at frac 1.0, got {prev}")
 
@@ -139,16 +152,22 @@ class ReservationPlan:
         return self.first_violation(curve) is None
 
     def simplify(self) -> "ReservationPlan":
-        """Merge adjacent segments with equal reservation. A plan whose
+        """Drop zero-width segments and merge adjacent segments with equal
+        reservation. Zero-width segments (coincident ends) cover no time
+        and would otherwise surface as no-op RESIZE events; a plan whose
         predictions all agree collapses to k=1 and is then executed on the
         legacy peak path — cold pools (flat preset plans) therefore behave
         exactly like the peak-based predictor."""
         out: list[tuple[float, float]] = []
+        prev = 0.0
         for end, gb in self.segments:
+            if end <= prev + _EPS:
+                continue                       # zero width: covers no time
             if out and abs(out[-1][1] - gb) <= 1e-9:
                 out[-1] = (end, out[-1][1])
             else:
                 out.append((end, gb))
+            prev = end
         return ReservationPlan(tuple(out)) if len(out) < self.k else self
 
     def clamped(self, cap_gb: float, min_gb: float = 0.0) -> "ReservationPlan":
@@ -182,8 +201,9 @@ def uniform_boundaries(k: int) -> tuple[float, ...]:
     return tuple((i + 1) / k for i in range(k))
 
 
-def fit_boundaries(profiles: np.ndarray, k: int) -> tuple[float, ...]:
-    """Vectorized change-point sweep: fit ``k`` segment end fractions to a
+def fit_boundaries(profiles: np.ndarray, k: int, *,
+                   backend: str | None = None) -> tuple[float, ...]:
+    """Change-point sweep: fit up to ``k`` segment end fractions to a
     stack of grid-sampled usage profiles.
 
     ``profiles`` is (M, G): M observed executions sampled on a G-cell grid
@@ -191,44 +211,46 @@ def fit_boundaries(profiles: np.ndarray, k: int) -> tuple[float, ...]:
     with one segment is the over-reservation a max-allocated segment would
     incur there, summed over all M profiles:
 
-        cost(i, j) = sum_m sum_{g in [i,j)} (max_{h in [i,j)} P[m,h] - P[m,g])
+        cost(i, j) = sum_m ( max_{g in [i,j)} P[m,g] * (j - i)
+                             - sum_{g in [i,j)} P[m,g] )
 
-    For each start column i, the costs of ALL widths are produced by one
-    cumulative-max / cumulative-sum sweep (no inner python loop over j),
-    then an O(k·G²) dynamic program (vectorized over split points) picks
-    the boundary set minimizing the total. Returns k end fractions, the
-    last being 1.0; ``k`` is clamped to G.
+    (a segment reserves its own max for its whole width, so the waste is
+    the area between that flat reservation and the actual usage). For
+    each start column i, one cumulative-max / cumulative-sum sweep
+    produces the costs of all widths, then an O(k·G²) dynamic program
+    picks the boundary set minimizing the total. Returns end fractions,
+    the last being 1.0; ``k`` is clamped to G. When the optimum places
+    two cuts on the same grid column (fewer than k distinct change points
+    in the history), the coincident cut is dropped — zero-width segments
+    never reach a :class:`ReservationPlan`.
+
+    ``backend`` selects the implementation: ``"jax"`` (default) runs the
+    whole history batch as one jitted device program through
+    ``repro.kernels.segment_dp.fit_cuts``; ``"numpy"`` runs the bitwise
+    reference (also reachable via ``REPRO_SEGMENT_DP=numpy`` for a whole
+    process). Both return identical cut indices on any input — asserted
+    property-style in ``tests/test_segment_dp.py``.
     """
-    P = np.atleast_2d(np.asarray(profiles, np.float64))
+    P = np.atleast_2d(np.asarray(profiles, np.float32))
     m, g = P.shape
     if m == 0 or g == 0:
         return uniform_boundaries(max(k, 1))
     k = int(max(1, min(k, g)))
     if k == 1:
         return (1.0,)
-    # cost[i, j] for j > i via one cummax/cumsum sweep per start column
-    cost = np.full((g + 1, g + 1), np.inf)
-    for i in range(g):
-        tail = P[:, i:]
-        rmax = np.maximum.accumulate(tail, axis=1)
-        csum = np.cumsum(tail, axis=1)
-        widths = np.arange(1, g - i + 1, dtype=np.float64)
-        cost[i, i + 1:] = np.sum(rmax * widths[None, :] - csum, axis=0)
-    # DP over segment counts; split-point minimization vectorized per cell
-    dp = np.full((k + 1, g + 1), np.inf)
-    back = np.zeros((k + 1, g + 1), np.int64)
-    dp[0, 0] = 0.0
-    for s in range(1, k + 1):
-        for j in range(s, g + 1):
-            vals = dp[s - 1, :j] + cost[:j, j]
-            i = int(np.argmin(vals))
-            dp[s, j] = vals[i]
-            back[s, j] = i
-    cuts = [g]
-    for s in range(k, 0, -1):
-        cuts.append(int(back[s, cuts[-1]]))
-    cuts = cuts[::-1][1:]          # drop the leading 0; keep k end columns
-    return tuple(c / g for c in cuts)
+    backend = backend or os.environ.get("REPRO_SEGMENT_DP", "jax")
+    if backend == "numpy":
+        from repro.kernels.segment_dp.ref import fit_cuts_ref
+        cuts = fit_cuts_ref(P, k)
+    else:           # lazy: keeps this module jax-free at import time
+        from repro.kernels.segment_dp.ops import fit_cuts
+        cuts = fit_cuts(P, k)
+    out: list[float] = []
+    for c in cuts:
+        frac = float(c) / g
+        if not out or frac > out[-1] + _EPS:   # drop coincident cuts
+            out.append(frac)
+    return tuple(out)
 
 
 def segment_peaks(profile: np.ndarray, boundaries: tuple[float, ...]

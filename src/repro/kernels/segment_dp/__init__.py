@@ -1,0 +1,14 @@
+"""Change-point segmentation DP over pooled usage profiles.
+
+``ops.fit_cuts`` is the jitted entry point the temporal predictor uses:
+one device program builds the over-reservation cost matrix over a pool's
+whole profile history (batched over profiles, padded to power-of-two
+buckets) and runs the O(k·G²) boundary DP, returning the k cut columns.
+``kernel.py`` holds the Pallas cost-matrix builder for TPU/GPU;
+``ref.py`` is the numpy bitwise reference (`REPRO_SEGMENT_DP=numpy`).
+"""
+from repro.kernels.segment_dp.ops import fit_cuts, profile_bucket
+from repro.kernels.segment_dp.ref import cost_matrix_ref, fit_cuts_ref
+
+__all__ = ["fit_cuts", "profile_bucket", "cost_matrix_ref",
+           "fit_cuts_ref"]

@@ -1,0 +1,60 @@
+"""Pallas cost-matrix builder for the segment-boundary DP (TPU/GPU).
+
+Grid: one program per start column i. Each program keeps the whole
+(M, G) profile block in VMEM and walks the grid columns once, carrying
+the running segment max per profile, the running deficit total, and the
+emitted cost row — O(M·G) work per program, O(M·G²) total, no host
+round-trips between the cost build and the DP that consumes it.
+
+The in-kernel profile reduction uses ``jnp.sum`` (backend reduction
+order), so this path is validated against the jnp/numpy reference for
+boundary-index equality on structured profiles and to float tolerance on
+noisy ones — the sequential-fold jnp path in ``ops.py`` carries the
+bitwise contract on CPU (see ``ref.py``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _cost_row_body(p_ref, o_ref):
+    i = pl.program_id(0)
+    P = p_ref[...].astype(jnp.float32)            # (M, G)
+    g = P.shape[1]
+    cols = jnp.arange(g)
+
+    def step(gi, carry):
+        rmax, csum, row = carry
+        col = jax.lax.dynamic_index_in_dim(P, gi, axis=1, keepdims=False)
+        active = gi >= i
+        rmax = jnp.where(active, jnp.maximum(rmax, col), rmax)
+        csum = jnp.where(active, csum + col, csum)    # (M,) running sums
+        width = (gi - i + 1).astype(jnp.float32)
+        val = jnp.where(active, rmax * width - csum, 0.0)   # (M,)
+        row = jnp.where((cols == gi) & active, jnp.sum(val), row)
+        return rmax, csum, row
+
+    init = (jnp.full(P.shape[0], -jnp.inf, jnp.float32),
+            jnp.zeros(P.shape[0], jnp.float32), jnp.zeros(g, jnp.float32))
+    _, _, row = jax.lax.fori_loop(0, g, step, init)
+    o_ref[0] = row.astype(o_ref.dtype)
+
+
+def segment_cost_blocked(P, *, interpret: bool = False):
+    """(M, G) float32 profiles -> (G+1, G+1) cost matrix, ``inf`` where
+    ``j <= i`` (same layout as ``ops.cost_matrix_jnp``)."""
+    m, g = P.shape
+    cum = pl.pallas_call(
+        _cost_row_body,
+        grid=(g,),
+        in_specs=[pl.BlockSpec((m, g), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((1, g), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, g), jnp.float32),
+        interpret=interpret,
+    )(P)
+    idx = jnp.arange(g)
+    cost = jnp.full((g + 1, g + 1), jnp.inf, jnp.float32)
+    valid = idx[None, :] >= idx[:, None]
+    return cost.at[:g, 1:].set(jnp.where(valid, cum, jnp.inf))

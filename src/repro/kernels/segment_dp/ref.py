@@ -1,0 +1,75 @@
+"""Numpy bitwise reference for the segment-boundary DP.
+
+This is the contract the jitted path (`ops.fit_cuts`) must reproduce
+EXACTLY — not approximately: the fitted boundaries are cut INDICES picked
+by argmin, so the two implementations perform every rounding in the same
+order. The shared recipe:
+
+  * everything runs in float32 (the device dtype; no x64 anywhere);
+  * the per-segment cost is the paper's **over-reservation**: a segment
+    covering grid columns [i, j) reserves its own max for its whole
+    width, so ``cost(i, j) = sum_m (rmax[m]·(j-i) - csum[m])`` with
+    ``rmax[m] = max_{g in [i, j)} P[m, g]`` (an exact running max) and
+    ``csum[m]`` the running sum of ``P[m, i:j]``. Every per-(m, j) value
+    is built from the same three scalar ops in the same order — one
+    float32 multiply ``rmax·width``, the sequential column sum, one
+    subtraction — so both implementations round identically;
+  * the cumulative sum over columns ``g`` is a sequential running sum
+    (``np.cumsum`` accumulates left-to-right; ops.py scans columns);
+  * the sum over profiles ``m`` is a sequential left fold in index order
+    (here: an explicit accumulation loop; in ops.py: ``lax.scan``);
+  * the DP minimization is a first-index argmin over whole columns
+    (``np.argmin`` and ``jnp.argmin`` both return the first minimum).
+
+Zero rows cost exactly 0 everywhere (rmax == csum == 0, and
+``0·width - 0 == 0``), so padding the profile axis is free — the jitted
+path exploits that for its power-of-two compile buckets while staying
+bitwise-equal to this unpadded loop.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["cost_matrix_ref", "fit_cuts_ref"]
+
+
+def cost_matrix_ref(profiles: np.ndarray) -> np.ndarray:
+    """(M, G) float32 profiles -> (G+1, G+1) float32 cost, ``inf`` where
+    ``j <= i``; ``cost[i, j]`` is the over-reservation of covering grid
+    columns [i, j) by one segment allocated at the segment max."""
+    P = np.asarray(profiles, np.float32)
+    m, g = P.shape
+    cost = np.full((g + 1, g + 1), np.inf, np.float32)
+    widths = np.arange(1, g + 1, dtype=np.float32)      # exact small ints
+    for i in range(g):
+        tail = P[:, i:]
+        rmax = np.maximum.accumulate(tail, axis=1)      # exact, order-free
+        csum = np.cumsum(tail, axis=1, dtype=np.float32)   # sequential
+        val = rmax * widths[None, :g - i] - csum        # (M, g-i)
+        colsum = np.zeros(g - i, np.float32)
+        for row in val:                                 # left fold over m
+            colsum += row
+        cost[i, i + 1:] = colsum
+    return cost
+
+
+def fit_cuts_ref(profiles: np.ndarray, k: int) -> np.ndarray:
+    """Boundary DP on the reference cost matrix: the k cut columns (ends,
+    last == G) minimizing total over-reservation. ``k`` must already be
+    clamped to [1, G]."""
+    P = np.asarray(profiles, np.float32)
+    g = P.shape[1]
+    cost = cost_matrix_ref(P)
+    dp = np.full((k + 1, g + 1), np.inf, np.float32)
+    back = np.zeros((k + 1, g + 1), np.int64)
+    dp[0, 0] = 0.0
+    for s in range(1, k + 1):
+        cand = dp[s - 1][:, None] + cost                # (g+1, g+1)
+        back[s] = np.argmin(cand, axis=0)               # first index
+        dp[s] = cand[back[s], np.arange(g + 1)]
+    cuts = np.empty(k, np.int64)
+    j = g
+    for s in range(k, 0, -1):
+        cuts[s - 1] = j
+        j = int(back[s, j])
+    return cuts

@@ -69,6 +69,9 @@ possibly different) memory capacity:
     are observed as ONE batch: methods exposing ``complete_batch`` get the
     whole wave and fuse the model updates into one observe dispatch per
     pool (``DISPATCH_COUNTS['observe_pool']`` asserts the bound);
+    same-clock ``RESIZE`` runs drain the same way — one wave applied in
+    pop order (``n_resize_waves`` counts them), with the node's zero-dt
+    ``_advance`` fast path skipping the per-member reservation fsum;
   * per-attempt waste/retry arithmetic is the shared
     :class:`~repro.workflow.accounting.AttemptLedger`, so the serial
     simulator is exactly the 1-node / sequential-arrival / failure-free
@@ -231,6 +234,11 @@ class Node:
 
     def _advance(self, t: float) -> None:
         dt = t - self.last_t
+        if dt == 0.0:
+            # same-clock call: every accumulation below would add an
+            # exact 0.0 — resize waves hit this once per member instead
+            # of paying the O(held) hold-integral update each
+            return
         self.reserved_gbh += self.reserved_gb * dt
         if not self.up:
             self.down_h += dt
@@ -602,6 +610,7 @@ class ClusterEngine:
         self.n_waves = self.n_size_calls = self.n_aborted = 0
         self.n_preemptions = self.n_node_failures = 0
         self.n_resizes = self.n_grow_failures = self.n_complete_waves = 0
+        self.n_resize_waves = 0
         self.n_failure_events = self.n_rack_failures = 0
         self.n_straggler_attempts = 0
         self.straggler_extra_h = 0.0
@@ -767,6 +776,47 @@ class ClusterEngine:
         self._jev("recover", self.nodes[idx].name)
         return True
 
+    # -------------------------------------------------------- resize wave
+    def _apply_resize_wave(self, clock: float,
+                           wave: list[tuple[int, int]]) -> None:
+        """Apply a coalesced run of same-clock ``_RESIZE`` events, in pop
+        order. Per-event semantics are unchanged (grow checks see every
+        earlier member's effect on ``free_gb``, grow failures requeue at
+        the original seq), so journals replay bitwise; the wave only
+        amortizes the event-loop dispatch and, via the node's zero-``dt``
+        ``_advance`` fast path, the per-resize reservation fsum."""
+        self.n_resize_waves += 1
+        for token, seg_idx in wave:
+            if token not in self.running:
+                continue   # attempt already killed/grow-flattened
+            entry, node, started = self.running[token]
+            led = entry.ledger
+            if not led.temporal_active \
+                    or seg_idx >= len(led.plan.segments):
+                continue   # plan flattened since scheduling
+            new_gb = led.plan.segments[seg_idx][1]
+            delta = new_gb - node.held_gb(token)
+            if delta <= 0 or node.free_gb >= delta - 1e-9:
+                self.total_reserved += node.resize(clock, token, new_gb)
+                self.peak_reserved = max(self.peak_reserved,
+                                         self.total_reserved)
+                self.n_resizes += 1
+                self._jev("resize", list(entry.task.key), new_gb)
+            else:
+                # grow failure: node too full at the boundary — burn the
+                # partial plan integral (interruption, no OOM accounting)
+                # and requeue at the original seq; repeated denials
+                # flatten the plan to a constant peak reservation
+                # (guaranteed progress)
+                self.n_grow_failures += 1
+                self.running.pop(token)
+                gb = node.release(clock, token)
+                self.total_reserved -= gb
+                self._note_straggle(led, clock - started)
+                led.record_grow_failure(clock - started)
+                self._jev("grow_denied", list(entry.task.key))
+                self.queue.append(entry)
+
     # ---------------------------------------------------------------- step
     def step(self) -> bool:
         """Advance the engine by one event-drain + scheduling round.
@@ -805,37 +855,17 @@ class ClusterEngine:
                     self._jev("arrive", list(payload.key))
                     continue
                 if kind == _RESIZE:
-                    token, seg_idx = payload
-                    if token not in self.running:
-                        continue   # attempt already killed/grow-flattened
-                    entry, node, started = self.running[token]
-                    led = entry.ledger
-                    if not led.temporal_active \
-                            or seg_idx >= len(led.plan.segments):
-                        continue   # plan flattened since scheduling
-                    new_gb = led.plan.segments[seg_idx][1]
-                    delta = new_gb - node.held_gb(token)
-                    if delta <= 0 or node.free_gb >= delta - 1e-9:
-                        self.total_reserved += node.resize(clock, token,
-                                                           new_gb)
-                        self.peak_reserved = max(self.peak_reserved,
-                                                 self.total_reserved)
-                        self.n_resizes += 1
-                        self._jev("resize", list(entry.task.key), new_gb)
-                    else:
-                        # grow failure: node too full at the boundary —
-                        # burn the partial plan integral (interruption, no
-                        # OOM accounting) and requeue at the original seq;
-                        # repeated denials flatten the plan to a constant
-                        # peak reservation (guaranteed progress)
-                        self.n_grow_failures += 1
-                        self.running.pop(token)
-                        gb = node.release(clock, token)
-                        self.total_reserved -= gb
-                        self._note_straggle(led, clock - started)
-                        led.record_grow_failure(clock - started)
-                        self._jev("grow_denied", list(entry.task.key))
-                        self.queue.append(entry)
+                    # drain the whole same-clock run of RESIZE events into
+                    # one wave (the complete_batch pattern): a scheduling
+                    # wave's segment boundaries land at identical clocks
+                    # with consecutive event seqs, so the run is applied
+                    # in exactly pop order — bitwise the per-event path,
+                    # paying the drain dispatch once per wave
+                    wave = [payload]
+                    while events and events[0][0] <= clock \
+                            and events[0][2] == _RESIZE:
+                        wave.append(heapq.heappop(events)[3])
+                    self._apply_resize_wave(clock, wave)
                     continue
                 if kind == _CRASH:
                     self.n_failure_events += 1
@@ -1203,6 +1233,7 @@ class ClusterEngine:
             n_node_failures=self.n_node_failures,
             node_downtime_h={n.name: n.down_h for n in self.nodes},
             n_resizes=self.n_resizes,
+            n_resize_waves=self.n_resize_waves,
             n_grow_failures=self.n_grow_failures,
             n_complete_waves=self.n_complete_waves,
             failure_strategy=self.failure_strategy,
@@ -1322,6 +1353,7 @@ class ClusterEngine:
                 "n_preemptions": self.n_preemptions,
                 "n_node_failures": self.n_node_failures,
                 "n_resizes": self.n_resizes,
+                "n_resize_waves": self.n_resize_waves,
                 "n_grow_failures": self.n_grow_failures,
                 "n_complete_waves": self.n_complete_waves,
                 "n_failure_events": self.n_failure_events,

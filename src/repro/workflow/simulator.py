@@ -88,6 +88,7 @@ class ClusterMetrics:
         dataclasses.field(default_factory=dict)
     # temporal / batched-observe engine fields (PR 4)
     n_resizes: int = 0                 # successful reservation resizes
+    n_resize_waves: int = 0            # coalesced same-clock resize drains
     n_grow_failures: int = 0           # denied grows (node full at boundary)
     n_complete_waves: int = 0          # event drains with >= 1 completion
     # failure-model expansion fields (PR 5). Counting convention:

@@ -1,0 +1,107 @@
+"""Segment-boundary DP kernel package: the jitted (and Pallas-interpret)
+paths must return cut indices BITWISE equal to the numpy reference on any
+input — the cuts are argmin picks, so one differently-rounded float flips
+a boundary — across profile shapes, history sizes spanning power-of-two
+compile buckets, and segment counts. Plus backend routing and the
+zero-width/coincident-boundary regression."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.temporal.segments import (ReservationPlan, fit_boundaries,
+                                          grid_profile)
+from repro.kernels.segment_dp import (cost_matrix_ref, fit_cuts,
+                                      fit_cuts_ref, profile_bucket)
+from repro.kernels.segment_dp.ops import cost_matrix_jnp
+
+G = 32
+SHAPES = ("ramp", "plateau", "spike", "flat")
+# history sizes straddling profile-bucket boundaries (8, 16, 128, 256):
+# the padding rows a bucket adds must contribute exactly zero cost
+SIZES = (1, 3, 7, 8, 9, 127, 128, 129)
+
+
+def _profiles(kind: str, m: int, rng) -> np.ndarray:
+    t = np.linspace(0, 1, G, dtype=np.float32)
+    if kind == "ramp":
+        base = t
+    elif kind == "plateau":
+        base = np.where(t < 0.5, 0.2, 0.9).astype(np.float32)
+    elif kind == "spike":
+        base = np.where((t > 0.4) & (t < 0.6), 1.0, 0.1).astype(np.float32)
+    else:
+        base = np.full(G, 0.5, np.float32)
+    noise = rng.normal(0, 0.05, (m, G)).astype(np.float32)
+    return np.clip(base[None] + noise, 0, None).astype(np.float32)
+
+
+@pytest.mark.parametrize("kind", SHAPES)
+def test_jitted_cuts_bitwise_match_numpy_reference(kind):
+    rng = np.random.default_rng(hash(kind) % (2**31))
+    for m in SIZES:
+        P = _profiles(kind, m, rng)
+        for k in (1, 2, 4, 7):
+            jit_cuts = fit_cuts(P, k)
+            ref_cuts = fit_cuts_ref(P, k)
+            np.testing.assert_array_equal(
+                jit_cuts, ref_cuts,
+                err_msg=f"shape={kind} m={m} k={k}")
+
+
+def test_cost_matrix_bitwise_and_bucket_padding_free():
+    rng = np.random.default_rng(7)
+    P = _profiles("spike", 16, rng)          # 16 is its own bucket
+    cj = np.asarray(cost_matrix_jnp(jnp.asarray(P)))
+    np.testing.assert_array_equal(cj, cost_matrix_ref(P))
+    # zero-row padding (what fit_cuts adds below a bucket) costs nothing
+    padded = np.concatenate([P, np.zeros((16, G), np.float32)])
+    np.testing.assert_array_equal(cost_matrix_ref(padded),
+                                  cost_matrix_ref(P))
+
+
+def test_pallas_interpret_route_matches_reference():
+    rng = np.random.default_rng(11)
+    for kind in SHAPES:
+        P = _profiles(kind, 16, rng)
+        for k in (1, 3, 5):
+            np.testing.assert_array_equal(
+                fit_cuts(P, k, use_pallas=True, interpret=True),
+                fit_cuts_ref(P, k), err_msg=f"shape={kind} k={k}")
+
+
+def test_profile_bucket_rounds_up_to_powers_of_two():
+    assert [profile_bucket(m) for m in (1, 2, 3, 8, 9, 128, 129)] \
+        == [1, 2, 4, 8, 16, 128, 256]
+
+
+def test_fit_boundaries_backend_routing(monkeypatch):
+    rng = np.random.default_rng(3)
+    P = _profiles("plateau", 8, rng).astype(np.float64)
+    default = fit_boundaries(P, 3)
+    assert fit_boundaries(P, 3, backend="numpy") == default
+    monkeypatch.setenv("REPRO_SEGMENT_DP", "numpy")
+    assert fit_boundaries(P, 3) == default
+
+
+def test_fit_boundaries_strictly_increasing_on_degenerate_profiles():
+    # all-equal profiles tie every split at (near-)zero cost; duplicate
+    # breakpoints in the usage curve collapse grid cells the same way —
+    # the returned end fractions must still be strictly increasing and
+    # end at 1.0 (no zero-width segments reach a ReservationPlan)
+    for profs in (np.zeros((4, G)), np.full((6, G), 3.0),
+                  np.stack([grid_profile(
+                      ((0.5, 2.0), (0.5, 5.0), (1.0, 1.0)), G)] * 5)):
+        for k in (2, 4, 8):
+            bounds = fit_boundaries(profs, k)
+            assert bounds[-1] == 1.0
+            assert all(b2 > b1 for b1, b2 in zip(bounds, bounds[1:]))
+            ReservationPlan(tuple((b, 1.0) for b in bounds))  # constructs
+
+
+def test_grid_profile_tolerates_duplicate_breakpoints():
+    # a zero-width step (duplicate end fraction) covers no grid cell; the
+    # sampled profile equals the deduplicated curve's
+    dup = ((0.5, 2.0), (0.5, 5.0), (1.0, 1.0))
+    clean = ((0.5, 2.0), (1.0, 1.0))
+    np.testing.assert_array_equal(grid_profile(dup, 8),
+                                  grid_profile(clean, 8))

@@ -521,3 +521,164 @@ def test_persistence_restores_warm_for_peak_and_k1(tmp_path):
         assert m2._pending[id(probe)].source == "model", \
             f"{label} restore must resume warm, not preset"
     assert allocs["peak"] == allocs["k1"]   # bitwise, both warm
+
+
+# --------------------------------------------- fused temporal sizing path
+def _curve_task(idx, peak, input_gb):
+    return _task(idx=idx, actual=peak, runtime=1.0, input_gb=input_gb,
+                 curve=((0.4, 0.3 * peak), (0.8, 0.7 * peak), (1.0, peak)))
+
+
+def test_boundary_cache_one_fit_per_pool_generation():
+    """Retries and same-wave siblings must hit the generation-keyed
+    boundary cache; only an observed completion (generation bump) may
+    trigger a refit."""
+    from repro.core.temporal.predictor import (BOUNDARY_COUNTS,
+                                               TemporalSizeyPredictor)
+    p = TemporalSizeyPredictor(_cfg(), k_segments=3)
+    for i in range(4):
+        t = _curve_task(i, 4.0 + i, 1.0 + i)
+        p.observe(p.predict(t), t, 1)
+
+    snap = dict(BOUNDARY_COUNTS)
+    b1 = p.boundaries("A", "m")              # stale after the observes
+    assert BOUNDARY_COUNTS["fit"] == snap.get("fit", 0) + 1
+    assert p.boundaries("A", "m") == b1      # retry of the same attempt
+    assert BOUNDARY_COUNTS["fit"] == snap.get("fit", 0) + 1
+    assert BOUNDARY_COUNTS["hit"] == snap.get("hit", 0) + 1
+    # a wave of siblings: one boundaries() ask per task, zero refits
+    wave = [_curve_task(10 + i, 6.0, 2.0) for i in range(3)]
+    ds = p.predict_batch(wave)
+    assert all(d.boundaries == b1 for d in ds)
+    assert BOUNDARY_COUNTS["fit"] == snap.get("fit", 0) + 1
+    assert BOUNDARY_COUNTS["hit"] == snap.get("hit", 0) + 4
+    # an observed completion bumps the generation: exactly one refit
+    p.observe_batch([(ds[0], wave[0], 1)])
+    p.boundaries("A", "m")
+    p.boundaries("A", "m")
+    assert BOUNDARY_COUNTS["fit"] == snap.get("fit", 0) + 2
+
+
+def test_warm_start_rebuilds_boundary_cache(tmp_path):
+    """A restored predictor must come up with a WARM boundary cache: the
+    ctor refits each replayed pool once, so the first scheduling wave
+    after a resume pays zero boundary fits."""
+    from repro.core.temporal.predictor import (BOUNDARY_COUNTS,
+                                               TemporalSizeyPredictor)
+    path = str(tmp_path / "prov.jsonl")
+    cfg = _cfg()
+    p = TemporalSizeyPredictor(cfg, k_segments=3, persist_path=path)
+    for i in range(5):
+        t = _curve_task(i, 3.0 + i, 1.0 + 0.5 * i)
+        p.observe(p.predict(t), t, 1)
+    b_live = p.boundaries("A", "m")
+
+    p2 = TemporalSizeyPredictor(cfg, k_segments=3, persist_path=path)
+    snap = dict(BOUNDARY_COUNTS)
+    assert p2.boundaries("A", "m") == b_live
+    assert BOUNDARY_COUNTS["fit"] == snap.get("fit", 0), \
+        "restore must pre-fit the cache, not defer to the first ask"
+    assert BOUNDARY_COUNTS["hit"] == snap.get("hit", 0) + 1
+
+
+def test_amortized_refit_schedule_bounds_full_retrains():
+    """With ``refit_growth = r`` the observe half may fully retrain only
+    when the history grew by the fraction r since the last fit (or the
+    buffers grew); every other completion costs one cheap refresh. The
+    dispatch counters must replay that schedule exactly — and come out
+    sublinear in n, which is the whole point."""
+    import math
+    cfg = _cfg(refit_growth=0.5)
+    p = SizeyPredictor(cfg)
+    rng = np.random.default_rng(0)
+    n = 40
+    f0 = DISPATCH_COUNTS["observe_pool"]
+    r0 = DISPATCH_COUNTS["refresh_pool"]
+    exp_fits = exp_refreshes = 0
+    fitted, fit_cap, next_fit = False, None, 0
+    for i, x in enumerate(rng.uniform(1, 8, n)):
+        d = p.predict("t", "m", (float(x),), 32.0)
+        p.observe(d, float(2 * x + 1), 1.0, 1)
+        pool = p.db.pool("t", "m")
+        if pool.count < cfg.min_history:
+            continue                         # below min_history: no work
+        if not fitted or fit_cap != pool.cap or pool.count >= next_fit:
+            exp_fits += 1
+            fitted, fit_cap = True, pool.cap
+            next_fit = pool.count + max(
+                1, math.ceil(cfg.refit_growth * pool.count))
+        else:
+            exp_refreshes += 1
+    fits = DISPATCH_COUNTS["observe_pool"] - f0
+    refreshes = DISPATCH_COUNTS["refresh_pool"] - r0
+    assert fits == exp_fits
+    assert refreshes == exp_refreshes
+    assert fits + refreshes == n - (cfg.min_history - 1)
+    assert fits < refreshes                  # sublinear: fits are O(log n)
+
+
+def test_refit_stride_refresh_keeps_decisions_seen():
+    """Between full retrains the fused refresh must still fold every
+    completion into offsets/decisions: a prediction after a refresh-only
+    observe differs from one made before it (the pool saw the data)."""
+    cfg = _cfg(refit_growth=1.0)             # long stride: mostly refresh
+    p = SizeyPredictor(cfg)
+    rng = np.random.default_rng(1)
+    for x in rng.uniform(1, 8, 12):
+        d = p.predict("t", "m", (float(x),), 32.0)
+        p.observe(d, float(2 * x + 1), 1.0, 1)
+    before = p.predict("t", "m", (4.0,), 32.0)
+    # a surprising completion, observed in the refresh-only regime
+    d = p.predict("t", "m", (4.0,), 32.0)
+    p.observe(d, 30.0, 1.0, 1)
+    after = p.predict("t", "m", (4.0,), 32.0)
+    assert after.source == before.source == "model"
+    assert after.allocation_gb != before.allocation_gb
+
+
+def test_cluster_coalesces_same_clock_resize_wave():
+    """Same-clock RESIZE events must drain as ONE wave: with three
+    identical plan-driven tasks starting together on three nodes, the
+    engine applies all three boundary crossings in a single wave while
+    still counting every individual resize."""
+    plan = ((0.5, 5.0), (1.0, 10.0))
+    curve = ((0.5, 4.0), (1.0, 10.0))
+    tasks = [_task(idx=i, actual=10.0, runtime=1.0, curve=curve)
+             for i in range(3)]
+    trace = WorkflowTrace("wf", tasks, machine_cap_gb=64.0)
+    r = simulate_cluster(trace, FixedPlanMethod(plan), n_nodes=3)
+    assert r.cluster.n_resizes == 3
+    assert r.cluster.n_resize_waves == 1
+    assert r.cluster.n_grow_failures == 0
+    assert r.n_failures == 0
+
+
+# ------------------------------------------- zero-width segment regression
+def test_plan_tolerates_and_simplifies_zero_width_segments():
+    """Coincident grid boundaries (duplicate breakpoints in the usage
+    curve) may produce zero-width segments; the plan must construct,
+    ``simplify()`` must drop them, and plan-aware accounting must keep
+    the temporal machinery active."""
+    p = ReservationPlan(((0.4, 2.0), (0.4, 6.0), (1.0, 3.0)))
+    assert p.simplify().segments == ((0.4, 2.0), (1.0, 3.0))
+    # a zero-width head segment drops too
+    q = ReservationPlan(((0.0, 9.0), (1.0, 3.0)))
+    assert q.simplify().segments == ((1.0, 3.0),)
+    # decreasing ends and all-zero-width plans stay rejected
+    with pytest.raises(ValueError):
+        ReservationPlan(((0.5, 2.0), (0.4, 3.0)))
+    with pytest.raises(ValueError):
+        ReservationPlan(((0.0, 2.0), (0.0, 3.0)))   # all zero-width
+    # the ledger keeps a simplified two-segment plan temporal
+    task = _task(actual=2.5, runtime=1.0,
+                 curve=((0.4, 2.0), (1.0, 2.5)))
+    led = AttemptLedger(task, 6.0, 128.0, 1.0)
+    led.set_plan(ReservationPlan(((0.4, 6.0), (0.4, 5.0), (1.0, 3.0))))
+    assert led.plan is not None and led.plan.k == 2
+
+    # duplicate breakpoints in a usage curve fit cleanly end to end
+    dup_curve = ((0.3, 1.0), (0.3, 4.0), (1.0, 4.0))
+    profs = np.stack([grid_profile(dup_curve, 32) for _ in range(4)])
+    bounds = fit_boundaries(profs, 4)
+    assert bounds[-1] == 1.0
+    assert all(b2 > b1 for b1, b2 in zip(bounds, bounds[1:]))
