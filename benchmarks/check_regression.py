@@ -70,6 +70,10 @@ RULES: dict[str, list[dict]] = {
         # a matched trace/node-set never admission-rejects
         {"path": "frontier[mix=hetero_16_32_64,policy=best_fit].n_aborted",
          "max": 0},
+        # node-count frontier: more nodes may never make the makespan
+        # WORSE, and the big-cluster cell's event count is deterministic
+        {"path": "node_frontier[n_nodes=32].makespan_h", "max_growth": 0.10},
+        {"path": "node_frontier[n_nodes=32].n_events", "max_growth": 0.0},
     ],
     "BENCH_failure.json": [
         # the acceptance contract: crash-aware sizing must keep beating
@@ -89,6 +93,28 @@ RULES: dict[str, list[dict]] = {
         # seed; bound their growth (wall times stay ungated — CI noise)
         {"path": "warm.total_replayed_steps", "max_growth": 0.25},
         {"path": "cold.mean_reburn_gbh", "max_growth": 0.50},
+    ],
+    "BENCH_engine.json": [
+        # trace-scale engine work counters: pure functions of
+        # (trace, config, seed), so ANY growth is an algorithmic
+        # regression in the event core (an O(n) rescan sneaking back),
+        # not runner noise. Wall/tasks_per_s stay ungated artifacts.
+        {"path": "grid[label=mag_s0p2_n32].n_events", "max_growth": 0.0},
+        {"path": "grid[label=mag_s0p2_n32].n_scan_entries",
+         "max_growth": 0.0},
+        {"path": "grid[label=mag_s0p2_n32].n_heap_pushes",
+         "max_growth": 0.0},
+        {"path": "grid[label=mag_s1_n256].n_events", "max_growth": 0.0},
+        {"path": "grid[label=mag_s1_n256].n_scan_entries",
+         "max_growth": 0.0},
+        {"path": "grid[label=mag_s1_n256].n_heap_pushes",
+         "max_growth": 0.0},
+        # the ingestion smoke cell: parser + replay must stay lossless
+        {"path": "sample_trace.n_tasks", "equals": 99},
+        {"path": "sample_trace.n_aborted", "max": 0},
+        {"path": "sample_trace.n_events", "max_growth": 0.0},
+        {"path": "sample_trace.n_scan_entries", "max_growth": 0.0},
+        {"path": "sample_trace.n_heap_pushes", "max_growth": 0.0},
     ],
     "results/bench_results.json": [
         # decision dispatches may not grow: each cluster ready wave stays

@@ -19,7 +19,10 @@ Three comparisons:
   * policy frontier — every requested placement policy on a homogeneous
     and a heterogeneous (16/32/64 GB node classes, class-labeled trace)
     mix: makespan / utilization / wastage / queue delay per cell, so a
-    placement-policy regression shows up in the bench trajectory.
+    placement-policy regression shows up in the bench trajectory;
+  * node-count frontier — utilization/makespan vs cluster size
+    (``--node-counts``): where adding nodes stops buying makespan because
+    DAG width, not capacity, is the bottleneck.
 """
 from __future__ import annotations
 
@@ -46,7 +49,8 @@ def _dispatch_delta(before: dict, key: str) -> int:
 def run(scale: float = 0.2, workflow: str = "mag", n_nodes: int = 8,
         ttf: float = 1.0, out_path: str = "BENCH_cluster.json",
         policies: tuple[str, ...] = ("backfill", "best_fit", "spread"),
-        fail_rate: float = 0.0, frontier_only: bool = False) -> dict:
+        fail_rate: float = 0.0, frontier_only: bool = False,
+        node_counts: tuple[int, ...] = (4, 8, 16, 32)) -> dict:
     """``frontier_only`` skips the engine-overhead and Sizey dispatch
     comparisons — for CI steps that already ran them via
     ``benchmarks.run --smoke`` and only want more frontier cells."""
@@ -58,7 +62,8 @@ def run(scale: float = 0.2, workflow: str = "mag", n_nodes: int = 8,
 
     if frontier_only:
         return _frontier(report, trace, workflow, scale, n_nodes, ttf,
-                         policies, fail_rate, out_path)
+                         policies, fail_rate, out_path,
+                         node_counts=node_counts)
 
     # engine overhead on a cheap method: decisions are numpy, so the wall
     # clock difference is the event queue + placement machinery itself
@@ -122,12 +127,13 @@ def run(scale: float = 0.2, workflow: str = "mag", n_nodes: int = 8,
           f"{report['sizey']['cluster_tasks_per_s']:.0f}")
 
     return _frontier(report, trace, workflow, scale, n_nodes, ttf, policies,
-                     fail_rate, out_path)
+                     fail_rate, out_path, node_counts=node_counts)
 
 
 def _frontier(report: dict, trace, workflow: str, scale: float, n_nodes: int,
               ttf: float, policies: tuple[str, ...], fail_rate: float,
-              out_path: str) -> dict:
+              out_path: str,
+              node_counts: tuple[int, ...] = (4, 8, 16, 32)) -> dict:
     # placement-policy x node-mix frontier (cheap numpy method: the cells
     # compare placement, not sizing)
     hetero_trace = generate_workflow(
@@ -170,6 +176,34 @@ def _frontier(report: dict, trace, workflow: str, scale: float, n_nodes: int,
                   f"aborted={cell['n_aborted']}")
     report["frontier"] = frontier
 
+    # utilization/makespan frontier vs NODE COUNT (homogeneous, backfill):
+    # where adding nodes stops buying makespan because the workload's DAG
+    # width — not capacity — is the bottleneck. Cheap with the indexed
+    # event core, so it runs in every CI smoke.
+    node_frontier = []
+    for nn in node_counts:
+        t0 = time.perf_counter()
+        rn = simulate_cluster(trace, make_method("witt_lr"), ttf=ttf,
+                              n_nodes=nn, policy="backfill")
+        wall = time.perf_counter() - t0
+        c = rn.cluster
+        cell = {
+            "n_nodes": nn,
+            "makespan_h": c.makespan_h,
+            "mean_util": c.mean_util,
+            "mean_queue_delay_h": c.mean_queue_delay_h,
+            "peak_reserved_gb": c.peak_reserved_gb,
+            "n_events": c.n_events,
+            "tasks_per_s": len(trace.tasks) / wall,
+        }
+        node_frontier.append(cell)
+        print(f"cluster_bench/node_frontier,n_nodes={nn},"
+              f"makespan_h={cell['makespan_h']:.3f},"
+              f"mean_util={cell['mean_util']:.3f},"
+              f"queue_delay_h={cell['mean_queue_delay_h']:.4f},"
+              f"tasks_per_s={cell['tasks_per_s']:.0f}")
+    report["node_frontier"] = node_frontier
+
     if out_path:
         dump_json(out_path, report)
         print(f"# wrote {out_path}")
@@ -189,11 +223,16 @@ def main() -> None:
     ap.add_argument("--frontier-only", action="store_true",
                     help="skip the engine/Sizey comparisons (CI runs them "
                          "via benchmarks.run --smoke already)")
+    ap.add_argument("--node-counts", type=int, nargs="+",
+                    default=[4, 8, 16, 32], metavar="N",
+                    help="node counts for the utilization/makespan-vs-"
+                         "node-count frontier (homogeneous, backfill)")
     ap.add_argument("--out", default="BENCH_cluster.json")
     args = ap.parse_args()
     run(scale=args.scale, workflow=args.workflow, n_nodes=args.nodes,
         ttf=args.ttf, out_path=args.out, policies=tuple(args.policies),
-        fail_rate=args.fail_rate, frontier_only=args.frontier_only)
+        fail_rate=args.fail_rate, frontier_only=args.frontier_only,
+        node_counts=tuple(args.node_counts))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,164 @@
+"""Trace-scale engine benchmark: event-loop throughput (tasks/s, events/s)
+over an n_tasks x n_nodes grid, plus the full 100k-task / 1k-node ingested
+replay (nightly).
+
+    # CI smoke grid + the sample-log ingest cell:
+    PYTHONPATH=src python -m benchmarks.engine_bench \
+        --out results/fresh/BENCH_engine.json
+    # nightly: adds the 100k-task / 1k-node export -> ingest -> replay
+    PYTHONPATH=src python -m benchmarks.engine_bench --full
+
+Wall-clock throughputs are artifacts only (CI runners are noisy); the
+DETERMINISTIC work counters — events drained (``n_events``), queue entries
+examined by placement (``n_scan_entries``), heap insertions
+(``n_heap_pushes``) — are pure functions of (trace, config, seed), and
+``check_regression.py`` pins them at zero growth: an O(n) scan sneaking
+back into the event core fails the gate even on a fast runner.
+
+The sizing method is ``workflow_presets`` (allocation = the preset
+constant): zero predictor cost, zero failures, so the measured wall clock
+and every counter belong to the ENGINE — event heap, indexed placement,
+dependency unlocks — not to sizing arithmetic.
+
+The full mode goes the long way around on purpose — generate, re-stamp a
+seeded Poisson arrival process, ``write_jobs_info``, ``read_jobs_info``,
+``read_nodes_info``, replay — so the 100k path exercises the ingestion
+layer end-to-end, not just the engine.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks._util import dump_json
+
+from repro.baselines import make_method
+from repro.data import read_jobs_info, read_nodes_info, write_jobs_info, \
+    write_nodes_info
+from repro.workflow import generate_workflow, simulate_cluster
+from repro.workflow.cluster import NodeSpec
+
+SAMPLE_JOBS = "src/repro/data/sample_traces/sample_jobs_info.txt"
+SAMPLE_NODES = "src/repro/data/sample_traces/sample_nodes_info.txt"
+
+# CI smoke grid: (trace scale, node count). mag scale 1.0 ~ 6k tasks.
+SMOKE_GRID = ((0.2, 32), (0.2, 256), (1.0, 32), (1.0, 256))
+
+
+def _cell(label: str, trace, n_nodes: int, wall_s: float, res) -> dict:
+    c = res.cluster
+    cell = {
+        "label": label, "n_tasks": len(trace.tasks), "n_nodes": n_nodes,
+        "wall_s": round(wall_s, 3),
+        "tasks_per_s": round(len(trace.tasks) / wall_s, 1),
+        "events_per_s": round(c.n_events / wall_s, 1),
+        "n_events": c.n_events,
+        "n_scan_entries": c.n_scan_entries,
+        "n_heap_pushes": c.n_heap_pushes,
+        "makespan_h": round(c.makespan_h, 4),
+        "mean_util": round(c.mean_util, 4),
+        "n_aborted": c.n_aborted,
+    }
+    print(f"engine_bench/{label},n_tasks={cell['n_tasks']},"
+          f"n_nodes={n_nodes},wall_s={cell['wall_s']},"
+          f"tasks_per_s={cell['tasks_per_s']:.0f},"
+          f"events_per_s={cell['events_per_s']:.0f},"
+          f"events={cell['n_events']},scans={cell['n_scan_entries']},"
+          f"pushes={cell['n_heap_pushes']}")
+    return cell
+
+
+def _replay(trace, n_nodes=None, node_specs=None, node_cap_gb=32.0):
+    method = make_method("workflow_presets",
+                         machine_cap_gb=trace.machine_cap_gb)
+    t0 = time.perf_counter()
+    res = simulate_cluster(trace, method, n_nodes=n_nodes or 8,
+                           node_cap_gb=node_cap_gb, node_specs=node_specs)
+    return time.perf_counter() - t0, res
+
+
+def _restamp_arrivals(trace, span_h: float, seed: int = 0):
+    """Replace arrival times with a seeded Poisson process over ~span_h
+    hours (the export drops DAG edges, so EVERY task becomes an arrival —
+    this keeps the 100k replay arrival-driven instead of one mega-burst)."""
+    gaps = np.random.default_rng(seed).exponential(
+        span_h / max(len(trace.tasks), 1), len(trace.tasks))
+    arrivals = np.cumsum(gaps)
+    tasks = [dataclasses.replace(t, arrival_h=float(a), deps=(), stage=0)
+             for t, a in zip(trace.tasks, arrivals)]
+    return dataclasses.replace(trace, tasks=tasks)
+
+
+def run(out_path: str = "BENCH_engine.json", full: bool = False,
+        full_scale: float = 17.0, full_nodes: int = 1000) -> dict:
+    report: dict = {"method": "workflow_presets", "grid": []}
+
+    for scale, n_nodes in SMOKE_GRID:
+        trace = generate_workflow("mag", seed=1, scale=scale,
+                                  arrival_rate_per_h=2000.0)
+        wall, res = _replay(trace, n_nodes=n_nodes, node_cap_gb=32.0)
+        # no dots in labels: check_regression resolves dotted paths
+        slabel = f"{scale:g}".replace(".", "p")
+        report["grid"].append(
+            _cell(f"mag_s{slabel}_n{n_nodes}", trace, n_nodes, wall, res))
+
+    # ingestion smoke cell: the committed sample log on its own node table
+    trace = read_jobs_info(SAMPLE_JOBS, time_compress=10.0)
+    nodes = read_nodes_info(SAMPLE_NODES)
+    wall, res = _replay(trace, node_specs=nodes)
+    report["sample_trace"] = _cell("sample_jobs_info", trace, len(nodes),
+                                   wall, res)
+
+    if full:
+        # 100k-task / 1k-node replay THROUGH the ingestion layer:
+        # generate -> re-stamp Poisson arrivals -> write_jobs_info ->
+        # read back -> replay on a read-back nodes_info table
+        big = _restamp_arrivals(
+            generate_workflow("mag", seed=1, scale=full_scale,
+                              usage_curves=False),
+            span_h=4.0)
+        with tempfile.TemporaryDirectory() as d:
+            jobs, nodes_f = Path(d) / "jobs.txt", Path(d) / "nodes.txt"
+            t0 = time.perf_counter()
+            write_jobs_info(big, jobs, mem_unit="mb", time_unit="s")
+            write_nodes_info(
+                [NodeSpec(f"n{i:04d}", 32.0) for i in range(full_nodes)],
+                nodes_f, mem_unit="mb")
+            ingested = read_jobs_info(jobs, mem_unit="mb", time_unit="s",
+                                      machine_cap_gb=big.machine_cap_gb)
+            node_specs = read_nodes_info(nodes_f, mem_unit="mb")
+            ingest_s = time.perf_counter() - t0
+            wall, res = _replay(ingested, node_specs=node_specs)
+        report["full"] = _cell(f"ingested_100k_n{full_nodes}", ingested,
+                               full_nodes, wall, res)
+        report["full"]["ingest_roundtrip_s"] = round(ingest_s, 3)
+        assert len(res.outcomes) == len(ingested.tasks), \
+            "full replay dropped tasks"
+
+    if out_path:
+        dump_json(out_path, report)
+        print(f"# wrote {out_path}")
+    return report
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="add the 100k-task / 1k-node ingested replay "
+                         "(nightly; ~10^2 seconds)")
+    ap.add_argument("--full-scale", type=float, default=17.0,
+                    help="mag trace scale for the full run (17 ~ 100k tasks)")
+    ap.add_argument("--full-nodes", type=int, default=1000)
+    ap.add_argument("--out", default="BENCH_engine.json")
+    args = ap.parse_args()
+    run(out_path=args.out, full=args.full, full_scale=args.full_scale,
+        full_nodes=args.full_nodes)
+
+
+if __name__ == "__main__":
+    main()

@@ -51,6 +51,21 @@ Ponder-style failure strategies):
         --rack-caps "16,32,64;16,32,64" --rack-fail-rate 0.1 \
         --straggler-rate 0.1 --failure-strategy checkpoint
 
+Replaying a REAL scheduler log instead of the synthetic workflows:
+
+    PYTHONPATH=src python examples/workflow_sim.py --cluster \
+        --trace src/repro/data/sample_traces/sample_jobs_info.txt \
+        --trace-nodes src/repro/data/sample_traces/sample_nodes_info.txt \
+        --mem-unit mb --time-unit s --time-compress 10
+
+``--trace`` ingests a CraneSched-style ``jobs_info`` log (or a generic
+CSV/JSONL trace — the format is picked from the suffix, or forced with
+``--trace-format``; see :mod:`repro.data.ingest` for the schemas) and
+replays it through every method; ``--trace-nodes`` builds the node set
+from the matching ``nodes_info`` table; ``--time-compress R`` divides all
+inter-arrival gaps by R (the exemplar's ``Ratio`` knob — raises offered
+load without touching runtimes).
+
 ``--rack-caps`` gives the cluster an explicit rack topology
 (semicolon-separated racks, each a comma list of node capacities) and
 makes the trace heterogeneous over the distinct caps; ``--rack-fail-rate``
@@ -68,6 +83,7 @@ import os
 import time
 
 from repro.baselines import make_method
+from repro.data import load_trace, read_nodes_info
 from repro.baselines.sizey_method import SizeyMethod
 from repro.core import SizeyConfig
 from repro.workflow import (FAILURE_STRATEGIES, WORKFLOWS, generate_workflow,
@@ -81,17 +97,21 @@ METHODS = ["sizey", "witt_wastage", "witt_lr", "tovar_ppm",
 TEMPORAL_METHODS = ["sizey_temporal", "ks_plus"]
 
 
-def make(name, ttf, temporal_k, failure_strategy="retry_same"):
+def make(name, ttf, temporal_k, failure_strategy="retry_same",
+         cap_gb=128.0):
     if name == "sizey":
-        return SizeyMethod(SizeyConfig(), ttf=ttf,
+        return SizeyMethod(SizeyConfig(), ttf=ttf, machine_cap_gb=cap_gb,
                            failure_strategy=failure_strategy)
     if name == "sizey_temporal":
         return SizeyMethod(SizeyConfig(), ttf=ttf, temporal_k=temporal_k,
+                           machine_cap_gb=cap_gb,
                            failure_strategy=failure_strategy)
     if name == "ks_plus":
         return make_method(name, ttf=ttf, k_segments=temporal_k,
+                           machine_cap_gb=cap_gb,
                            failure_strategy=failure_strategy)
-    return make_method(name, ttf=ttf, failure_strategy=failure_strategy)
+    return make_method(name, ttf=ttf, machine_cap_gb=cap_gb,
+                       failure_strategy=failure_strategy)
 
 
 def _wastage_series(res):
@@ -246,6 +266,28 @@ def main():
                     help="restrict generated usage-curve shapes (e.g. "
                          "ramp — the workload where time-segmented "
                          "reservations pay off most; default: all)")
+    ap.add_argument("--trace", default=None, metavar="FILE",
+                    help="replay an ingested scheduler log instead of the "
+                         "synthetic workflows (CraneSched jobs_info, CSV, "
+                         "or JSONL; see repro.data.ingest)")
+    ap.add_argument("--trace-format", default="auto",
+                    choices=["auto", "jobs_info", "csv", "jsonl"],
+                    help="trace file format (auto: pick from the suffix)")
+    ap.add_argument("--trace-nodes", default=None, metavar="FILE",
+                    help="build the cluster node set from a nodes_info "
+                         "table (requires --trace and --cluster)")
+    ap.add_argument("--time-compress", type=float, default=1.0, metavar="R",
+                    help="divide the ingested trace's inter-arrival gaps "
+                         "by R (raises offered load; runtimes untouched)")
+    ap.add_argument("--peak-frac", type=float, default=1.0,
+                    help="jobs_info logs carry requests, not measured "
+                         "peaks: set actual_peak = peak_frac * request "
+                         "(< 1 models the usual request inflation)")
+    ap.add_argument("--mem-unit", default="mb",
+                    choices=["b", "kb", "mb", "gb"],
+                    help="memory unit of the ingested log (default: mb)")
+    ap.add_argument("--time-unit", default="s", choices=["s", "m", "h"],
+                    help="time unit of the ingested log (default: s)")
     ap.add_argument("--plot-wastage", nargs="?", default=None,
                     const="results/wastage_timeline", metavar="BASE",
                     help="write a Fig. 8-style wastage-over-time overlay "
@@ -284,6 +326,23 @@ def main():
         ap.error("--rack-caps already fixes the node set; drop --node-caps")
     if args.rack_fail_rate and not args.rack_caps:
         ap.error("--rack-fail-rate needs a rack topology: add --rack-caps")
+    if args.trace is None:
+        for flag, val in (("--trace-nodes", args.trace_nodes),
+                          ("--time-compress", args.time_compress != 1.0),
+                          ("--peak-frac", args.peak_frac != 1.0)):
+            if val:
+                ap.error(f"{flag} shapes an ingested log; add --trace FILE")
+    else:
+        if args.workflows:
+            ap.error("--trace replaces the synthetic workflows; "
+                     "drop --workflows")
+        if args.node_caps or args.rack_caps:
+            ap.error("--trace fixes the workload (use --trace-nodes or "
+                     "--cluster N for the node set); drop "
+                     "--node-caps/--rack-caps")
+        if args.trace_nodes and not args.cluster:
+            ap.error("--trace-nodes builds a cluster node set; "
+                     "add --cluster")
 
     caps = machine_caps = node_specs = None
     if args.node_caps:
@@ -311,26 +370,59 @@ def main():
         except ValueError as e:   # e.g. --cluster N drops node classes
             ap.error(str(e))
 
+    ingested = None
+    if args.trace:
+        try:
+            fmt = args.trace_format
+            if fmt == "auto":
+                suffix = os.path.splitext(args.trace)[1].lower()
+                fmt = {".csv": "csv", ".jsonl": "jsonl",
+                       ".json": "jsonl"}.get(suffix, "jobs_info")
+            kw = {"mem_unit": args.mem_unit, "time_unit": args.time_unit,
+                  "time_compress": args.time_compress}
+            if fmt == "jobs_info":   # peak_frac only applies to request logs
+                kw["peak_frac"] = args.peak_frac
+            elif args.peak_frac != 1.0:
+                ap.error("--peak-frac only applies to jobs_info request "
+                         "logs (CSV/JSONL traces carry measured peaks)")
+            ingested = load_trace(args.trace, format=fmt, **kw)
+            if args.trace_nodes:
+                node_specs = read_nodes_info(args.trace_nodes,
+                                             mem_unit=args.mem_unit)
+                n_nodes = len(node_specs)
+        except (OSError, ValueError) as e:
+            ap.error(str(e))
+        if n_nodes == -1:
+            n_nodes = 8
+        print(f"ingested {args.trace}: {len(ingested.tasks)} tasks, "
+              f"{len(ingested.task_types)} pools, "
+              f"cap {ingested.machine_cap_gb:g} GB"
+              + (f", {n_nodes} nodes" if args.cluster else ""))
+
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     fail_seed = args.seed if args.fail_seed is None else args.fail_seed
     methods = METHODS + (TEMPORAL_METHODS if args.temporal else [])
     rows = []
     plot_res: dict[str, object] = {}
-    for wf in (args.workflows or WORKFLOWS):
-        gen_kw = {}
-        if args.curve_shapes:
-            gen_kw["curve_shapes"] = tuple(args.curve_shapes)
-        trace = generate_workflow(wf, seed=args.seed, scale=args.scale,
-                                  machine_caps_gb=machine_caps,
-                                  arrival_rate_per_h=args.arrival_rate,
-                                  **gen_kw)
+    for wf in ([ingested.name] if ingested else (args.workflows or WORKFLOWS)):
+        if ingested is not None:
+            trace = ingested
+        else:
+            gen_kw = {}
+            if args.curve_shapes:
+                gen_kw["curve_shapes"] = tuple(args.curve_shapes)
+            trace = generate_workflow(wf, seed=args.seed, scale=args.scale,
+                                      machine_caps_gb=machine_caps,
+                                      arrival_rate_per_h=args.arrival_rate,
+                                      **gen_kw)
         for ttf in args.ttf:
             for m in methods:
                 t0 = time.time()
                 if args.cluster:
                     r = simulate_cluster(
                         trace,
-                        make(m, ttf, args.temporal, args.failure_strategy),
+                        make(m, ttf, args.temporal, args.failure_strategy,
+                             cap_gb=trace.machine_cap_gb),
                         ttf=ttf, n_nodes=n_nodes,
                         node_specs=node_specs, policy=args.policy,
                         fail_rate_per_node_h=args.fail_rate,
@@ -340,7 +432,9 @@ def main():
                         straggler_rate=args.straggler_rate,
                         straggler_factor=args.straggler_factor)
                 else:
-                    r = simulate(trace, make(m, ttf, args.temporal),
+                    r = simulate(trace,
+                                 make(m, ttf, args.temporal,
+                                      cap_gb=trace.machine_cap_gb),
                                  ttf=ttf)
                 row = {
                     "workflow": wf, "method": m, "ttf": ttf,

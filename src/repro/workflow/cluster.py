@@ -94,6 +94,7 @@ behaviour (it ignores dependency edges entirely).
 """
 from __future__ import annotations
 
+import bisect
 import collections
 import dataclasses
 import heapq
@@ -218,15 +219,24 @@ class Node:
         self.cap_gb = spec.cap_gb
         self.machine = spec.machine
         self._held: dict[int, float] = {}   # attempt token -> reserved GB
+        self._reserved = 0.0                # fsum cache, refreshed on mutation
         self.reserved_gbh = 0.0             # integral of reserved GB over time
         self.down_h = 0.0                   # total crashed time
         self.last_t = 0.0
         self.up = True
         self.n_crashes = 0
 
+    def _refresh_reserved(self) -> None:
+        """Recompute the exact reservation sum. Called after every ``_held``
+        mutation, so ``reserved_gb``/``free_gb`` are O(1) reads of the SAME
+        exactly-rounded :func:`math.fsum` value the uncached property
+        returned — the engine's placement scans read ``free_gb`` millions
+        of times per run, the held set mutates only per attempt event."""
+        self._reserved = math.fsum(self._held.values())
+
     @property
     def reserved_gb(self) -> float:
-        return math.fsum(self._held.values())
+        return self._reserved
 
     @property
     def free_gb(self) -> float:
@@ -247,10 +257,13 @@ class Node:
     def reserve(self, t: float, token: int, gb: float) -> None:
         self._advance(t)
         self._held[token] = gb
+        self._refresh_reserved()
 
     def release(self, t: float, token: int) -> float:
         self._advance(t)
-        return self._held.pop(token)
+        gb = self._held.pop(token)
+        self._refresh_reserved()
+        return gb
 
     def held_gb(self, token: int) -> float:
         """Current reservation of one attempt (post any resizes)."""
@@ -264,6 +277,7 @@ class Node:
         self._advance(t)
         delta = gb - self._held[token]
         self._held[token] = gb
+        self._refresh_reserved()
         return delta
 
     def crash(self, t: float) -> None:
@@ -286,6 +300,326 @@ class _Queued:
     start_h: float | None = None          # first dispatch time
     n_dispatches: int = 0       # straggler draws are keyed per dispatch
     task_hash: int | None = None  # cached stable_hash of the task key
+
+
+class _SeqQueue:
+    """The ready queue as a seq-ordered sequence with O(log Q) requeue and
+    O(1) amortized removal (trace-scale refactor).
+
+    The legacy engine kept a plain list: re-sorted every step, rebuilt with
+    an O(Q) comprehension after every placement round — quadratic once the
+    backlog reaches trace scale. Entries here are kept sorted by ``seq``
+    permanently: new arrivals carry a monotonically increasing seq (append),
+    interrupted/killed attempts re-enter at their ORIGINAL seq (bisect
+    insort), and placed/rejected entries are tombstoned and physically
+    dropped by periodic compaction. Iteration order — the one thing every
+    placement policy and the journal snapshot observe — is exactly the
+    ``sort(key=e.seq)`` order of the legacy list.
+
+    A requeued entry whose tombstone has not been compacted away yet is
+    *revived* in place (same object, same seq, position still correct), so
+    an entry is never physically present twice.
+    """
+
+    __slots__ = ("_items", "_dead")
+
+    def __init__(self, items: Sequence[_Queued] = ()):
+        self._items = sorted(items, key=lambda e: e.seq)
+        self._dead: set[int] = set()
+
+    def push(self, entry: _Queued) -> None:
+        """Append a NEW entry (its seq must be the largest ever issued)."""
+        self._items.append(entry)
+
+    def requeue(self, entry: _Queued) -> None:
+        """Re-admit an interrupted/killed entry at its original seq."""
+        if id(entry) in self._dead:
+            self._dead.discard(id(entry))   # still in place — revive
+        else:
+            bisect.insort(self._items, entry, key=lambda e: e.seq)
+
+    def discard(self, entry: _Queued) -> None:
+        self._dead.add(id(entry))
+        if len(self._dead) * 2 > len(self._items) and len(self._dead) > 32:
+            self.compact()
+
+    def compact(self) -> None:
+        self._items = [e for e in self._items if id(e) not in self._dead]
+        self._dead.clear()
+
+    def __iter__(self):
+        dead = self._dead
+        if not dead:
+            return iter(self._items)
+        # Placements tombstone the FRONT of the queue, so under a large
+        # backlog the dead prefix grows far faster than the compaction
+        # threshold triggers — drop it eagerly (a partial compaction:
+        # iteration order is unchanged, and a later requeue of a dropped
+        # entry re-inserts at its seq via insort exactly as after a full
+        # compact). Amortized O(1) per discard; turns the per-round
+        # tombstone skip from O(dead) into O(1).
+        items = self._items
+        k, n = 0, len(items)
+        while k < n and id(items[k]) in dead:
+            dead.discard(id(items[k]))
+            k += 1
+        if k:
+            del items[:k]
+        if not dead:
+            return iter(items)
+        return (e for e in items if id(e) not in dead)
+
+    def __len__(self) -> int:
+        return len(self._items) - len(self._dead)
+
+    def __bool__(self) -> bool:
+        return len(self._items) > len(self._dead)
+
+    def __getitem__(self, i):
+        if self._dead:
+            self.compact()
+        return self._items[i]
+
+
+class _SegTree:
+    """Max segment tree over one node category's members (engine node
+    order): O(log n) point update, O(log n) leftmost-member-with-
+    ``free >= alloc`` query — the first-fit primitive. Down members hold
+    ``-inf`` so they never match."""
+
+    __slots__ = ("size", "tree", "members")
+
+    def __init__(self, members: list[int]):
+        self.members = members
+        size = 1
+        while size < max(1, len(members)):
+            size *= 2
+        self.size = size
+        self.tree = [float("-inf")] * (2 * size)
+
+    def set(self, pos: int, val: float) -> None:
+        i = pos + self.size
+        self.tree[i] = val
+        i >>= 1
+        while i:
+            self.tree[i] = max(self.tree[2 * i], self.tree[2 * i + 1])
+            i >>= 1
+
+    def first_at_least(self, alloc: float) -> int | None:
+        """Smallest member position with value >= alloc -> node index."""
+        tree = self.tree
+        if tree[1] < alloc:
+            return None
+        i = 1
+        while i < self.size:
+            i *= 2
+            if tree[i] < alloc:
+                i += 1
+        return self.members[i - self.size]
+
+
+class _FreeIndex:
+    """Per-node-class free-capacity index for the placement scan.
+
+    One structure per *category* — a category is a node's machine label
+    (``None`` = unlabeled). Eligibility and the per-node blocked counters
+    of :func:`_scan` depend only on a node's category, so the indexed scan
+    in :meth:`ClusterEngine._place_indexed` replaces the legacy per-round
+    O(nodes) ``free``/``blocked`` dict builds and per-entry candidate
+    list comprehensions with O(log n) category queries, while choosing
+    bitwise the node the legacy ``choose`` functions pick.
+
+    ``free`` mirrors each node's exact ``free_gb``: the engine syncs it
+    after every authoritative reservation mutation (reserve / release /
+    resize / crash / recover), and the scan applies its provisional
+    in-round decrements with the same ``free -= alloc`` float arithmetic
+    the legacy scan-local dict used — so every comparison any query makes
+    sees exactly the floats the legacy scan compared.
+
+    Only the structure the engine's (fixed) policy needs is maintained:
+
+      * ``mode='first'`` (fifo / backfill / preemptive): per-category max
+        segment tree -> leftmost node with room;
+      * ``mode='best'`` (best_fit): per-category sorted ``(free, idx)``
+        lists -> tightest node with room, ulp-exact tie handling;
+      * ``mode='spread'``: sorted lists per (category, capacity) — the
+        spread key is monotone in ``free`` only at fixed capacity.
+    """
+
+    __slots__ = ("nodes", "cat_of", "cats", "members", "pos_in_cat",
+                 "free", "isup", "up_count", "mode", "trees", "lists",
+                 "cap_of", "caps_in_cat", "n_ops")
+
+    def __init__(self, nodes: list[Node], mode: str):
+        self.nodes = nodes
+        self.mode = mode
+        self.cat_of = [n.machine for n in nodes]
+        self.cats: list[str | None] = []
+        self.members: dict[str | None, list[int]] = {}
+        for i, c in enumerate(self.cat_of):
+            if c not in self.members:
+                self.cats.append(c)
+                self.members[c] = []
+            self.members[c].append(i)
+        self.pos_in_cat = [0] * len(nodes)
+        for c, mem in self.members.items():
+            for p, i in enumerate(mem):
+                self.pos_in_cat[i] = p
+        self.cap_of = [n.cap_gb for n in nodes]
+        self.caps_in_cat = {c: sorted({self.cap_of[i] for i in mem})
+                            for c, mem in self.members.items()}
+        self.free = [0.0] * len(nodes)
+        self.isup = [True] * len(nodes)
+        self.up_count = dict.fromkeys(self.cats, 0)
+        self.trees: dict[str | None, _SegTree] = {}
+        self.lists: dict = {}
+        self.n_ops = 0   # structure updates+queries (regression counter)
+        self.rebuild()
+
+    # ------------------------------------------------------------- updates
+    def rebuild(self) -> None:
+        """Derive everything from the authoritative Node states (engine
+        init and journal restore: snapshots serialize nodes, never this
+        index — it is deterministically reconstructible)."""
+        if self.mode == "first":
+            self.trees = {c: _SegTree(mem)
+                          for c, mem in self.members.items()}
+        elif self.mode == "best":
+            self.lists = {c: [] for c in self.cats}
+        elif self.mode == "spread":
+            self.lists = {(c, cap): []
+                          for c in self.cats for cap in self.caps_in_cat[c]}
+        self.up_count = dict.fromkeys(self.cats, 0)
+        for i, n in enumerate(self.nodes):
+            self.free[i] = n.free_gb
+            self.isup[i] = n.up
+            if n.up:
+                self.up_count[self.cat_of[i]] += 1
+                self._insert(i, self.free[i])
+
+    def _insert(self, i: int, val: float) -> None:
+        if self.mode == "first":
+            self.trees[self.cat_of[i]].set(self.pos_in_cat[i], val)
+        elif self.mode == "best":
+            bisect.insort(self.lists[self.cat_of[i]], (val, i))
+        elif self.mode == "spread":
+            bisect.insort(self.lists[(self.cat_of[i], self.cap_of[i])],
+                          (val, i))
+
+    def _remove(self, i: int, val: float) -> None:
+        if self.mode == "first":
+            self.trees[self.cat_of[i]].set(self.pos_in_cat[i],
+                                           float("-inf"))
+        elif self.mode == "best":
+            lst = self.lists[self.cat_of[i]]
+            lst.pop(bisect.bisect_left(lst, (val, i)))
+        elif self.mode == "spread":
+            lst = self.lists[(self.cat_of[i], self.cap_of[i])]
+            lst.pop(bisect.bisect_left(lst, (val, i)))
+
+    def set_free(self, i: int, val: float) -> None:
+        """Move node ``i``'s mirrored free capacity to ``val``."""
+        self.n_ops += 1
+        if self.isup[i]:
+            self._remove(i, self.free[i])
+            self.free[i] = val
+            self._insert(i, val)
+        else:
+            self.free[i] = val
+
+    def sync(self, node: Node) -> None:
+        """Re-mirror one node after an authoritative mutation."""
+        self.set_free(node.idx, node.free_gb)
+
+    def set_down(self, i: int) -> None:
+        if self.isup[i]:
+            self.n_ops += 1
+            self._remove(i, self.free[i])
+            self.isup[i] = False
+            self.up_count[self.cat_of[i]] -= 1
+
+    def set_up(self, i: int) -> None:
+        if not self.isup[i]:
+            self.n_ops += 1
+            self.isup[i] = True
+            self.free[i] = self.nodes[i].free_gb
+            self.up_count[self.cat_of[i]] += 1
+            self._insert(i, self.free[i])
+
+    # ------------------------------------------------------------- queries
+    def query(self, cat, alloc: float):
+        """Best candidate of one category with ``free >= alloc``, as a
+        policy-comparable ``(rank..., idx)`` tuple (None when the category
+        has no such up node). Tuples compare across categories exactly as
+        the legacy ``choose`` over the concatenated candidate list: the
+        final element is the node index, the legacy tie-break (``min`` /
+        ``cands[0]`` take the first minimum in node order)."""
+        self.n_ops += 1
+        if self.mode == "first":
+            idx = self.trees[cat].first_at_least(alloc)
+            return None if idx is None else (idx,)
+        if self.mode == "best":
+            return self._query_best(self.lists[cat], alloc)
+        return self._query_spread(cat, alloc)
+
+    @staticmethod
+    def _query_best(lst: list, alloc: float):
+        """Legacy ``min(cands, key=free - alloc)``: minimal ``free - alloc``
+        as a float, then minimal node index. IEEE subtraction by a constant
+        is monotone but not injective, so distinct frees can collide on one
+        key value: walk the (few) distinct free values whose subtracted key
+        still equals the minimum before trusting the index tie-break."""
+        p = bisect.bisect_left(lst, (alloc, -1))
+        if p == len(lst):
+            return None
+        f0, i0 = lst[p]
+        key = f0 - alloc
+        best_idx = i0
+        q = bisect.bisect_right(lst, (f0, 1 << 60))
+        while q < len(lst):
+            f1, i1 = lst[q]
+            if f1 - alloc != key:
+                break   # monotone: every later free keys strictly higher
+            if i1 < best_idx:
+                best_idx = i1
+            q = bisect.bisect_right(lst, (f1, 1 << 60))
+        return (key, best_idx)
+
+    def _query_spread(self, cat, alloc: float):
+        """Legacy ``min(cands, key=(cap - (free - alloc)) / cap)``. The key
+        is monotone decreasing in free only at fixed capacity, so each
+        (category, cap) group contributes its max-free member; across
+        groups (and ulp key collisions within one, walked like
+        ``_query_best``) the exact float key + node index decide."""
+        best = None
+        for cap in self.caps_in_cat[cat]:
+            lst = self.lists[(cat, cap)]
+            if not lst or lst[-1][0] < alloc:
+                continue
+            p = bisect.bisect_left(lst, (lst[-1][0], -1))
+            f0, i0 = lst[p]
+            key = (cap - (f0 - alloc)) / cap
+            cand_idx = i0
+            s = p
+            while s > 0:
+                f1 = lst[s - 1][0]
+                if f1 < alloc:
+                    break
+                s = bisect.bisect_left(lst, (f1, -1))
+                if (cap - (f1 - alloc)) / cap != key:
+                    break   # monotone: even-lower frees key strictly higher
+                if lst[s][1] < cand_idx:
+                    cand_idx = lst[s][1]
+            cand = (key, cand_idx)
+            if best is None or cand < best:
+                best = cand
+        return best
+
+    def scan_place(self, i: int, alloc: float) -> None:
+        """Provisional in-round placement: the same ``free -= alloc`` the
+        legacy scan applied to its local dict. The engine re-syncs the
+        node to its exact post-reserve fsum at dispatch."""
+        self.set_free(i, self.free[i] - alloc)
 
 
 @dataclasses.dataclass
@@ -525,9 +859,29 @@ class ClusterEngine:
                 raise ValueError("node_specs must name at least one node")
         self.specs = specs
         self.nodes = [Node(s) for s in specs]
+        if len({s.name for s in specs}) != len(specs):
+            # journal restore and the free-capacity index both key nodes
+            # by name/position; duplicates would silently alias
+            raise ValueError("node_specs names must be unique")
+        for i, n in enumerate(self.nodes):
+            n.idx = i
         self.max_cap = max(n.cap_gb for n in self.nodes)
         self.classes = {n.machine for n in self.nodes
                         if n.machine is not None}
+        # indexed placement core (trace-scale refactor): one free-capacity
+        # index in the shape the engine's fixed policy queries. Policies
+        # added to PLACEMENT_POLICIES from outside fall back to the
+        # reference scan over a materialized queue.
+        _modes = {"fifo": "first", "backfill": "first",
+                  "preemptive": "first", "best_fit": "best",
+                  "spread": "spread"}
+        self._use_index = policy in _modes
+        self._findex = (_FreeIndex(self.nodes, _modes[policy])
+                        if self._use_index else None)
+        self._cap_cache: dict[str, float] = {}
+        self._cats_cache: dict[str, tuple] = {}
+        self._node_tokens: list[dict[int, None]] = \
+            [{} for _ in self.nodes]
         self.has_batch = hasattr(method, "allocate_batch")
         self.has_plan = hasattr(method, "plan_for")
         self.has_complete_batch = hasattr(method, "complete_batch")
@@ -564,10 +918,16 @@ class ClusterEngine:
         self.events: list[tuple[float, int, int, object]] = []
         self._eseq = 0
         self.pending_arrivals = 0
+        # deterministic work counters (trace-scale refactor): how much the
+        # event loop actually did, independent of wall clock — the
+        # regression gate pins these at zero growth so an accidental
+        # re-introduction of a full rescan fails CI even on fast hardware
+        self.n_events = 0          # events drained off the heap
+        self.n_scan_entries = 0    # queue entries examined by placement
+        self.n_heap_pushes = 0     # event-heap insertions
         for t in trace.tasks:
             if self.indeg[t.key] == 0:
-                heapq.heappush(self.events, (t.arrival_h, self._next_eseq(),
-                                             _ARRIVE, t))
+                self._push((t.arrival_h, self._next_eseq(), _ARRIVE, t))
                 self.pending_arrivals += 1
 
         # deterministic seeded failure schedule: one generator per node,
@@ -581,8 +941,7 @@ class ClusterEngine:
             for i in range(len(self.nodes)):
                 t_crash = float(self.fail_rngs[i].exponential(
                     1.0 / fail_rate_per_node_h))
-                heapq.heappush(self.events, (t_crash, self._next_eseq(),
-                                             _CRASH, i))
+                self._push((t_crash, self._next_eseq(), _CRASH, i))
         # rack outages draw from their own per-rack streams (3-element
         # seed sequences: disjoint from the 2-element per-node streams
         # above, so adding rack injection never perturbs node schedules)
@@ -592,10 +951,11 @@ class ClusterEngine:
             for r in self.rack_names:
                 t_crash = float(self.rack_rngs[r].exponential(
                     1.0 / rack_fail_rate_per_h))
-                heapq.heappush(self.events, (t_crash, self._next_eseq(),
-                                             _RACK_CRASH, r))
+                self._push((t_crash, self._next_eseq(), _RACK_CRASH, r))
 
-        self.queue: list[_Queued] = []
+        self.queue = _SeqQueue()
+        self._pending_unsized: list[_Queued] = []
+        self._refresh_dirty = False
         self._qseq = 0
         self._atok = 0   # attempt tokens (reservation + finish ids)
         self._dtok = 0   # crash-ownership tokens: a recover event only
@@ -662,6 +1022,16 @@ class ClusterEngine:
         self._dtok += 1
         return v
 
+    def _push(self, ev: tuple[float, int, int, object]) -> None:
+        self.n_heap_pushes += 1
+        heapq.heappush(self.events, ev)
+
+    def _sync_node(self, node: Node) -> None:
+        """Re-mirror one node in the free-capacity index after an
+        authoritative reservation change."""
+        if self._findex is not None:
+            self._findex.sync(node)
+
     # ------------------------------------------------------------- helpers
     def _rack_repair_of(self, rack: str) -> float:
         if isinstance(self.rack_repair_h, dict):
@@ -682,9 +1052,30 @@ class ClusterEngine:
     def _cap_for(self, task: TaskInstance) -> float:
         """Largest node this task could ever be placed on: the clamp/abort
         capacity of its ledger. 0.0 when no node is eligible (the request
-        is then admission-rejected whatever its size)."""
-        return max((n.cap_gb for n in self.nodes
-                    if self._eligible(task, n)), default=0.0)
+        is then admission-rejected whatever its size). Eligibility depends
+        only on the task's machine label and the STATIC node specs (down
+        nodes stay eligible), so the answer is cached per label."""
+        cap = self._cap_cache.get(task.machine)
+        if cap is None:
+            cap = max((n.cap_gb for n in self.nodes
+                       if self._eligible(task, n)), default=0.0)
+            self._cap_cache[task.machine] = cap
+        return cap
+
+    def _cats_for(self, label: str) -> tuple:
+        """Node categories (machine labels, None = unlabeled) a task with
+        this machine label may place on — the category form of
+        :meth:`_eligible`, cached per label."""
+        cats = self._cats_cache.get(label)
+        if cats is None:
+            fx = self._findex
+            if label in self.classes:
+                cats = tuple(c for c in fx.cats
+                             if c is None or c == label)
+            else:
+                cats = tuple(fx.cats)
+            self._cats_cache[label] = cats
+        return cats
 
     def _priority(self, task: TaskInstance) -> int:
         """DAG criticality: how many instances this one gates."""
@@ -700,9 +1091,8 @@ class ClusterEngine:
         for child in self.children[key]:
             self.indeg[child.key] -= 1
             if self.indeg[child.key] == 0:
-                heapq.heappush(self.events, (max(t, child.arrival_h),
-                                             self._next_eseq(), _ARRIVE,
-                                             child))
+                self._push((max(t, child.arrival_h), self._next_eseq(),
+                            _ARRIVE, child))
                 self.pending_arrivals += 1
 
     def _finish_aborted(self, entry: _Queued, t: float) -> None:
@@ -736,16 +1126,19 @@ class ClusterEngine:
         replayed interruptions were already observed, and the method's
         counters restore from the journaled state)."""
         entry, node, started = self.running.pop(token)
+        self._node_tokens[node.idx].pop(token, None)
         gb = node.release(t, token)
+        self._sync_node(node)
         self.total_reserved -= gb
         self._note_straggle(entry.ledger, t - started)
         entry.ledger.record_interruption(t - started)
         if self.failure_strategy == "retry_scaled":
             entry.ledger.refresh_pending = True
+            self._refresh_dirty = True
         if self.has_note and self._replay is None:
             self.method.note_interruption(entry.task, t - started)
         self._jev("interrupt", list(entry.task.key))
-        self.queue.append(entry)   # keeps its original FIFO seq
+        self.queue.requeue(entry)   # keeps its original FIFO seq
 
     def _crash_node(self, idx: int, t: float, due: float) -> int:
         """Down one node (if up) until ``due``: interrupt its attempts,
@@ -759,10 +1152,13 @@ class ClusterEngine:
         self.down_token[idx] = token
         self.down_due[idx] = due
         node.crash(t)
+        if self._findex is not None:
+            self._findex.set_down(idx)
         self.n_node_failures += 1
         self._jev("crash", node.name)
-        for atok_ in [k for k, (_, n, _) in self.running.items()
-                      if n is node]:
+        # the per-node token index replaces the legacy full rescan of
+        # self.running; insertion order (= dispatch order) is preserved
+        for atok_ in list(self._node_tokens[idx]):
             self._interrupt(atok_, t)
         return token
 
@@ -773,6 +1169,8 @@ class ClusterEngine:
         del self.down_token[idx]
         self.down_due.pop(idx, None)
         self.nodes[idx].recover(t)
+        if self._findex is not None:
+            self._findex.set_up(idx)
         self._jev("recover", self.nodes[idx].name)
         return True
 
@@ -798,6 +1196,7 @@ class ClusterEngine:
             delta = new_gb - node.held_gb(token)
             if delta <= 0 or node.free_gb >= delta - 1e-9:
                 self.total_reserved += node.resize(clock, token, new_gb)
+                self._sync_node(node)
                 self.peak_reserved = max(self.peak_reserved,
                                          self.total_reserved)
                 self.n_resizes += 1
@@ -810,12 +1209,14 @@ class ClusterEngine:
                 # (guaranteed progress)
                 self.n_grow_failures += 1
                 self.running.pop(token)
+                self._node_tokens[node.idx].pop(token, None)
                 gb = node.release(clock, token)
+                self._sync_node(node)
                 self.total_reserved -= gb
                 self._note_straggle(led, clock - started)
                 led.record_grow_failure(clock - started)
                 self._jev("grow_denied", list(entry.task.key))
-                self.queue.append(entry)
+                self.queue.requeue(entry)
 
     # ---------------------------------------------------------------- step
     def step(self) -> bool:
@@ -842,16 +1243,19 @@ class ClusterEngine:
                           if rec is not None else None)
         method = self.method
         events = self.events
+        arrived: list[_Queued] = []
         if events:
             self.clock = events[0][0]
             clock = self.clock
             completed: list[tuple[_Queued, float]] = []
             while events and events[0][0] <= clock:
                 _, _, kind, payload = heapq.heappop(events)
+                self.n_events += 1
                 if kind == _ARRIVE:
                     self.pending_arrivals -= 1
-                    self.queue.append(_Queued(self._next_qseq(), clock,
-                                              payload))
+                    entry = _Queued(self._next_qseq(), clock, payload)
+                    self.queue.push(entry)
+                    arrived.append(entry)
                     self._jev("arrive", list(payload.key))
                     continue
                 if kind == _RESIZE:
@@ -865,6 +1269,7 @@ class ClusterEngine:
                     while events and events[0][0] <= clock \
                             and events[0][2] == _RESIZE:
                         wave.append(heapq.heappop(events)[3])
+                        self.n_events += 1
                     self._apply_resize_wave(clock, wave)
                     continue
                 if kind == _CRASH:
@@ -881,9 +1286,8 @@ class ClusterEngine:
                         self.down_token[payload] = token
                         self.down_due[payload] = node_due
                     if token >= 0:
-                        heapq.heappush(events, (node_due, self._next_eseq(),
-                                                _RECOVER,
-                                                (payload, token)))
+                        self._push((node_due, self._next_eseq(),
+                                    _RECOVER, (payload, token)))
                     elif self.pending_arrivals or self.queue \
                             or self.running:
                         # absorbed outright (the rack outage outlasts the
@@ -891,8 +1295,8 @@ class ClusterEngine:
                         nxt = clock + float(
                             self.fail_rngs[payload].exponential(
                                 1.0 / self.fail_rate_per_node_h))
-                        heapq.heappush(events, (nxt, self._next_eseq(),
-                                                _CRASH, payload))
+                        self._push((nxt, self._next_eseq(),
+                                    _CRASH, payload))
                     continue
                 if kind == _RECOVER:
                     idx, token = payload
@@ -905,8 +1309,7 @@ class ClusterEngine:
                         nxt = clock + float(
                             self.fail_rngs[idx].exponential(
                                 1.0 / self.fail_rate_per_node_h))
-                        heapq.heappush(events, (nxt, self._next_eseq(),
-                                                _CRASH, idx))
+                        self._push((nxt, self._next_eseq(), _CRASH, idx))
                     continue
                 if kind == _RACK_CRASH:
                     # correlated outage: every node of the rack is down
@@ -934,9 +1337,8 @@ class ClusterEngine:
                             self.down_token[idx] = token
                             self.down_due[idx] = rack_due
                             downed.append((idx, token, attrib_from))
-                    heapq.heappush(events,
-                                   (rack_due, self._next_eseq(),
-                                    _RACK_RECOVER, (payload, downed)))
+                    self._push((rack_due, self._next_eseq(),
+                                _RACK_RECOVER, (payload, downed)))
                     continue
                 if kind == _RACK_RECOVER:
                     rack, downed = payload
@@ -950,13 +1352,15 @@ class ClusterEngine:
                         nxt = clock + float(
                             self.rack_rngs[rack].exponential(
                                 1.0 / self.rack_fail_rate_per_h))
-                        heapq.heappush(events, (nxt, self._next_eseq(),
-                                                _RACK_CRASH, rack))
+                        self._push((nxt, self._next_eseq(),
+                                    _RACK_CRASH, rack))
                     continue
                 if payload not in self.running:
                     continue   # attempt was preempted / crash-killed
                 entry, node, started = self.running.pop(payload)
+                self._node_tokens[node.idx].pop(payload, None)
                 gb = node.release(clock, payload)
+                self._sync_node(node)
                 self.total_reserved -= gb
                 self._note_straggle(entry.ledger, clock - started)
                 if entry.ledger.will_succeed:
@@ -992,7 +1396,7 @@ class ClusterEngine:
                             jrec["retries"].append(
                                 [list(entry.task.key),
                                  entry.ledger.alloc_gb])
-                    self.queue.append(entry)   # original FIFO seq
+                    self.queue.requeue(entry)   # original FIFO seq
             if completed:
                 self.n_complete_waves += 1
                 items = [(e.task, e.ledger.first_alloc_gb,
@@ -1023,14 +1427,20 @@ class ClusterEngine:
 
         # ----------------------------------------------- scheduling round
         clock = self.clock
-        self.queue.sort(key=lambda e: e.seq)
-        unsized = [e for e in self.queue if e.ledger is None]
+        # the queue is permanently seq-sorted (_SeqQueue), so the unsized
+        # wave is exactly this drain's arrivals (plus, defensively, any
+        # unsized entries a restored snapshot carried) in seq order —
+        # the legacy sort + full-queue filter, without the O(Q) pass
+        if self._pending_unsized:
+            unsized = self._pending_unsized + arrived
+            self._pending_unsized = []
+        else:
+            unsized = arrived
         if unsized:
             # dynamic ready-set burst: one sizing call for the whole wave
             # (one fused device dispatch per pool for batched methods)
             self.n_waves += 1
             allocs = self._wave_allocs(rec, jrec, "sized", unsized)
-            rejected: set[int] = set()
             for entry, alloc in zip(unsized, allocs):
                 entry.ledger = AttemptLedger(
                     entry.task, float(alloc), self._cap_for(entry.task),
@@ -1065,15 +1475,14 @@ class ClusterEngine:
                         self.warned_admission = True
                     entry.ledger.aborted = True
                     self._finish_aborted(entry, clock)
-                    rejected.add(id(entry))
-            if rejected:
-                self.queue = [e for e in self.queue
-                              if id(e) not in rejected]
-        if self.failure_strategy == "retry_scaled":
+                    self.queue.discard(entry)
+        if self.failure_strategy == "retry_scaled" and self._refresh_dirty:
             # crash-interrupted tasks are re-sized through the method (one
             # batched dispatch when available) before re-entering
             # placement: a tightened prediction shrinks what the next
-            # crash can burn
+            # crash can burn. The dirty flag (set by _interrupt) skips the
+            # full-queue filter on the steps — the vast majority — where
+            # no interruption is pending
             refresh = [e for e in self.queue
                        if e.ledger is not None
                        and e.ledger.refresh_pending]
@@ -1081,21 +1490,28 @@ class ClusterEngine:
                 rallocs = self._wave_allocs(rec, jrec, "refresh", refresh)
                 for entry, alloc in zip(refresh, rallocs):
                     entry.ledger.refresh_alloc(float(alloc))
-        ctx = PlacementContext(self.nodes, self.backfill_depth,
-                               self._eligible, self._priority, self.running)
-        placements, evictions = self.place(self.queue, ctx)
+            self._refresh_dirty = False
+        if self._use_index:
+            placements, evictions = self._place_indexed()
+        else:
+            ctx = PlacementContext(self.nodes, self.backfill_depth,
+                                   self._eligible, self._priority,
+                                   self.running)
+            placements, evictions = self.place(list(self.queue), ctx)
         for token in evictions:
             self.n_preemptions += 1
             self._interrupt(token, clock)
         if placements:
-            placed = set(map(id, (e for e, _ in placements)))
-            self.queue = [e for e in self.queue if id(e) not in placed]
+            for entry, _node in placements:
+                self.queue.discard(entry)
             for entry, node in placements:
                 led = entry.ledger
                 alloc = led.start_alloc_gb
                 token = self._next_atok()
                 node.reserve(clock, token, alloc)
+                self._sync_node(node)
                 self.running[token] = (entry, node, clock)
+                self._node_tokens[node.idx][token] = None
                 self.total_reserved += alloc
                 self.peak_reserved = max(self.peak_reserved,
                                          self.total_reserved)
@@ -1122,9 +1538,8 @@ class ClusterEngine:
                     else:
                         led.set_slowdown(1.0)
                 duration = led.attempt_duration_h
-                heapq.heappush(
-                    self.events, (clock + duration, self._next_eseq(),
-                                  _FINISH, token))
+                self._push((clock + duration, self._next_eseq(),
+                            _FINISH, token))
                 if led.temporal_active:
                     # resize at every predicted segment boundary the
                     # attempt survives to (a doomed plan dies at its
@@ -1142,8 +1557,7 @@ class ClusterEngine:
                         if end <= base + 1e-12:
                             continue   # boundary precedes the resume point
                         if end < horizon - 1e-12:
-                            heapq.heappush(
-                                self.events,
+                            self._push(
                                 (clock + (end - base) * led.task.runtime_h
                                  * led.slowdown,
                                  self._next_eseq(), _RESIZE,
@@ -1164,6 +1578,83 @@ class ClusterEngine:
             if not self._replay:
                 self._replay = None   # tail consumed -> back to live mode
         return True
+
+    def _place_indexed(self) -> tuple[list[tuple[_Queued, Node]],
+                                      list[int]]:
+        """Indexed form of the built-in placement policies: semantically
+        (and bitwise) the reference ``_scan``/``_place_*`` path, with the
+        per-round O(nodes) free/blocked dict builds and per-entry O(nodes)
+        candidate comprehensions replaced by per-category index queries.
+
+        The reference scan's per-node blocked counters and eligibility both
+        depend only on a node's category (machine label), so one counter
+        per category reproduces every skip/close decision, and a category
+        query returns exactly the node the reference ``choose`` picks
+        (``_FreeIndex.query`` tuples encode each policy's key + the
+        node-order tie-break). Entries are examined in the same seq order,
+        the scan breaks on the same all-categories-closed condition, and
+        in-round free decrements use the same float arithmetic — asserted
+        bitwise against the reference path in ``tests/test_engine_index``.
+        """
+        fx = self._findex
+        limit = 0 if self.policy == "fifo" else self.backfill_depth
+        bc = dict.fromkeys(fx.cats, 0)
+        n_open = sum(1 for c in fx.cats if fx.up_count[c] > 0)
+        placements: list[tuple[_Queued, Node]] = []
+        placed_ids = set()
+        for entry in self.queue:
+            if n_open == 0:
+                break
+            self.n_scan_entries += 1
+            alloc = entry.ledger.start_alloc_gb
+            cats = self._cats_for(entry.task.machine)
+            best = None
+            for c in cats:
+                if bc[c] > limit:
+                    continue
+                r = fx.query(c, alloc)
+                if r is not None and (best is None or r < best):
+                    best = r
+            if best is None:
+                # blocked: counts against every category the entry was
+                # eligible for (the reference bumps each eligible node)
+                for c in cats:
+                    bc[c] += 1
+                    if bc[c] == limit + 1 and fx.up_count[c] > 0:
+                        n_open -= 1
+                continue
+            i = best[-1]
+            fx.scan_place(i, alloc)
+            placements.append((entry, self.nodes[i]))
+            placed_ids.add(id(entry))
+        if self.policy != "preemptive":
+            return placements, []
+        head = next((e for e in self.queue if id(e) not in placed_ids),
+                    None)
+        if head is None:
+            return placements, []
+        prio = self._priority(head.task)
+        if prio <= 0:
+            return placements, []
+        alloc = head.ledger.start_alloc_gb
+        best = None   # (victim priority, -attempt start) -> token, node
+        for token, (entry, node, started) in self.running.items():
+            if not node.up or not self._eligible(head.task, node):
+                continue
+            vprio = self._priority(entry.task)
+            if vprio >= prio:
+                continue
+            # fx.free carries this round's provisional placements — the
+            # reference's placement-adjusted free dict
+            if fx.free[node.idx] + node.held_gb(token) < alloc:
+                continue
+            key = (vprio, -started)
+            if best is None or key < best[0]:
+                best = (key, token, node)
+        if best is None:
+            return placements, []
+        _, token, node = best
+        return placements + [(head, node)], [token]
 
     def _wave_allocs(self, rec, jrec, field: str,
                      wave: list[_Queued]) -> list[float]:
@@ -1243,7 +1734,10 @@ class ClusterEngine:
             straggler_extra_h=self.straggler_extra_h,
             rack_downtime_h=dict(self.rack_outage_node_h),
             n_recoveries=self.n_recoveries,
-            n_replayed_steps=self.n_replayed_steps)
+            n_replayed_steps=self.n_replayed_steps,
+            n_events=self.n_events,
+            n_scan_entries=self.n_scan_entries,
+            n_heap_pushes=self.n_heap_pushes)
         return SimResult(self.trace.name, self.method.name, self.ttf,
                          self.outcomes, cluster=metrics)
 
@@ -1360,6 +1854,9 @@ class ClusterEngine:
                 "n_rack_failures": self.n_rack_failures,
                 "n_straggler_attempts": self.n_straggler_attempts,
                 "straggler_extra_h": self.straggler_extra_h,
+                "n_events": self.n_events,
+                "n_scan_entries": self.n_scan_entries,
+                "n_heap_pushes": self.n_heap_pushes,
             },
             "rack_outage_node_h": dict(self.rack_outage_node_h),
             "warned_admission": self.warned_admission,
@@ -1391,18 +1888,30 @@ class ClusterEngine:
         self._atok = int(state["atok"])
         self._dtok = int(state["dtok"])
         self.events = [self._ev_from_json(e) for e in state["events"]]
-        self.queue = [self._entry_from_json(e) for e in state["queue"]]
+        self.queue = _SeqQueue([self._entry_from_json(e)
+                                for e in state["queue"]])
+        # defensive: snapshots taken at step boundaries hold only sized
+        # entries, but an unsized one must re-enter the next sizing wave
+        self._pending_unsized = [e for e in self.queue if e.ledger is None]
+        self._refresh_dirty = any(e.ledger is not None
+                                  and e.ledger.refresh_pending
+                                  for e in self.queue)
         byname = {n.name: n for n in self.nodes}
-        # running is an insertion-ordered dict: crash_node and the
-        # preemptive policy iterate it, so restore in recorded order
+        # running is an insertion-ordered dict: crash_node's per-node token
+        # index and the preemptive policy follow it, so restore in
+        # recorded order
         self.running = {}
+        self._node_tokens = [{} for _ in self.nodes]
         for tok, ej, nname, started in state["running"]:
+            node = byname[nname]
             self.running[int(tok)] = (self._entry_from_json(ej),
-                                      byname[nname], started)
+                                      node, started)
+            self._node_tokens[node.idx][int(tok)] = None
         for nd in state["nodes"]:
             n = byname[nd["name"]]
             n.up = nd["up"]
             n._held = {int(t): g for t, g in nd["held"]}
+            n._refresh_reserved()
             n.reserved_gbh = nd["reserved_gbh"]
             n.down_h = nd["down_h"]
             n.last_t = nd["last_t"]
@@ -1426,6 +1935,10 @@ class ClusterEngine:
             self.rack_rngs[k].bit_generator.state = s
         self.n_recoveries = int(state.get("n_recoveries", 0))
         self.n_replayed_steps = int(state.get("n_replayed_steps", 0))
+        if self._findex is not None:
+            # snapshots never serialize the free-capacity index: it is a
+            # pure function of the node states restored above
+            self._findex.rebuild()
         if state.get("mstate") is not None and self.has_restore_state:
             self.method.restore_state(state["mstate"])
         if self.has_restore_pending:

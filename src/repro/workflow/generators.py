@@ -196,14 +196,17 @@ def _preset_for(max_actual: float, factor: float) -> float:
     return float(PRESET_LADDER_GB[-1])
 
 
-def generate_workflow(name: str, seed: int = 0, scale: float = 1.0,
+def generate_workflow(name: str | None = None, seed: int = 0,
+                      scale: float = 1.0,
                       machines: tuple[str, ...] = ("epyc128",),
                       machine_cap_gb: float = 128.0,
                       machine_caps_gb: dict[str, float] | None = None,
                       arrival_rate_per_h: float | None = None,
+                      arrival_cv: float | None = None,
                       fan_in: int = 2,
                       usage_curves: bool = True,
-                      curve_shapes: tuple[str, ...] = CURVE_SHAPES
+                      curve_shapes: tuple[str, ...] = CURVE_SHAPES,
+                      spec: WorkflowSpec | None = None
                       ) -> WorkflowTrace:
     """Generate the full trace for one workflow. ``scale`` shrinks instance
     counts for fast tests (tests use scale=0.1; benchmarks use 1.0).
@@ -234,8 +237,26 @@ def generate_workflow(name: str, seed: int = 0, scale: float = 1.0,
     never perturbs the peak/runtime draws — pre-temporal traces are
     bit-identical. ``curve_shapes=("ramp",)`` forces every type onto ramps
     (the temporal benchmarks' worst case for peak-based allocators).
+
+    ``spec`` generates from an explicit :class:`WorkflowSpec` instead of
+    the named catalog — the hook :func:`repro.data.ingest.calibrate_generators`
+    uses to anchor synthetic sweeps to an ingested real log (``name`` is
+    then ignored; every seeded stream keys on ``spec.name``).
+
+    ``arrival_cv`` sets the coefficient of variation of the root
+    inter-arrival times via gamma-distributed gaps (mean stays
+    ``1 / arrival_rate_per_h``): > 1 is burstier than Poisson, < 1 more
+    regular. ``None`` (the default) keeps the EXACT legacy exponential
+    draw — ``arrival_cv=1.0`` is the same distribution but a different
+    draw path, so pre-existing traces stay bit-identical only with None.
     """
-    spec = WORKFLOWS[name]
+    if spec is None:
+        if name is None:
+            raise ValueError("need a workflow name or an explicit spec")
+        spec = WORKFLOWS[name]
+    name = spec.name
+    if arrival_cv is not None and arrival_cv <= 0.0:
+        raise ValueError(f"arrival_cv must be > 0, got {arrival_cv}")
     names = _type_names(spec)
     if machine_caps_gb:
         machines = tuple(machine_caps_gb)
@@ -307,7 +328,15 @@ def generate_workflow(name: str, seed: int = 0, scale: float = 1.0,
         deps = edges.get((t.task_type, t.index), ())
         arrival = 0.0
         if arrival_rate_per_h and not deps:
-            clock += float(arrival_rng.exponential(1.0 / arrival_rate_per_h))
+            if arrival_cv is None:
+                clock += float(arrival_rng.exponential(
+                    1.0 / arrival_rate_per_h))
+            else:
+                # gamma gaps: mean 1/rate, cv as asked (shape k = 1/cv^2,
+                # scale = cv^2/rate) — the burstiness knob calibration fits
+                clock += float(arrival_rng.gamma(
+                    1.0 / arrival_cv ** 2,
+                    arrival_cv ** 2 / arrival_rate_per_h))
             arrival = clock
         final.append(dataclasses.replace(t, deps=deps, arrival_h=arrival))
     return WorkflowTrace(name=name, tasks=final, machine_cap_gb=machine_cap_gb)

@@ -113,6 +113,14 @@ class ClusterMetrics:
     # allowed to change (see tests/chaos.py::results_equal).
     n_recoveries: int = 0
     n_replayed_steps: int = 0
+    # trace-scale engine work counters (PR 8): deterministic measures of
+    # how much the event loop did — events drained off the heap, queue
+    # entries examined by placement scans, event-heap insertions. Pure
+    # functions of (trace, config, seeds), so the regression gate pins
+    # them at zero growth independent of wall clock.
+    n_events: int = 0
+    n_scan_entries: int = 0
+    n_heap_pushes: int = 0
 
     @property
     def mean_util(self) -> float:

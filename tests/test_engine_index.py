@@ -1,0 +1,181 @@
+"""Indexed event core (PR 8): the category-indexed placement path must be
+BITWISE equivalent to the legacy reference scan (``_use_index = False``
+forces it) for every policy, under failure injection, temporal resizes, and
+retry_scaled re-queues — plus the deterministic work counters and the
+tombstoned queue the index rides on."""
+import dataclasses
+
+import pytest
+
+from repro.baselines import make_method
+from repro.baselines.sizey_method import SizeyMethod
+from repro.core import SizeyConfig
+from repro.workflow import generate_workflow, simulate_cluster
+from repro.workflow.cluster import (ClusterEngine, NodeSpec, _SeqQueue,
+                                    node_specs_from_caps,
+                                    node_specs_from_racks)
+
+
+def _run(monkeypatch, use_index, trace, method, **kw):
+    orig = ClusterEngine.__init__
+
+    def patched(self, *a, **k):
+        orig(self, *a, **k)
+        self._use_index = use_index and self._use_index
+
+    monkeypatch.setattr(ClusterEngine, "__init__", patched)
+    return simulate_cluster(trace, method, **kw)
+
+
+def _assert_bitwise(res_a, res_b):
+    assert res_a.outcomes == res_b.outcomes
+    ca = dataclasses.asdict(res_a.cluster)
+    cb = dataclasses.asdict(res_b.cluster)
+    # the ONLY allowed divergence: the reference scan doesn't count its
+    # queue-entry visits (n_scan_entries is an indexed-path work counter)
+    ca.pop("n_scan_entries"), cb.pop("n_scan_entries")
+    assert ca == cb
+
+
+@pytest.mark.parametrize(
+    "policy", ["fifo", "backfill", "best_fit", "spread", "preemptive"])
+def test_indexed_placement_bitwise_equals_reference(monkeypatch, policy):
+    trace = generate_workflow("mag", seed=3, scale=0.05,
+                              arrival_rate_per_h=400.0)
+    kw = dict(n_nodes=6, node_cap_gb=32.0, policy=policy)
+    a = _run(monkeypatch, True, trace,
+             make_method("witt_percentile", machine_cap_gb=32.0), **kw)
+    b = _run(monkeypatch, False, trace,
+             make_method("witt_percentile", machine_cap_gb=32.0), **kw)
+    _assert_bitwise(a, b)
+
+
+@pytest.mark.parametrize("policy", ["backfill", "best_fit", "spread"])
+def test_indexed_bitwise_on_hetero_nodes_with_failures(monkeypatch, policy):
+    trace = generate_workflow("rnaseq", seed=1, scale=0.1,
+                              machine_caps_gb={"m16": 16.0, "m32": 32.0,
+                                               "m64": 64.0})
+    specs = node_specs_from_caps([16.0, 32.0, 64.0], n_nodes=6)
+    kw = dict(node_specs=specs, policy=policy,
+              fail_rate_per_node_h=0.4, repair_h=0.3, fail_seed=5)
+    mk = lambda: make_method("tovar_ppm", machine_cap_gb=64.0)
+    _assert_bitwise(_run(monkeypatch, True, trace, mk(), **kw),
+                    _run(monkeypatch, False, trace, mk(), **kw))
+
+
+def test_indexed_bitwise_under_rack_outages_and_stragglers(monkeypatch):
+    trace = generate_workflow("chipseq", seed=2, scale=0.05,
+                              arrival_rate_per_h=300.0)
+    specs = node_specs_from_racks([[16.0, 32.0], [16.0, 32.0]])
+    kw = dict(node_specs=specs, policy="spread",
+              rack_fail_rate_per_h=0.5, rack_repair_h=0.4,
+              straggler_rate=0.2, straggler_factor=3.0, fail_seed=11)
+    mk = lambda: make_method("witt_percentile", machine_cap_gb=32.0)
+    _assert_bitwise(_run(monkeypatch, True, trace, mk(), **kw),
+                    _run(monkeypatch, False, trace, mk(), **kw))
+
+
+def test_indexed_bitwise_with_temporal_resizes(monkeypatch):
+    trace = generate_workflow("eager", seed=0, scale=0.05,
+                              curve_shapes=("ramp",))
+    kw = dict(n_nodes=4, node_cap_gb=64.0, policy="backfill")
+    mk = lambda: SizeyMethod(SizeyConfig(), temporal_k=4,
+                             machine_cap_gb=64.0)
+    _assert_bitwise(_run(monkeypatch, True, trace, mk(), **kw),
+                    _run(monkeypatch, False, trace, mk(), **kw))
+
+
+def test_indexed_bitwise_with_retry_scaled_crashes(monkeypatch):
+    # retry_scaled exercises the _interrupt requeue + refresh wave
+    trace = generate_workflow("iwd", seed=4, scale=0.1,
+                              arrival_rate_per_h=600.0)
+    kw = dict(n_nodes=4, node_cap_gb=16.0, policy="best_fit",
+              fail_rate_per_node_h=0.8, repair_h=0.2, fail_seed=9)
+    mk = lambda: make_method("witt_percentile", machine_cap_gb=16.0,
+                             failure_strategy="retry_scaled")
+    _assert_bitwise(_run(monkeypatch, True, trace, mk(), **kw),
+                    _run(monkeypatch, False, trace, mk(), **kw))
+
+
+def test_custom_policy_falls_back_to_reference_path():
+    import repro.workflow.cluster as cl
+    calls = []
+
+    def mine(queue, ctx):
+        calls.append(len(queue))
+        return cl.PLACEMENT_POLICIES["fifo"](queue, ctx)
+
+    cl.PLACEMENT_POLICIES["mine_pr8"] = mine
+    try:
+        trace = generate_workflow("iwd", seed=0, scale=0.03)
+        res = simulate_cluster(trace,
+                               make_method("workflow_presets",
+                                           machine_cap_gb=16.0),
+                               n_nodes=2, node_cap_gb=16.0,
+                               policy="mine_pr8")
+        assert calls, "custom policy never invoked"
+        assert len(res.outcomes) == len(trace.tasks)
+    finally:
+        del cl.PLACEMENT_POLICIES["mine_pr8"]
+
+
+def test_work_counters_populated_and_deterministic():
+    trace = generate_workflow("mag", seed=0, scale=0.05,
+                              arrival_rate_per_h=200.0)
+    mk = lambda: make_method("workflow_presets", machine_cap_gb=32.0)
+    r1 = simulate_cluster(trace, mk(), n_nodes=4, node_cap_gb=32.0)
+    r2 = simulate_cluster(trace, mk(), n_nodes=4, node_cap_gb=32.0)
+    c1, c2 = r1.cluster, r2.cluster
+    assert c1.n_events > 0 and c1.n_scan_entries > 0
+    assert c1.n_events <= c1.n_heap_pushes   # every pop was once pushed
+    assert (c1.n_events, c1.n_scan_entries, c1.n_heap_pushes) == \
+           (c2.n_events, c2.n_scan_entries, c2.n_heap_pushes)
+
+
+def test_duplicate_node_names_rejected():
+    trace = generate_workflow("iwd", seed=0, scale=0.03)
+    with pytest.raises(ValueError, match="unique"):
+        simulate_cluster(trace, make_method("workflow_presets"),
+                         node_specs=[NodeSpec("n0", 32.0),
+                                     NodeSpec("n0", 64.0)])
+
+
+# ------------------------------------------------------- _SeqQueue invariants
+
+class _E:
+    __slots__ = ("seq",)
+
+    def __init__(self, seq):
+        self.seq = seq
+
+
+def test_seq_queue_iterates_in_seq_order_through_churn():
+    q = _SeqQueue()
+    es = [_E(i) for i in range(100)]
+    for e in es:
+        q.push(e)
+    # tombstone most entries (forces threshold compaction), revive a few
+    for e in es[10:90]:
+        q.discard(e)
+    for e in es[20:25]:
+        q.requeue(e)
+    expect = sorted(es[:10] + es[20:25] + es[90:], key=lambda e: e.seq)
+    assert list(q) == expect
+    assert len(q) == len(expect)
+    assert q[-1] is es[-1]
+    assert q[0] is es[0]
+
+
+def test_seq_queue_requeue_after_compaction_reinserts_in_order():
+    q = _SeqQueue()
+    es = [_E(i) for i in range(40)]
+    for e in es:
+        q.push(e)
+    for e in es[:39]:
+        q.discard(e)
+    q.compact()
+    q.requeue(es[5])          # fully removed -> bisect re-insertion
+    assert [e.seq for e in q] == [5, 39]
+    assert bool(q)
+    q.discard(es[5]), q.discard(es[39])
+    assert not q and len(q) == 0
