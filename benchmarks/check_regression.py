@@ -116,6 +116,41 @@ RULES: dict[str, list[dict]] = {
         {"path": "sample_trace.n_scan_entries", "max_growth": 0.0},
         {"path": "sample_trace.n_heap_pushes", "max_growth": 0.0},
     ],
+    "BENCH_obs.json": [
+        # the PR 9 contract: telemetry is side-effect-free — every traced
+        # run must reproduce the untraced SimResult bitwise (asserted
+        # in-bench; recorded here)
+        {"path": "headline.traced_equals_untraced", "equals": True},
+        # off-mode (no collector installed) engine work counters: the obs
+        # layer may not change what the engine does when disabled
+        {"path": "engine_overhead[label=mag_s0p2_n32].n_events",
+         "max_growth": 0.0},
+        {"path": "engine_overhead[label=mag_s0p2_n32].n_scan_entries",
+         "max_growth": 0.0},
+        {"path": "engine_overhead[label=mag_s0p2_n32].n_heap_pushes",
+         "max_growth": 0.0},
+        {"path": "engine_overhead[label=mag_s1_n256].n_events",
+         "max_growth": 0.0},
+        # span counts sit at wave/dispatch granularity (pure functions of
+        # trace/config/seed): any growth means an instrumentation site
+        # silently moved onto a per-event or per-task path
+        {"path": "engine_overhead[label=mag_s1_n256].n_spans",
+         "max_growth": 0.0},
+        {"path":
+         "engine_overhead[label=mag_s1_n256].span_counts.engine/sizing_wave",
+         "max_growth": 0.0},
+        {"path": "traced_sizey.n_spans", "max_growth": 0.0},
+        {"path": "traced_sizey.span_counts.predict", "max_growth": 0.0},
+        {"path": "traced_sizey.span_counts.observe", "max_growth": 0.0},
+        # off-mode fused device launches, measured under scoped_counters:
+        # unchanged by the registry absorption of the legacy globals
+        {"path": "traced_sizey.off_counters.predict_pool",
+         "max_growth": 0.0},
+        {"path": "traced_sizey.off_counters.observe_pool",
+         "max_growth": 0.0},
+        # exactly one quality row per completed task
+        {"path": "traced_sizey.n_quality_samples", "max_growth": 0.0},
+    ],
     "results/bench_results.json": [
         # decision dispatches may not grow: each cluster ready wave stays
         # ONE fused launch per pool

@@ -32,6 +32,7 @@ import time
 from benchmarks._util import dump_json
 
 from repro.baselines import make_method
+from repro import obs
 from repro.baselines.sizey_method import SizeyMethod
 from repro.core import SizeyConfig
 from repro.core.predictor import DISPATCH_COUNTS
@@ -40,10 +41,6 @@ from repro.workflow import (generate_workflow, node_specs_from_caps,
 from repro.workflow.cluster import machine_label
 
 HETERO_CAPS = (16.0, 32.0, 64.0)
-
-
-def _dispatch_delta(before: dict, key: str) -> int:
-    return DISPATCH_COUNTS[key] - before.get(key, 0)
 
 
 def run(scale: float = 0.2, workflow: str = "mag", n_nodes: int = 8,
@@ -94,18 +91,18 @@ def run(scale: float = 0.2, workflow: str = "mag", n_nodes: int = 8,
           f"mean_util={report['engine']['mean_node_util']:.2f}")
 
     # decision dispatches: serial per-task vs per-(wave x pool) bursts
-    before = dict(DISPATCH_COUNTS)
-    t0 = time.perf_counter()
-    simulate(trace, SizeyMethod(SizeyConfig(), ttf=ttf), ttf=ttf)
-    sizey_serial_s = time.perf_counter() - t0
-    serial_dispatches = _dispatch_delta(before, "predict_pool")
+    with obs.scoped_counters(DISPATCH_COUNTS) as dc:
+        t0 = time.perf_counter()
+        simulate(trace, SizeyMethod(SizeyConfig(), ttf=ttf), ttf=ttf)
+        sizey_serial_s = time.perf_counter() - t0
+        serial_dispatches = dc["predict_pool"]
 
-    before = dict(DISPATCH_COUNTS)
-    t0 = time.perf_counter()
-    rz = simulate_cluster(trace, SizeyMethod(SizeyConfig(), ttf=ttf),
-                          ttf=ttf, n_nodes=n_nodes)
-    sizey_cluster_s = time.perf_counter() - t0
-    cluster_dispatches = _dispatch_delta(before, "predict_pool")
+    with obs.scoped_counters(DISPATCH_COUNTS) as dc:
+        t0 = time.perf_counter()
+        rz = simulate_cluster(trace, SizeyMethod(SizeyConfig(), ttf=ttf),
+                              ttf=ttf, n_nodes=n_nodes)
+        sizey_cluster_s = time.perf_counter() - t0
+        cluster_dispatches = dc["predict_pool"]
     report["sizey"] = {
         "serial_s": sizey_serial_s,
         "cluster_s": sizey_cluster_s,

@@ -1,0 +1,155 @@
+"""Observability-plane benchmark: telemetry-off vs telemetry-on wall on
+the engine smoke grid, plus deterministic span / quality-sample counts.
+
+    PYTHONPATH=src python -m benchmarks.obs_bench \
+        --out results/fresh/BENCH_obs.json \
+        --trace-out results/fresh/obs_trace.json
+
+Two claims are checked, mirroring the PR 9 contract:
+
+  * **Disabled cost ~zero.** The off-mode engine cells run with no
+    collector installed — every ``span()`` is one module-global ``None``
+    check — and their deterministic work counters (``n_events``,
+    ``n_scan_entries``, ``n_heap_pushes``) are gated at zero growth by
+    ``check_regression.py``. Wall ratios are artifacts only (CI runners
+    are noisy).
+  * **Telemetry is side-effect-free.** Each traced run (spans on; the
+    sizey cell also emits quality rows) must reproduce the untraced
+    SimResult bitwise (``headline.traced_equals_untraced``), and the
+    span / quality-sample counts are pure functions of (trace, config,
+    seed) — gated at zero growth, so an instrumentation site silently
+    moving onto a per-event path fails the build.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+from benchmarks._util import dump_json
+
+from repro import obs
+from repro.baselines import make_method
+from repro.baselines.sizey_method import SizeyMethod
+from repro.core.predictor import DISPATCH_COUNTS
+from repro.obs.quality import read_quality_rows
+from repro.workflow import generate_workflow, simulate_cluster
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir,
+                                "tests"))
+from chaos import assert_results_equal  # noqa: E402
+
+# engine smoke cells (trace scale, node count) — the ends of the
+# engine_bench grid: small/cheap and the 6k-task / 256-node cell
+SMOKE_GRID = ((0.2, 32), (1.0, 256))
+
+
+def _replay(trace, n_nodes: int):
+    method = make_method("workflow_presets",
+                         machine_cap_gb=trace.machine_cap_gb)
+    t0 = time.perf_counter()
+    res = simulate_cluster(trace, method, n_nodes=n_nodes,
+                           node_cap_gb=32.0)
+    return time.perf_counter() - t0, res
+
+
+def _span_summary(col) -> dict:
+    return {"n_spans": col.total_spans(),
+            "span_counts": dict(sorted(col.span_counts.items()))}
+
+
+def run(out_path: str = "BENCH_obs.json",
+        trace_out: str | None = None) -> dict:
+    report: dict = {"engine_overhead": []}
+    all_bitwise = True
+
+    for scale, n_nodes in SMOKE_GRID:
+        trace = generate_workflow("mag", seed=1, scale=scale,
+                                  arrival_rate_per_h=2000.0)
+        wall_off, res_off = _replay(trace, n_nodes)
+        with obs.tracing() as col:
+            wall_on, res_on = _replay(trace, n_nodes)
+        assert_results_equal(res_off, res_on)
+        slabel = f"{scale:g}".replace(".", "p")
+        cell = {
+            "label": f"mag_s{slabel}_n{n_nodes}",
+            "n_tasks": len(trace.tasks), "n_nodes": n_nodes,
+            "wall_off_s": round(wall_off, 3),
+            "wall_on_s": round(wall_on, 3),
+            "on_off_ratio": round(wall_on / wall_off, 3),
+            # off-mode engine work counters: gated at zero growth
+            "n_events": res_off.cluster.n_events,
+            "n_scan_entries": res_off.cluster.n_scan_entries,
+            "n_heap_pushes": res_off.cluster.n_heap_pushes,
+            **_span_summary(col),
+        }
+        report["engine_overhead"].append(cell)
+        print(f"obs_bench/{cell['label']},n_tasks={cell['n_tasks']},"
+              f"wall_off={cell['wall_off_s']},wall_on={cell['wall_on_s']},"
+              f"ratio={cell['on_off_ratio']},spans={cell['n_spans']}")
+
+    # the sizey cell: full predictor loop traced WITH quality telemetry,
+    # bitwise-checked against the untraced/untelemetered run
+    trace = generate_workflow("mag", seed=1, scale=0.2)
+    with obs.scoped_counters(DISPATCH_COUNTS) as dc:
+        t0 = time.perf_counter()
+        res_off = simulate_cluster(
+            trace, SizeyMethod(machine_cap_gb=trace.machine_cap_gb),
+            n_nodes=32)
+        wall_off = time.perf_counter() - t0
+        off_counters = {"predict_pool": dc["predict_pool"],
+                        "observe_pool": dc["observe_pool"],
+                        "decisions": dc["decisions"]}
+    method = SizeyMethod(machine_cap_gb=trace.machine_cap_gb, quality=True)
+    with obs.tracing() as col:
+        t0 = time.perf_counter()
+        res_on = simulate_cluster(trace, method, n_nodes=32)
+        wall_on = time.perf_counter() - t0
+    assert_results_equal(res_off, res_on)
+    quality = read_quality_rows(method.predictor.db)
+    assert len(quality) == len(trace.tasks), \
+        f"{len(quality)} quality rows for {len(trace.tasks)} tasks"
+    report["traced_sizey"] = {
+        "n_tasks": len(trace.tasks),
+        "wall_off_s": round(wall_off, 3), "wall_on_s": round(wall_on, 3),
+        "on_off_ratio": round(wall_on / wall_off, 3),
+        "off_counters": off_counters,
+        "n_quality_samples": len(quality),
+        "n_quality_pools": len({(q["task_type"], q["machine"])
+                                for q in quality}),
+        **_span_summary(col),
+    }
+    print(f"obs_bench/traced_sizey,wall_off={wall_off:.3f},"
+          f"wall_on={wall_on:.3f},spans={col.total_spans()},"
+          f"quality_samples={len(quality)}")
+
+    report["headline"] = {
+        "traced_equals_untraced": all_bitwise,
+        "max_on_off_ratio": max(
+            c["on_off_ratio"] for c in (*report["engine_overhead"],
+                                        report["traced_sizey"])),
+    }
+
+    if trace_out:
+        os.makedirs(os.path.dirname(trace_out) or ".", exist_ok=True)
+        col.write_chrome_trace(trace_out)
+        print(f"# wrote {trace_out} ({col.total_spans()} spans)")
+    if out_path:
+        dump_json(out_path, report)
+        print(f"# wrote {out_path}")
+    return report
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_obs.json")
+    ap.add_argument("--trace-out", default=None, metavar="FILE",
+                    help="also export the sizey cell's spans as a "
+                         "Chrome/Perfetto trace_event JSON artifact")
+    args = ap.parse_args()
+    run(out_path=args.out, trace_out=args.trace_out)
+
+
+if __name__ == "__main__":
+    main()

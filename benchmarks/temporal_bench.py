@@ -36,6 +36,7 @@ import time
 
 from benchmarks._util import dump_json
 
+from repro import obs
 from repro.baselines import make_method
 from repro.baselines.sizey_method import SizeyMethod
 from repro.core import SizeyConfig
@@ -83,30 +84,28 @@ def run(scale: float = 0.1, workflow: str = "mag", k: int = 4,
     serial = {}
     counters = {}
     for name in METHODS:
-        d0, b0 = dict(DISPATCH_COUNTS), dict(BOUNDARY_COUNTS)
-        t0 = time.perf_counter()
-        r = simulate(trace, _method(name, ttf, k), ttf=ttf)
-        wall = time.perf_counter() - t0
+        with obs.scoped_counters(DISPATCH_COUNTS,
+                                 BOUNDARY_COUNTS) as (dc, bc):
+            t0 = time.perf_counter()
+            r = simulate(trace, _method(name, ttf, k), ttf=ttf)
+            wall = time.perf_counter() - t0
+            if name == "sizey_temporal":
+                # deterministic work counters of the warm temporal run:
+                # the amortized-refit schedule and the generation-keyed
+                # boundary cache make all of these fixed at fixed
+                # seed/scale
+                counters = {
+                    "full_refits": dc["observe_pool"],
+                    "fused_refreshes": dc["refresh_pool"],
+                    "boundary_fits": bc["fit"],
+                    "boundary_hits": bc["hit"],
+                }
         serial[name] = {
             "tw_gbh": r.temporal_wastage_gbh,
             "wastage_gbh": r.wastage_gbh,
             "failures": r.n_failures,
             "wall_s": wall,
         }
-        if name == "sizey_temporal":
-            # deterministic work counters of the warm temporal run: the
-            # amortized-refit schedule and the generation-keyed boundary
-            # cache make all of these fixed at fixed seed/scale
-            counters = {
-                "full_refits": DISPATCH_COUNTS["observe_pool"]
-                - d0.get("observe_pool", 0),
-                "fused_refreshes": DISPATCH_COUNTS["refresh_pool"]
-                - d0.get("refresh_pool", 0),
-                "boundary_fits": BOUNDARY_COUNTS["fit"]
-                - b0.get("fit", 0),
-                "boundary_hits": BOUNDARY_COUNTS["hit"]
-                - b0.get("hit", 0),
-            }
         print(f"temporal_bench/serial,method={name},"
               f"tw_gbh={serial[name]['tw_gbh']:.1f},"
               f"wastage_gbh={serial[name]['wastage_gbh']:.1f},"
@@ -138,19 +137,18 @@ def run(scale: float = 0.1, workflow: str = "mag", k: int = 4,
     rp = simulate_cluster(ctrace, _method("sizey", ttf, k), ttf=ttf,
                           n_nodes=n_nodes)
     peak_wall = time.perf_counter() - t0
-    b0 = dict(BOUNDARY_COUNTS)
-    t0 = time.perf_counter()
-    rt = simulate_cluster(ctrace, _method("sizey_temporal", ttf, k), ttf=ttf,
-                          n_nodes=n_nodes)
-    temp_wall = time.perf_counter() - t0
+    with obs.scoped_counters(BOUNDARY_COUNTS) as bc:
+        t0 = time.perf_counter()
+        rt = simulate_cluster(ctrace, _method("sizey_temporal", ttf, k),
+                              ttf=ttf, n_nodes=n_nodes)
+        temp_wall = time.perf_counter() - t0
+        # scheduling waves ask for every member's boundaries but a pool
+        # only refits once per completion generation — the hit count is
+        # the cache doing its job (deterministic, gated alongside the
+        # resize counters)
+        cluster_bounds = {"boundary_fits": bc["fit"],
+                          "boundary_hits": bc["hit"]}
     c = rt.cluster
-    # scheduling waves ask for every member's boundaries but a pool only
-    # refits once per completion generation — the hit count is the cache
-    # doing its job (deterministic, gated alongside the resize counters)
-    cluster_bounds = {
-        "boundary_fits": BOUNDARY_COUNTS["fit"] - b0.get("fit", 0),
-        "boundary_hits": BOUNDARY_COUNTS["hit"] - b0.get("hit", 0),
-    }
     report["cluster"] = {
         "peak": {"tw_gbh": rp.temporal_wastage_gbh,
                  "makespan_h": rp.cluster.makespan_h,

@@ -82,10 +82,12 @@ import csv
 import os
 import time
 
+from repro import obs
 from repro.baselines import make_method
 from repro.data import load_trace, read_nodes_info
 from repro.baselines.sizey_method import SizeyMethod
 from repro.core import SizeyConfig
+from repro.obs.quality import QUALITY_FIELDS, read_quality_rows
 from repro.workflow import (FAILURE_STRATEGIES, WORKFLOWS, generate_workflow,
                             node_specs_from_caps, node_specs_from_racks,
                             simulate, simulate_cluster)
@@ -98,14 +100,16 @@ TEMPORAL_METHODS = ["sizey_temporal", "ks_plus"]
 
 
 def make(name, ttf, temporal_k, failure_strategy="retry_same",
-         cap_gb=128.0):
+         cap_gb=128.0, quality=False):
     if name == "sizey":
         return SizeyMethod(SizeyConfig(), ttf=ttf, machine_cap_gb=cap_gb,
-                           failure_strategy=failure_strategy)
+                           failure_strategy=failure_strategy,
+                           quality=quality)
     if name == "sizey_temporal":
         return SizeyMethod(SizeyConfig(), ttf=ttf, temporal_k=temporal_k,
                            machine_cap_gb=cap_gb,
-                           failure_strategy=failure_strategy)
+                           failure_strategy=failure_strategy,
+                           quality=quality)
     if name == "ks_plus":
         return make_method(name, ttf=ttf, k_segments=temporal_k,
                            machine_cap_gb=cap_gb,
@@ -295,6 +299,18 @@ def main():
                          "event-timestamped axis, first workflow/ttf "
                          "cell) to BASE.csv and BASE.png; requires "
                          "--cluster and --temporal")
+    ap.add_argument("--trace-out", default=None, metavar="FILE",
+                    help="record spans for the whole sweep and write a "
+                         "Chrome/Perfetto trace_event JSON (open in "
+                         "ui.perfetto.dev) — telemetry is side-effect-"
+                         "free, results are bitwise those of an untraced "
+                         "run")
+    ap.add_argument("--quality-out", default=None, metavar="FILE",
+                    help="run the sizey methods with prediction-quality "
+                         "telemetry and write the per-pool time series "
+                         "(RAQ, selected model, offset, prequential "
+                         "error, retrain cadence) as one CSV; render it "
+                         "with examples/quality_report.py")
     ap.add_argument("--out", default="results/workflow_sim.csv")
     args = ap.parse_args()
     if args.plot_wastage and not (args.cluster and args.temporal):
@@ -402,7 +418,9 @@ def main():
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     fail_seed = args.seed if args.fail_seed is None else args.fail_seed
     methods = METHODS + (TEMPORAL_METHODS if args.temporal else [])
+    collector = obs.start_tracing() if args.trace_out else None
     rows = []
+    quality_rows: list[dict] = []
     plot_res: dict[str, object] = {}
     for wf in ([ingested.name] if ingested else (args.workflows or WORKFLOWS)):
         if ingested is not None:
@@ -419,10 +437,12 @@ def main():
             for m in methods:
                 t0 = time.time()
                 if args.cluster:
+                    method = make(m, ttf, args.temporal,
+                                  args.failure_strategy,
+                                  cap_gb=trace.machine_cap_gb,
+                                  quality=bool(args.quality_out))
                     r = simulate_cluster(
-                        trace,
-                        make(m, ttf, args.temporal, args.failure_strategy,
-                             cap_gb=trace.machine_cap_gb),
+                        trace, method,
                         ttf=ttf, n_nodes=n_nodes,
                         node_specs=node_specs, policy=args.policy,
                         fail_rate_per_node_h=args.fail_rate,
@@ -432,10 +452,14 @@ def main():
                         straggler_rate=args.straggler_rate,
                         straggler_factor=args.straggler_factor)
                 else:
-                    r = simulate(trace,
-                                 make(m, ttf, args.temporal,
-                                      cap_gb=trace.machine_cap_gb),
-                                 ttf=ttf)
+                    method = make(m, ttf, args.temporal,
+                                  cap_gb=trace.machine_cap_gb,
+                                  quality=bool(args.quality_out))
+                    r = simulate(trace, method, ttf=ttf)
+                if args.quality_out and getattr(method, "quality", False):
+                    for q in read_quality_rows(method.predictor.db):
+                        quality_rows.append(
+                            {"workflow": wf, "method": m, "ttf": ttf, **q})
                 row = {
                     "workflow": wf, "method": m, "ttf": ttf,
                     "wastage_gbh": round(r.wastage_gbh, 2),
@@ -492,6 +516,20 @@ def main():
             peak, temporal, args.plot_wastage,
             title=f"{wf} on {n_nodes} nodes (ttf={ttf}, "
                   f"scale={args.scale}, k={args.temporal})")
+    if collector is not None:
+        obs.stop_tracing()
+        os.makedirs(os.path.dirname(args.trace_out) or ".", exist_ok=True)
+        collector.write_chrome_trace(args.trace_out)
+        print(f"wrote {args.trace_out} ({collector.total_spans()} spans)")
+    if args.quality_out:
+        os.makedirs(os.path.dirname(args.quality_out) or ".", exist_ok=True)
+        with open(args.quality_out, "w", newline="") as f:
+            w = csv.DictWriter(
+                f, fieldnames=["workflow", "method", "ttf", *QUALITY_FIELDS],
+                extrasaction="ignore")
+            w.writeheader()
+            w.writerows(quality_rows)
+        print(f"wrote {args.quality_out} ({len(quality_rows)} samples)")
     with open(args.out, "w", newline="") as f:
         w = csv.DictWriter(f, fieldnames=rows[0].keys())
         w.writeheader()

@@ -31,6 +31,7 @@ import numpy as np
 from repro.core import SizeyConfig
 from repro.core.predictor import SizeyPredictor, SizingDecision
 from repro.core.provenance import ProvenanceDB
+from repro.obs.quality import QUALITY_KIND
 from repro.workflow.accounting import (DEFAULT_CHECKPOINT_FRAC,
                                        FAILURE_STRATEGIES)
 from repro.workflow.trace import TaskInstance
@@ -42,7 +43,8 @@ class SizeyMethod:
                  fused: bool = True, temporal_k: int | None = None,
                  persist_path: str | None = None,
                  failure_strategy: str = "retry_same",
-                 checkpoint_frac: float = DEFAULT_CHECKPOINT_FRAC):
+                 checkpoint_frac: float = DEFAULT_CHECKPOINT_FRAC,
+                 quality: bool = False):
         if failure_strategy not in FAILURE_STRATEGIES:
             raise ValueError(
                 f"unknown failure strategy {failure_strategy!r} "
@@ -77,6 +79,13 @@ class SizeyMethod:
         # decisions for in-flight tasks, keyed by task object identity so a
         # whole burst can be pending at once (batched scheduler API)
         self._pending: dict[int, object] = {}
+        # prediction-quality telemetry (repro.obs.quality): one aux row per
+        # completion on the provenance stream. Every field is a pure
+        # function of journal-restorable predictor state, read AFTER the
+        # observe — so a warm resume regenerates post-kill rows bitwise.
+        self.quality = quality
+        self._clock_h = 0.0
+        self._quality_seq = len(self.predictor.db.aux.get(QUALITY_KIND, ()))
 
     def _crash_aware_alloc(self, decision) -> float:
         """Fold the observed crash rate into the offset choice (the
@@ -146,6 +155,12 @@ class SizeyMethod:
         self._n_completed += 1
         self._exposure_h += task.runtime_h
 
+    def note_clock(self, t_h: float) -> None:
+        """Cluster-engine hook: virtual-clock hours at the completion wave
+        about to be observed (stamps the quality rows; serial runs never
+        call it, so their rows carry t_h = 0 and seq is the x-axis)."""
+        self._clock_h = float(t_h)
+
     def complete(self, task: TaskInstance, first_alloc_gb: float,
                  attempts: int) -> None:
         decision = self._pending.pop(id(task))
@@ -155,6 +170,8 @@ class SizeyMethod:
         else:
             self.predictor.observe(decision, task.actual_peak_gb,
                                    task.runtime_h, attempts, task.workflow)
+        if self.quality:
+            self._record_quality([(decision, task, first_alloc_gb)])
 
     def complete_batch(self, items) -> None:
         """Observe a wave of simultaneous completions with one fused
@@ -162,17 +179,56 @@ class SizeyMethod:
         attempts) tuples — the cluster engine's completion-wave API)."""
         for task, _first, _attempts in items:
             self._note_completion(task)
+        completions = [(self._pending.pop(id(task)), task, first, attempts)
+                       for task, first, attempts in items]
         if self.temporal:
             self.predictor.observe_batch(
-                [(self._pending.pop(id(task)), task, attempts)
-                 for task, _first, attempts in items])
-            return
-        obs = []
-        for task, _first_alloc, attempts in items:
-            decision = self._pending.pop(id(task))
-            obs.append((decision, task.actual_peak_gb, task.runtime_h,
-                        attempts, task.workflow))
-        self.predictor.observe_batch(obs)
+                [(d, task, attempts)
+                 for d, task, _first, attempts in completions])
+        else:
+            self.predictor.observe_batch(
+                [(d, task.actual_peak_gb, task.runtime_h, attempts,
+                  task.workflow)
+                 for d, task, _first, attempts in completions])
+        if self.quality:
+            self._record_quality([(d, task, first)
+                                  for d, task, first, _ in completions])
+
+    def _record_quality(self, triples) -> None:
+        """Emit one ``kind="quality"`` aux row per completed task, in
+        completion order, AFTER the observe — fit_serial / next_fit_at
+        then read identically live and after a warm resume (warm_start
+        reconstructs both), so post-kill rows regenerate bitwise."""
+        inner = self.predictor.predictor if self.temporal else self.predictor
+        db = self.predictor.db
+        models = getattr(inner, "models", ())
+        for decision, task, first_gb in triples:
+            d = decision.peak_decision if self.temporal else decision
+            key = (d.task_type, d.machine)
+            pool = db.pools.get(key)
+            peak = float(task.actual_peak_gb)
+            err = float(first_gb) - peak
+            if d.raq is not None and len(d.raq):
+                raq_arr = np.asarray(d.raq)
+                idx = int(np.argmax(raq_arr))
+                raq = float(raq_arr[idx])
+                model = models[idx] if idx < len(models) else str(idx)
+                offset, agg = float(d.offset_gb), float(d.agg_pred_gb)
+            else:
+                raq = model = offset = agg = None
+            db.add_aux(QUALITY_KIND, {
+                "seq": self._quality_seq, "t_h": float(self._clock_h),
+                "task_type": d.task_type, "machine": d.machine,
+                "raq": raq, "model": model, "offset_gb": offset,
+                "agg_pred_gb": agg, "source": d.source,
+                "alloc_gb": float(first_gb), "peak_gb": peak,
+                "under": int(float(first_gb) < peak), "err_gb": err,
+                "err_frac": err / peak if peak > 0 else 0.0,
+                "n_obs": pool.count if pool is not None else 0,
+                "fit_serial": int(inner._fit_serial.get(key, 0)),
+                "next_fit_at": int(inner._next_fit_at.get(key, 0)),
+            })
+            self._quality_seq += 1
 
     def abandon(self, task: TaskInstance) -> None:
         """Task aborted (cap/attempt limit): drop its pending decision so

@@ -58,18 +58,24 @@ from repro.core.models import MODEL_MODULES
 from repro.core.offsets import select_offset
 from repro.core.provenance import ProvenanceDB, TaskRecord
 from repro.core.raq import accuracy_score, efficiency_scores, raq_scores
+from repro.obs import metrics as _obs_metrics
+from repro.obs.trace import span as _span
 from repro.utils.misc import stable_hash
 
 # retrace observability: bumped at trace time by every fused builder, so
-# tests can assert the O(log history) compile-count guarantee.
-TRACE_COUNTS: collections.Counter = collections.Counter()
+# tests can assert the O(log history) compile-count guarantee. Registry-
+# backed (repro.obs) since PR 9, but still a genuine collections.Counter
+# so existing snapshot/diff consumers work verbatim.
+TRACE_COUNTS: collections.Counter = _obs_metrics.counter(
+    "predictor_trace_total", "fused-builder retrace events by kind")
 
 # dispatch observability: bumped once per *device launch* on the decision
 # path (each fused pool-predict call sizes a whole batch in one program;
 # "observe_pool" counts the fused fit/update launches of the observe
 # half), so cluster tests/benches can assert the O(waves x pools) bounds
 # on BOTH directions of the loop.
-DISPATCH_COUNTS: collections.Counter = collections.Counter()
+DISPATCH_COUNTS: collections.Counter = _obs_metrics.counter(
+    "predictor_dispatch_total", "fused device launches by kind")
 
 # aux-row kind journaling full-retrain horizons under the amortized-refit
 # schedule (cfg.refit_growth > 0): one row per FULL fit, carrying the pool
@@ -517,8 +523,9 @@ class SizeyPredictor:
         # one upload in, one dispatch, one fetch out
         DISPATCH_COUNTS["predict_pool"] += 1
         DISPATCH_COUNTS["decisions"] += k
-        out = np.asarray(fn(self._pview[key], jnp.asarray(xc), acc,
-                            alpha_eff, offset, off_idx))
+        with _span("predict", pool=f"{key[0]}@{key[1]}", k=k):
+            out = np.asarray(fn(self._pview[key], jnp.asarray(xc), acc,
+                                alpha_eff, offset, off_idx))
         n = len(self.models)
         decisions = []
         for j in range(k):
@@ -718,13 +725,14 @@ class SizeyPredictor:
         fn = _fused_refresh_all(self.models, self.cfg, self.ttf,
                                 self.use_pallas)
         DISPATCH_COUNTS["refresh_pool"] += 1
-        insample, cache = fn(self.states[key], pool.xs, pool.ys,
-                             pool.runtimes, pool.mask, pool.log_agg,
-                             pool.log_actual, pool.log_runtime,
-                             pool.log_mask, pool.log_model_preds)
-        self._cache[key] = cache
-        pool.insample_preds = insample
-        jax.block_until_ready(insample)
+        with _span("refresh", pool=f"{key[0]}@{key[1]}", n=pool.count):
+            insample, cache = fn(self.states[key], pool.xs, pool.ys,
+                                 pool.runtimes, pool.mask, pool.log_agg,
+                                 pool.log_actual, pool.log_runtime,
+                                 pool.log_mask, pool.log_model_preds)
+            self._cache[key] = cache
+            pool.insample_preds = insample
+            jax.block_until_ready(insample)
 
     def _note_fit(self, key, pool) -> None:
         self._fit_cap[key] = pool.cap
@@ -760,12 +768,13 @@ class SizeyPredictor:
         fn = _fused_observe_all(self.models, self.cfg, self.ttf,
                                 self.use_pallas, incremental)
         DISPATCH_COUNTS["observe_pool"] += 1
-        states, insample, cache = fn(
-            self.states[key] if incremental else None, pool.xs, pool.ys,
-            pool.runtimes, pool.mask if mask is None else mask,
-            pool.count - 1, seed,
-            pool.log_agg, pool.log_actual, pool.log_runtime,
-            pool.log_mask, pool.log_model_preds)
+        with _span("observe", pool=f"{key[0]}@{key[1]}", n=pool.count):
+            states, insample, cache = fn(
+                self.states[key] if incremental else None, pool.xs, pool.ys,
+                pool.runtimes, pool.mask if mask is None else mask,
+                pool.count - 1, seed,
+                pool.log_agg, pool.log_actual, pool.log_runtime,
+                pool.log_mask, pool.log_model_preds)
         self.states[key] = states
         self._cache[key] = cache
         self._pview[key] = tuple(

@@ -48,6 +48,8 @@ from repro.core.provenance import ProvenanceDB
 from repro.core.temporal.segments import (PROFILE_WINDOW, ReservationPlan,
                                           fit_boundaries, grid_profile,
                                           segment_peaks, uniform_boundaries)
+from repro.obs import metrics as _obs_metrics
+from repro.obs.trace import span as _span
 
 __all__ = ["TemporalDecision", "TemporalSizeyPredictor"]
 
@@ -67,7 +69,9 @@ TEMPORAL_REFIT_GROWTH = 0.25
 # change-point sweeps actually run, "hit" counts cache servings (retries,
 # same-wave siblings), "uniform" counts no-history defaults. Tests and the
 # bench assert the refit bound with these (fits <= observe generations).
-BOUNDARY_COUNTS: collections.Counter = collections.Counter()
+# Registry-backed (repro.obs) since PR 9; still a collections.Counter.
+BOUNDARY_COUNTS: collections.Counter = _obs_metrics.counter(
+    "temporal_boundary_total", "segment-boundary fit events by kind")
 
 
 @dataclasses.dataclass
@@ -177,7 +181,9 @@ class TemporalSizeyPredictor:
             bounds = uniform_boundaries(self.k)
             BOUNDARY_COUNTS["uniform"] += 1
         else:
-            bounds = fit_boundaries(np.stack(profs), self.k)
+            with _span("boundary_fit", pool=f"{key[0]}@{key[1]}",
+                       n=len(profs)):
+                bounds = fit_boundaries(np.stack(profs), self.k)
             BOUNDARY_COUNTS["fit"] += 1
         self._boundaries[key] = (self._gen.get(key, 0), bounds)
         return bounds

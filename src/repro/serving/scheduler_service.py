@@ -32,6 +32,8 @@ import os
 from typing import Callable
 
 from repro.core.provenance import read_jsonl_lines
+from repro.obs import metrics as _obs_metrics
+from repro.obs.trace import span as _span
 from repro.workflow.cluster import ClusterEngine
 from repro.workflow.journal import WAL_KIND, Journal, recover_run
 from repro.workflow.simulator import SimResult
@@ -141,6 +143,20 @@ class SchedulerService:
                          "n_rejected_final": t.n_rejected_final}
                 for t in self._tenants.values()}
 
+    def scrape(self) -> str:
+        """Prometheus-style text exposition of the whole process: the
+        per-tenant scheduler gauges refreshed from :meth:`stats`, plus
+        every registry family (predictor dispatch/trace counters, boundary
+        fits, any enabled histograms) — one endpoint an operator can poll
+        while workflows run."""
+        reg = _obs_metrics.default_registry()
+        for tenant, vals in self.stats().items():
+            for stat, value in vals.items():
+                reg.gauge(f"scheduler_{stat}",
+                          "per-tenant scheduler state").set(value,
+                                                            tenant=tenant)
+        return reg.scrape()
+
     # ----------------------------------------------------------- admission
     def _admit(self, t: _Tenant) -> None:
         if len(t.active) >= self._share_cap(t):
@@ -149,6 +165,10 @@ class SchedulerService:
                 f"({self._share_cap(t)} active workflows)")
 
     async def _admit_with_backoff(self, t: _Tenant) -> None:
+        with _span("service/admit", tenant=t.name):
+            await self._admit_with_backoff_inner(t)
+
+    async def _admit_with_backoff_inner(self, t: _Tenant) -> None:
         for attempt in range(self.max_retries + 1):
             try:
                 self._admit(t)
@@ -254,7 +274,8 @@ class SchedulerService:
         t.rr %= len(t.active)
         handle = t.active[t.rr]
         try:
-            alive = handle.engine.step()
+            with _span("service/grant", tenant=t.name, workflow=handle.name):
+                alive = handle.engine.step()
         except Exception as exc:                       # engine bug/divergence
             t.active.pop(t.rr)
             t.n_completed += 1

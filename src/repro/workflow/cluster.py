@@ -105,6 +105,7 @@ from typing import Callable, Sequence
 
 import numpy as np
 
+from repro.obs.trace import span as _span
 from repro.utils.misc import stable_hash
 from repro.workflow.accounting import (DEFAULT_CHECKPOINT_FRAC,
                                        FAILURE_STRATEGIES, AttemptLedger,
@@ -887,6 +888,12 @@ class ClusterEngine:
         self.has_complete_batch = hasattr(method, "complete_batch")
         self.has_note = hasattr(method, "note_interruption")
         self.has_abandon = hasattr(method, "abandon")
+        # quality telemetry (repro.obs.quality): stamp the method with the
+        # virtual clock before each live completion wave so its quality
+        # rows carry engine time. Replay never calls it — replayed
+        # completions were observed before the crash and their rows sit in
+        # the warm-start prefix.
+        self.has_note_clock = hasattr(method, "note_clock")
         # durability protocol (optional; see SizeyMethod): without the
         # hooks, journal replay still re-applies the recorded allocations
         # but cannot restore in-flight decision state — best-effort only
@@ -1184,6 +1191,11 @@ class ClusterEngine:
         amortizes the event-loop dispatch and, via the node's zero-``dt``
         ``_advance`` fast path, the per-resize reservation fsum."""
         self.n_resize_waves += 1
+        with _span("engine/resize_wave", n=len(wave)):
+            self._apply_resize_wave_inner(clock, wave)
+
+    def _apply_resize_wave_inner(self, clock: float,
+                                 wave: list[tuple[int, int]]) -> None:
         for token, seg_idx in wave:
             if token not in self.running:
                 continue   # attempt already killed/grow-flattened
@@ -1413,10 +1425,16 @@ class ClusterEngine:
                         for e, _ in completed:
                             method.abandon(e.task)
                 elif self.has_complete_batch:
-                    method.complete_batch(items)
+                    if self.has_note_clock:
+                        method.note_clock(clock)
+                    with _span("engine/complete_wave", n=len(items)):
+                        method.complete_batch(items)
                 else:
-                    for task, first_alloc, attempts in items:
-                        method.complete(task, first_alloc, attempts)
+                    if self.has_note_clock:
+                        method.note_clock(clock)
+                    with _span("engine/complete_wave", n=len(items)):
+                        for task, first_alloc, attempts in items:
+                            method.complete(task, first_alloc, attempts)
         elif self.queue:
             # every queued task is sized, admitted (alloc <= its cap), all
             # nodes are up (no recover event pending) and idle — the
@@ -1675,12 +1693,13 @@ class ClusterEngine:
                     if s[2] is not None:
                         method.restore_pending(e.task, s[2])
             return [s[1] for s in js]
-        if self.has_batch:
-            self.n_size_calls += 1
-            allocs = method.allocate_batch([e.task for e in wave])
-        else:
-            self.n_size_calls += len(wave)
-            allocs = [method.allocate(e.task) for e in wave]
+        with _span("engine/sizing_wave", kind=field, n=len(wave)):
+            if self.has_batch:
+                self.n_size_calls += 1
+                allocs = method.allocate_batch([e.task for e in wave])
+            else:
+                self.n_size_calls += len(wave)
+                allocs = [method.allocate(e.task) for e in wave]
         if jrec is not None:
             jrec[field] = [
                 [list(e.task.key), float(a),
@@ -2009,10 +2028,11 @@ class ClusterEngine:
         n_tail = len(run.tail)
         if n_tail:
             eng._replay = collections.deque(run.tail)
-            while eng._replay is not None:
-                if not eng.step():
-                    raise RuntimeError("journal divergence: engine "
-                                       "finished mid-replay")
+            with _span("journal/replay", n_steps=n_tail):
+                while eng._replay is not None:
+                    if not eng.step():
+                        raise RuntimeError("journal divergence: engine "
+                                           "finished mid-replay")
         eng.n_recoveries += 1
         eng.n_replayed_steps += n_tail
         if resume == "cold":

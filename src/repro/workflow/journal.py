@@ -45,6 +45,7 @@ from typing import Callable
 
 from repro.core.provenance import (ProvenanceDB, atomic_rewrite_jsonl,
                                    read_jsonl_lines)
+from repro.obs.trace import span as _span
 
 __all__ = ["WAL_KIND", "SNAP_KIND", "Journal", "JournaledRun",
            "recover_run"]
@@ -115,7 +116,9 @@ class Journal:
                                    "n_outcomes": n_outcomes})
 
     def snapshot(self, state: dict) -> None:
-        self.db.add_aux(SNAP_KIND, {"step": state["step"], "state": state})
+        with _span("journal/snapshot", step=state["step"]):
+            self.db.add_aux(SNAP_KIND,
+                            {"step": state["step"], "state": state})
 
     def maybe_snapshot(self, step_idx: int,
                        state_fn: Callable[[], dict]) -> None:
@@ -186,6 +189,11 @@ class Journal:
                  "torn_final_line": False}
         if not os.path.exists(path):
             return stats
+        with _span("journal/repair", path=os.path.basename(path)):
+            return Journal._repair_inner(path, stats)
+
+    @staticmethod
+    def _repair_inner(path: str, stats: dict) -> dict:
         lines, torn = read_jsonl_lines(path)
         stats["torn_final_line"] = torn
         last_j = None          # index of the last journal (wal/snap) row

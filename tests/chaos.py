@@ -118,32 +118,57 @@ def _default_method_factory(path):
     return SizeyMethod(machine_cap_gb=64.0, persist_path=path)
 
 
+def _quality_method_factory(path):
+    from repro.baselines.sizey_method import SizeyMethod
+    return SizeyMethod(machine_cap_gb=64.0, persist_path=path,
+                       quality=True)
+
+
 def chaos_smoke(cycles: int = 5, seed: int = 0, scale: float = 0.04,
-                verbose: bool = True) -> int:
+                verbose: bool = True, traced: bool = False) -> int:
     """CI smoke: one journaled run, ``cycles`` seeded kill/resume cycles,
-    resume-equivalence asserted on each. Returns total replayed steps."""
+    resume-equivalence asserted on each. Returns total replayed steps.
+
+    ``traced=True`` runs the whole sweep with span tracing active and the
+    method emitting ``quality`` aux rows onto the journal (PR 9): each
+    resume must STILL reproduce the SimResult bitwise, and the resumed
+    journal's quality-row stream must be bitwise the uninterrupted one —
+    the rows the kill truncated are regenerated exactly by re-execution."""
+    import contextlib
     import tempfile
 
+    from repro import obs
+    from repro.obs.quality import read_quality_rows
     from repro.workflow import generate_workflow
 
+    factory = _quality_method_factory if traced else _default_method_factory
     trace = generate_workflow("eager", seed=seed, scale=scale,
                               machine_cap_gb=64.0)
     kw = dict(n_nodes=4, fail_rate_per_node_h=0.05, straggler_rate=0.1,
               fail_seed=seed)
-    with tempfile.TemporaryDirectory() as d:
+    with obs.tracing() if traced else contextlib.nullcontext(), \
+            tempfile.TemporaryDirectory() as d:
         path = os.path.join(d, "run.jsonl")
-        baseline = run_journaled(trace, _default_method_factory, path,
-                                 **kw)
+        baseline = run_journaled(trace, factory, path, **kw)
+        base_quality = read_quality_rows(path) if traced else None
+        if traced:
+            assert base_quality, "traced run emitted no quality rows"
         replayed = 0
         for cut in kill_points(path, cycles, seed=seed):
-            res, _eng = kill_and_resume(path, cut, trace,
-                                        _default_method_factory)
+            res, _eng = kill_and_resume(path, cut, trace, factory)
             assert_results_equal(baseline, res)
             assert res.cluster.n_recoveries >= 1
+            if traced:
+                got = read_quality_rows(path + f".cut{cut}")
+                assert got == base_quality, (
+                    f"kill@byte {cut}: resumed quality rows diverged "
+                    f"({len(got)} vs {len(base_quality)} rows)")
             replayed += res.cluster.n_replayed_steps
             if verbose:
                 print(f"  kill@byte {cut}: resume bitwise OK "
-                      f"(replayed {res.cluster.n_replayed_steps} steps)")
+                      f"(replayed {res.cluster.n_replayed_steps} steps"
+                      + (", quality rows bitwise" if traced else "")
+                      + ")")
     return replayed
 
 
@@ -156,7 +181,13 @@ if __name__ == "__main__":
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--scale", type=float, default=0.04,
                     help="trace scale (instance-count multiplier)")
+    ap.add_argument("--traced", action="store_true",
+                    help="run with span tracing + quality telemetry on: "
+                         "resumes must stay bitwise AND regenerate the "
+                         "truncated quality rows exactly")
     args = ap.parse_args()
-    n = chaos_smoke(cycles=args.cycles, seed=args.seed, scale=args.scale)
-    print(f"chaos smoke PASS: {args.cycles} kill/resume cycles bitwise, "
-          f"{n} steps replayed")
+    n = chaos_smoke(cycles=args.cycles, seed=args.seed, scale=args.scale,
+                    traced=args.traced)
+    print(f"chaos smoke PASS: {args.cycles} kill/resume cycles bitwise"
+          + (" (traced, quality rows bitwise)" if args.traced else "")
+          + f", {n} steps replayed")

@@ -4,6 +4,7 @@ import dataclasses
 
 import pytest
 
+from repro import obs
 from repro.baselines import make_method
 from repro.baselines.sizey_method import SizeyMethod
 from repro.core import SizeyConfig
@@ -191,11 +192,10 @@ def test_ready_wave_bursts_bound_device_dispatches():
     trace = generate_workflow("iwd", scale=0.05)
     n_pools = len({(t.task_type, t.machine) for t in trace.tasks})
     method = SizeyMethod(SizeyConfig())
-    before = dict(DISPATCH_COUNTS)
-    r = simulate_cluster(trace, method, n_nodes=4)
-    dispatches = DISPATCH_COUNTS["predict_pool"] - before.get(
-        "predict_pool", 0)
-    decisions = DISPATCH_COUNTS["decisions"] - before.get("decisions", 0)
+    with obs.scoped_counters(DISPATCH_COUNTS) as dc:
+        r = simulate_cluster(trace, method, n_nodes=4)
+        dispatches = dc["predict_pool"]
+        decisions = dc["decisions"]
     m = r.cluster
     assert len(r.outcomes) == len(trace.tasks)
     # each wave launches at most one fused program per pool present in it

@@ -1,0 +1,244 @@
+"""Observability plane (PR 9): metrics registry back-compat, scoped
+counters, span tracing (null cost, determinism, Perfetto export),
+prediction-quality telemetry, journal interplay, and service scrape."""
+import asyncio
+import collections
+import json
+import os
+
+import pytest
+
+from chaos import assert_results_equal, kill_at, run_journaled
+from repro import obs
+from repro.baselines.sizey_method import SizeyMethod
+from repro.core.predictor import DISPATCH_COUNTS, TRACE_COUNTS
+from repro.core.temporal.predictor import BOUNDARY_COUNTS
+from repro.obs.quality import (QUALITY_FIELDS, read_quality_rows,
+                               summarize_pools)
+from repro.obs.trace import _NULL_SPAN
+from repro.serving.scheduler_service import SchedulerService
+from repro.workflow import generate_workflow, simulate, simulate_cluster
+from repro.workflow.journal import Journal
+
+CAP = 64.0
+
+
+def _small_trace(seed=3, scale=0.02):
+    return generate_workflow("eager", seed=seed, scale=scale,
+                             machine_cap_gb=CAP)
+
+
+# ------------------------------------------------------ metrics registry
+def test_legacy_counters_are_registry_families():
+    # the process globals are genuine Counters (all legacy call sites —
+    # dict() snapshots, diff-after reads, jit-time += — keep working)
+    # AND registered families (one scrape endpoint sees them)
+    for fam, name in ((TRACE_COUNTS, "predictor_trace_total"),
+                      (DISPATCH_COUNTS, "predictor_dispatch_total"),
+                      (BOUNDARY_COUNTS, "temporal_boundary_total")):
+        assert isinstance(fam, obs.CounterFamily)
+        assert isinstance(fam, collections.Counter)
+        assert fam.name == name
+        assert obs.counter(name) is fam   # get-or-create returns the same
+    text = obs.scrape()
+    assert "# TYPE predictor_dispatch_total counter" in text
+
+
+def test_registry_kind_mismatch_raises():
+    with pytest.raises(TypeError, match="already registered"):
+        obs.default_registry().gauge("predictor_dispatch_total")
+
+
+def test_gauge_set_get_expose():
+    g = obs.gauge("test_obs_gauge", "a gauge")
+    g.set(3, tenant="a")
+    g.set(7.5, tenant="b")
+    assert g.get(tenant="a") == 3.0
+    assert g.get(tenant="missing") is None
+    lines = g.expose()
+    assert "# TYPE test_obs_gauge gauge" in lines
+    assert 'test_obs_gauge{tenant="b"} 7.5' in lines
+
+
+def test_histogram_gated_by_enabled_flag():
+    h = obs.histogram("test_obs_hist", "a histogram", buckets=(0.1, 1.0))
+    prev = obs.metrics_enabled()
+    try:
+        obs.set_metrics_enabled(False)
+        h.observe(0.05)
+        assert h.count == 0            # warm-path no-op while disabled
+        obs.set_metrics_enabled(True)
+        h.observe(0.05)
+        h.observe(0.5)
+        h.observe(2.0)
+        assert h.count == 3
+    finally:
+        obs.set_metrics_enabled(prev)
+    lines = h.expose()
+    assert 'test_obs_hist_bucket{le="0.1"} 1' in lines
+    assert 'test_obs_hist_bucket{le="1"} 2' in lines
+    assert 'test_obs_hist_bucket{le="+Inf"} 3' in lines
+    assert "test_obs_hist_count 3" in lines
+
+
+def test_scoped_counters_restores_process_totals():
+    c = obs.counter("test_obs_scoped_total")
+    c["x"] += 5
+    with obs.scoped_counters(c) as sc:
+        assert sc is c
+        assert c["x"] == 0             # counts from zero inside
+        c["x"] += 2
+    assert c["x"] == 7                 # pre-scope + in-scope
+
+
+def test_back_to_back_simulations_report_independent_counts():
+    """The counter-bleed regression pinned: two identical simulate()
+    calls, each bracketed, must report the SAME dispatch counts — not a
+    cumulative process total the second run inherits."""
+    trace = _small_trace()
+    runs = []
+    for _ in range(2):
+        with obs.scoped_counters(DISPATCH_COUNTS) as dc:
+            simulate(trace, SizeyMethod(machine_cap_gb=CAP))
+            runs.append((dc["predict_pool"], dc["observe_pool"],
+                         dc["decisions"]))
+    assert runs[0] == runs[1]
+    assert runs[0][1] > 0              # real activity, not two zeros
+
+
+# --------------------------------------------------------- span tracing
+def test_span_is_null_singleton_when_off():
+    assert not obs.tracing_active()
+    assert obs.span("predict", k=3) is _NULL_SPAN
+    with obs.span("predict"):          # still a working context manager
+        pass
+
+
+def test_tracing_scope_restores_previous_collector():
+    with obs.tracing() as outer:
+        with obs.span("a"):
+            pass
+        with obs.tracing() as inner:
+            with obs.span("b"):
+                pass
+        assert inner.span_counts == {"b": 1}
+        # outer collector is active again after the nested scope
+        with obs.span("a"):
+            pass
+        assert outer.span_counts == {"a": 2}
+    assert not obs.tracing_active()
+
+
+def test_span_counts_deterministic_and_chrome_trace_valid(tmp_path):
+    trace = _small_trace()
+    counts = []
+    for _ in range(2):
+        with obs.tracing() as col:
+            simulate_cluster(trace, SizeyMethod(machine_cap_gb=CAP),
+                             n_nodes=4)
+        counts.append(dict(col.span_counts))
+    assert counts[0] == counts[1]      # pure function of (trace, config)
+    assert counts[0]["engine/complete_wave"] >= 1
+    assert counts[0]["observe"] >= 1   # fused predictor dispatches traced
+
+    path = str(tmp_path / "trace.json")
+    col.write_chrome_trace(path)
+    doc = json.load(open(path))
+    assert doc["displayTimeUnit"] == "ms"
+    assert len(doc["traceEvents"]) == col.total_spans()
+    ev = doc["traceEvents"][0]
+    assert ev["ph"] == "X" and ev["dur"] >= 0 and ev["ts"] >= 0
+    names = {e["name"] for e in doc["traceEvents"]}
+    assert "engine/sizing_wave" in names
+
+
+def test_tracing_is_bitwise_side_effect_free():
+    trace = _small_trace()
+    res_off = simulate_cluster(trace, SizeyMethod(machine_cap_gb=CAP),
+                               n_nodes=4)
+    with obs.tracing():
+        res_on = simulate_cluster(
+            trace, SizeyMethod(machine_cap_gb=CAP, quality=True), n_nodes=4)
+    assert_results_equal(res_off, res_on)
+
+
+# --------------------------------------------------- quality telemetry
+def test_quality_rows_one_per_task_with_schema():
+    # large enough that pools cross min_history into model-sourced sizing
+    trace = _small_trace(scale=0.06)
+    method = SizeyMethod(machine_cap_gb=CAP, quality=True)
+    simulate(trace, method)
+    rows = read_quality_rows(method.predictor.db)
+    assert len(rows) == len(trace.tasks)
+    assert [r["seq"] for r in rows] == list(range(len(rows)))
+    for r in rows:
+        assert set(QUALITY_FIELDS) <= set(r)
+        assert r["t_h"] == 0.0         # serial runs have no virtual clock
+        assert r["under"] in (0, 1)
+        assert r["alloc_gb"] > 0 and r["peak_gb"] > 0
+    # model-sourced rows carry the selected-model telemetry
+    modeled = [r for r in rows if r["raq"] is not None]
+    assert modeled, "no model-sourced decisions in the whole run"
+    for r in modeled:
+        assert r["model"] and r["agg_pred_gb"] is not None
+    summary = summarize_pools(rows)
+    assert sum(s["n"] for s in summary.values()) == len(rows)
+
+
+def test_quality_rows_deterministic_and_clock_stamped():
+    trace = _small_trace()
+
+    def run():
+        m = SizeyMethod(machine_cap_gb=CAP, quality=True)
+        simulate_cluster(trace, m, n_nodes=4)
+        return read_quality_rows(m.predictor.db)
+
+    a, b = run(), run()
+    assert a == b                      # bitwise reproducible
+    assert any(r["t_h"] > 0.0 for r in a)   # virtual-clock stamped
+
+
+def test_quality_rows_survive_journal_repair(tmp_path):
+    """A crash mid-journal leaves a byte prefix; after Journal.repair the
+    surviving quality rows must be exactly a prefix of the full stream
+    (no torn/reordered rows)."""
+    from chaos import _quality_method_factory
+    trace = _small_trace()
+    path = str(tmp_path / "run.jsonl")
+    run_journaled(trace, _quality_method_factory, path, n_nodes=4)
+    base = read_quality_rows(path)
+    assert base
+    cut_path = kill_at(path, int(os.path.getsize(path) * 0.6),
+                       str(tmp_path / "cut.jsonl"))
+    Journal.repair(cut_path)
+    got = read_quality_rows(cut_path)
+    assert len(got) < len(base)
+    assert got == base[:len(got)]
+
+
+def test_quality_off_by_default_emits_nothing():
+    trace = _small_trace()
+    method = SizeyMethod(machine_cap_gb=CAP)
+    simulate(trace, method)
+    assert read_quality_rows(method.predictor.db) == []
+
+
+# ------------------------------------------------------- service scrape
+def test_service_scrape_exposes_tenant_gauges():
+    trace = _small_trace()
+
+    async def main():
+        svc = SchedulerService(max_concurrent=4)
+        svc.add_tenant("genomics", weight=2.0)
+        async with svc:
+            h = await svc.submit("genomics", trace,
+                                 SizeyMethod(machine_cap_gb=CAP),
+                                 engine_kwargs={"n_nodes": 4})
+            await h
+        return svc.scrape()
+
+    text = asyncio.run(main())
+    assert "# TYPE scheduler_steps_granted gauge" in text
+    assert 'tenant="genomics"' in text
+    # the one endpoint also carries the predictor counter families
+    assert "predictor_dispatch_total" in text

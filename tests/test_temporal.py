@@ -6,6 +6,7 @@ import dataclasses
 import numpy as np
 import pytest
 
+from repro import obs
 from repro.baselines import make_method
 from repro.baselines.sizey_method import SizeyMethod
 from repro.core import SizeyConfig
@@ -404,9 +405,9 @@ def test_completion_wave_batches_observe_dispatches():
              for i in range(12)]
     trace = WorkflowTrace("wf", tasks, machine_cap_gb=128.0)
     method = SizeyMethod(_cfg())
-    before = DISPATCH_COUNTS["observe_pool"]
-    r = simulate_cluster(trace, method, n_nodes=12)
-    observed = DISPATCH_COUNTS["observe_pool"] - before
+    with obs.scoped_counters(DISPATCH_COUNTS) as dc:
+        r = simulate_cluster(trace, method, n_nodes=12)
+        observed = dc["observe_pool"]
     assert r.cluster.n_complete_waves == 1
     assert observed == 1   # 12 completions, one fused fit
     # the sequential path would have paid one dispatch per post-warmup task
@@ -416,9 +417,9 @@ def test_completion_wave_batches_observe_dispatches():
 def test_observe_dispatches_bounded_by_completion_waves():
     trace = generate_workflow("iwd", scale=0.05)
     n_pools = len({(t.task_type, t.machine) for t in trace.tasks})
-    before = DISPATCH_COUNTS["observe_pool"]
-    r = simulate_cluster(trace, SizeyMethod(_cfg()), n_nodes=4)
-    observed = DISPATCH_COUNTS["observe_pool"] - before
+    with obs.scoped_counters(DISPATCH_COUNTS) as dc:
+        r = simulate_cluster(trace, SizeyMethod(_cfg()), n_nodes=4)
+        observed = dc["observe_pool"]
     m = r.cluster
     assert m.n_complete_waves >= 1
     assert observed <= m.n_complete_waves * n_pools
@@ -540,23 +541,23 @@ def test_boundary_cache_one_fit_per_pool_generation():
         t = _curve_task(i, 4.0 + i, 1.0 + i)
         p.observe(p.predict(t), t, 1)
 
-    snap = dict(BOUNDARY_COUNTS)
-    b1 = p.boundaries("A", "m")              # stale after the observes
-    assert BOUNDARY_COUNTS["fit"] == snap.get("fit", 0) + 1
-    assert p.boundaries("A", "m") == b1      # retry of the same attempt
-    assert BOUNDARY_COUNTS["fit"] == snap.get("fit", 0) + 1
-    assert BOUNDARY_COUNTS["hit"] == snap.get("hit", 0) + 1
-    # a wave of siblings: one boundaries() ask per task, zero refits
-    wave = [_curve_task(10 + i, 6.0, 2.0) for i in range(3)]
-    ds = p.predict_batch(wave)
-    assert all(d.boundaries == b1 for d in ds)
-    assert BOUNDARY_COUNTS["fit"] == snap.get("fit", 0) + 1
-    assert BOUNDARY_COUNTS["hit"] == snap.get("hit", 0) + 4
-    # an observed completion bumps the generation: exactly one refit
-    p.observe_batch([(ds[0], wave[0], 1)])
-    p.boundaries("A", "m")
-    p.boundaries("A", "m")
-    assert BOUNDARY_COUNTS["fit"] == snap.get("fit", 0) + 2
+    with obs.scoped_counters(BOUNDARY_COUNTS) as bc:
+        b1 = p.boundaries("A", "m")          # stale after the observes
+        assert bc["fit"] == 1
+        assert p.boundaries("A", "m") == b1  # retry of the same attempt
+        assert bc["fit"] == 1
+        assert bc["hit"] == 1
+        # a wave of siblings: one boundaries() ask per task, zero refits
+        wave = [_curve_task(10 + i, 6.0, 2.0) for i in range(3)]
+        ds = p.predict_batch(wave)
+        assert all(d.boundaries == b1 for d in ds)
+        assert bc["fit"] == 1
+        assert bc["hit"] == 4
+        # an observed completion bumps the generation: exactly one refit
+        p.observe_batch([(ds[0], wave[0], 1)])
+        p.boundaries("A", "m")
+        p.boundaries("A", "m")
+        assert bc["fit"] == 2
 
 
 def test_warm_start_rebuilds_boundary_cache(tmp_path):
@@ -574,11 +575,11 @@ def test_warm_start_rebuilds_boundary_cache(tmp_path):
     b_live = p.boundaries("A", "m")
 
     p2 = TemporalSizeyPredictor(cfg, k_segments=3, persist_path=path)
-    snap = dict(BOUNDARY_COUNTS)
-    assert p2.boundaries("A", "m") == b_live
-    assert BOUNDARY_COUNTS["fit"] == snap.get("fit", 0), \
-        "restore must pre-fit the cache, not defer to the first ask"
-    assert BOUNDARY_COUNTS["hit"] == snap.get("hit", 0) + 1
+    with obs.scoped_counters(BOUNDARY_COUNTS) as bc:
+        assert p2.boundaries("A", "m") == b_live
+        assert bc["fit"] == 0, \
+            "restore must pre-fit the cache, not defer to the first ask"
+        assert bc["hit"] == 1
 
 
 def test_amortized_refit_schedule_bounds_full_retrains():
@@ -592,25 +593,24 @@ def test_amortized_refit_schedule_bounds_full_retrains():
     p = SizeyPredictor(cfg)
     rng = np.random.default_rng(0)
     n = 40
-    f0 = DISPATCH_COUNTS["observe_pool"]
-    r0 = DISPATCH_COUNTS["refresh_pool"]
     exp_fits = exp_refreshes = 0
     fitted, fit_cap, next_fit = False, None, 0
-    for i, x in enumerate(rng.uniform(1, 8, n)):
-        d = p.predict("t", "m", (float(x),), 32.0)
-        p.observe(d, float(2 * x + 1), 1.0, 1)
-        pool = p.db.pool("t", "m")
-        if pool.count < cfg.min_history:
-            continue                         # below min_history: no work
-        if not fitted or fit_cap != pool.cap or pool.count >= next_fit:
-            exp_fits += 1
-            fitted, fit_cap = True, pool.cap
-            next_fit = pool.count + max(
-                1, math.ceil(cfg.refit_growth * pool.count))
-        else:
-            exp_refreshes += 1
-    fits = DISPATCH_COUNTS["observe_pool"] - f0
-    refreshes = DISPATCH_COUNTS["refresh_pool"] - r0
+    with obs.scoped_counters(DISPATCH_COUNTS) as dc:
+        for i, x in enumerate(rng.uniform(1, 8, n)):
+            d = p.predict("t", "m", (float(x),), 32.0)
+            p.observe(d, float(2 * x + 1), 1.0, 1)
+            pool = p.db.pool("t", "m")
+            if pool.count < cfg.min_history:
+                continue                     # below min_history: no work
+            if not fitted or fit_cap != pool.cap or pool.count >= next_fit:
+                exp_fits += 1
+                fitted, fit_cap = True, pool.cap
+                next_fit = pool.count + max(
+                    1, math.ceil(cfg.refit_growth * pool.count))
+            else:
+                exp_refreshes += 1
+        fits = dc["observe_pool"]
+        refreshes = dc["refresh_pool"]
     assert fits == exp_fits
     assert refreshes == exp_refreshes
     assert fits + refreshes == n - (cfg.min_history - 1)
