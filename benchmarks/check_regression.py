@@ -151,6 +151,25 @@ RULES: dict[str, list[dict]] = {
         # exactly one quality row per completed task
         {"path": "traced_sizey.n_quality_samples", "max_growth": 0.0},
     ],
+    "BENCH_risk.json": [
+        # the acceptance contract: risk-priced Sizey must strictly
+        # dominate fixed-offset Sizey on the aggregate waste x
+        # failure-rate frontier at matched seeds
+        {"path": "headline.risk_dominates_fixed", "equals": True},
+        {"path": "aggregate.waste_saved_gbh", "min": 0.0},
+        {"path": "aggregate.failures_avoided", "min": 1},
+        # a cold risk manager must be bitwise the fixed offset, and warm
+        # resumes must regenerate the risk-row stream exactly (both
+        # asserted in-bench; recorded here)
+        {"path": "headline.risk_off_bitwise", "equals": True},
+        {"path": "headline.warm_resume_bitwise", "equals": True},
+        {"path": "risk_off.n_risk_rows", "max": 0},
+        # deterministic at fixed seed/scale: the chaos cell's risk-row
+        # count is a pure function of (trace, config) — any growth means
+        # rows leaked onto a replayed path
+        {"path": "warm_resume.n_risk_rows", "max_growth": 0.0},
+        {"path": "headline.n_cells", "equals": 8},
+    ],
     "results/bench_results.json": [
         # decision dispatches may not grow: each cluster ready wave stays
         # ONE fused launch per pool

@@ -1,0 +1,194 @@
+"""Risk-priced sizing benchmark: waste x failure-rate frontier of
+``SizeyMethod(risk=True)`` vs fixed-offset Sizey at matched seeds, plus
+the two bitwise contracts the risk layer must keep.
+
+    PYTHONPATH=src python -m benchmarks.risk_bench \
+        --out results/fresh/BENCH_risk.json
+
+Three claims are checked, mirroring the PR 10 contract:
+
+  * **Risk pricing dominates the fixed offset on the frontier.** Over a
+    matched-seed grid (workflow x seed x injected fail-rate, identical
+    traces, node counts and crash seeds for both methods), the
+    risk-priced runs must waste strictly fewer GB*h in aggregate AND
+    fail strictly fewer times in aggregate
+    (``headline.risk_dominates_fixed``). Per-cell Pareto verdicts ride
+    in ``frontier[*].pareto`` — individual cells may trade one axis for
+    the other (a generous band buys fewer OOMs for a little waste), but
+    the aggregate must win both.
+  * **risk=off is bitwise PR 9.** A cold-configured risk manager
+    (``min_samples`` beyond any pool) never engages, so its run must
+    reproduce the plain fixed-offset SimResult bitwise with zero risk
+    rows emitted (``headline.risk_off_bitwise``).
+  * **Warm resumes stay bitwise under the aux rows.** A journaled crashy
+    run killed at a byte offset and resumed must reproduce both the
+    SimResult and the full risk-row stream (chosen quantile + band
+    width) bitwise (``headline.warm_resume_bitwise``).
+
+All metrics are pure functions of (trace, config, seed) — deterministic,
+so ``check_regression.py`` gates the headline booleans exactly and the
+aggregate margins as absolute floors.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+from benchmarks._util import dump_json
+
+from repro.baselines.sizey_method import SizeyMethod
+from repro.core.risk import RiskConfig
+from repro.obs.risk import read_risk_rows
+from repro.workflow import generate_workflow, simulate_cluster
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir,
+                                "tests"))
+from chaos import (assert_results_equal, kill_and_resume, kill_points,  # noqa: E402
+                   run_journaled)
+
+# matched-seed frontier grid: (workflow, seed, injected fail rate /node/h)
+GRID = tuple((wf, seed, fr)
+             for wf in ("eager", "mag")
+             for seed in (1, 2)
+             for fr in (0.0, 0.05))
+SCALE = 0.2
+N_NODES = 12
+
+# the chaos cell: small + crashy, but pools still outgrow min_history
+CHAOS_SCALE = 0.15
+CHAOS_RISK = RiskConfig(min_samples=2, window=64)
+
+
+def _cell(method, trace, seed: int, fr: float) -> dict:
+    res = simulate_cluster(trace, method, n_nodes=N_NODES,
+                           fail_rate_per_node_h=fr, fail_seed=seed)
+    return {
+        "wastage_gbh": round(sum(o.wastage_gbh for o in res.outcomes), 3),
+        "failures": sum(o.failures for o in res.outcomes),
+        "makespan_h": round(res.makespan_h, 4),
+    }
+
+
+def _pareto(fixed: dict, risk: dict) -> str:
+    dw = risk["wastage_gbh"] - fixed["wastage_gbh"]
+    df = risk["failures"] - fixed["failures"]
+    if dw == 0 and df == 0:
+        return "tie"
+    if dw <= 0 and df <= 0:
+        return "dominates"
+    if dw >= 0 and df >= 0:
+        return "dominated"
+    return "trade"
+
+
+def run(out_path: str = "BENCH_risk.json") -> dict:
+    report: dict = {"frontier": []}
+
+    # ---------------------------------------------------------- frontier
+    for wf, seed, fr in GRID:
+        t0 = time.perf_counter()
+        trace = generate_workflow(wf, seed=seed, scale=SCALE)
+        cap = trace.machine_cap_gb
+        fixed = _cell(SizeyMethod(machine_cap_gb=cap), trace, seed, fr)
+        risk = _cell(SizeyMethod(machine_cap_gb=cap, risk=True),
+                     trace, seed, fr)
+        cell = {"workflow": wf, "seed": seed, "fail_rate": fr,
+                "n_tasks": len(trace.tasks), "fixed": fixed, "risk": risk,
+                "pareto": _pareto(fixed, risk)}
+        report["frontier"].append(cell)
+        print(f"risk_bench/{wf}_s{seed}_fr{fr:g}: "
+              f"fixed waste={fixed['wastage_gbh']:.0f} "
+              f"fails={fixed['failures']} | "
+              f"risk waste={risk['wastage_gbh']:.0f} "
+              f"fails={risk['failures']} "
+              f"[{cell['pareto']}] ({time.perf_counter() - t0:.0f}s)",
+              flush=True)
+
+    agg = {
+        "fixed_wastage_gbh": round(sum(c["fixed"]["wastage_gbh"]
+                                       for c in report["frontier"]), 3),
+        "risk_wastage_gbh": round(sum(c["risk"]["wastage_gbh"]
+                                      for c in report["frontier"]), 3),
+        "fixed_failures": sum(c["fixed"]["failures"]
+                              for c in report["frontier"]),
+        "risk_failures": sum(c["risk"]["failures"]
+                             for c in report["frontier"]),
+    }
+    agg["waste_saved_gbh"] = round(
+        agg["fixed_wastage_gbh"] - agg["risk_wastage_gbh"], 3)
+    agg["failures_avoided"] = agg["fixed_failures"] - agg["risk_failures"]
+    agg["n_cells_dominating"] = sum(
+        c["pareto"] == "dominates" for c in report["frontier"])
+    agg["n_cells_dominated"] = sum(
+        c["pareto"] == "dominated" for c in report["frontier"])
+    report["aggregate"] = agg
+    dominates = agg["waste_saved_gbh"] > 0 and agg["failures_avoided"] > 0
+    print(f"risk_bench/aggregate: waste_saved={agg['waste_saved_gbh']:.1f} "
+          f"failures_avoided={agg['failures_avoided']} "
+          f"dominates={dominates}", flush=True)
+
+    # ----------------------------------------------------- risk=off bitwise
+    trace = generate_workflow("eager", seed=1, scale=SCALE)
+    cap = trace.machine_cap_gb
+    base = simulate_cluster(trace, SizeyMethod(machine_cap_gb=cap),
+                            n_nodes=N_NODES)
+    cold_method = SizeyMethod(
+        machine_cap_gb=cap,
+        risk=RiskConfig(min_samples=10 ** 9, window=10 ** 9))
+    cold = simulate_cluster(trace, cold_method, n_nodes=N_NODES)
+    assert_results_equal(base, cold)
+    n_cold_rows = len(read_risk_rows(cold_method.predictor.db))
+    assert n_cold_rows == 0, f"cold risk emitted {n_cold_rows} rows"
+    report["risk_off"] = {"bitwise": True, "n_risk_rows": n_cold_rows}
+    print("risk_bench/risk_off: bitwise=True", flush=True)
+
+    # ------------------------------------------------- warm resume bitwise
+    import tempfile
+    trace = generate_workflow("eager", seed=5, scale=CHAOS_SCALE,
+                              machine_cap_gb=64.0)
+
+    def factory(path):
+        return SizeyMethod(machine_cap_gb=64.0, persist_path=path,
+                           risk=CHAOS_RISK, failure_strategy="auto")
+
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "run.jsonl")
+        kw = dict(n_nodes=4, fail_rate_per_node_h=0.1, fail_seed=5)
+        baseline = run_journaled(trace, factory, path, **kw)
+        base_rows = read_risk_rows(path)
+        assert base_rows, "chaos cell emitted no risk rows"
+        cuts = kill_points(path, 2, seed=5)
+        for cut in cuts:
+            res, _eng = kill_and_resume(path, cut, trace, factory)
+            assert_results_equal(baseline, res)
+            got = read_risk_rows(path + f".cut{cut}")
+            assert got == base_rows, f"kill@{cut}: risk rows diverged"
+    report["warm_resume"] = {"bitwise": True, "n_kill_points": len(cuts),
+                             "n_risk_rows": len(base_rows)}
+    print(f"risk_bench/warm_resume: bitwise=True "
+          f"kill_points={len(cuts)} risk_rows={len(base_rows)}", flush=True)
+
+    report["headline"] = {
+        "risk_dominates_fixed": dominates,
+        "risk_off_bitwise": True,
+        "warm_resume_bitwise": True,
+        "n_cells": len(report["frontier"]),
+    }
+
+    if out_path:
+        dump_json(out_path, report)
+        print(f"# wrote {out_path}")
+    return report
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_risk.json")
+    args = ap.parse_args()
+    run(out_path=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -9,9 +9,15 @@ from repro.workflow import generate_workflow, simulate
 
 
 def main():
+    import argparse
+    ap = argparse.ArgumentParser(
+        description="Sizey vs the baselines on one workflow (~a minute)")
+    ap.add_argument("--scale", type=float, default=0.2,
+                    help="trace scale factor (default 0.2)")
+    args = ap.parse_args()
     # mag has the most instances per task type (Table I: 720) — the
     # regime where online learning has room even at reduced scale
-    trace = generate_workflow("mag", scale=0.2)
+    trace = generate_workflow("mag", scale=args.scale)
     print(f"workflow: {trace.summary()}\n")
     print(f"{'method':18s} {'wastage GBh':>12s} {'failures':>9s} "
           f"{'runtime h':>10s}")

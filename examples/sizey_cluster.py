@@ -34,6 +34,15 @@ def load_cells():
 
 
 def main():
+    import argparse
+    global DRYRUN
+    ap = argparse.ArgumentParser(
+        description="Sizey sizing LM jobs from dry-run memory analysis")
+    ap.add_argument("--dryrun", default=DRYRUN,
+                    help="dry-run results JSONL (default: "
+                         "$REPRO_DRYRUN_RESULTS or results/dryrun.jsonl)")
+    args = ap.parse_args()
+    DRYRUN = args.dryrun
     cells = load_cells()
     if not cells:
         raise SystemExit(f"no dry-run rows in {DRYRUN}; run "

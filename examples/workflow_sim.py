@@ -101,6 +101,11 @@ TEMPORAL_METHODS = ["sizey_temporal", "ks_plus"]
 
 def make(name, ttf, temporal_k, failure_strategy="retry_same",
          cap_gb=128.0, quality=False):
+    risky = name in ("sizey_risk", "sizey_risk_temporal")
+    if failure_strategy == "auto" and not risky:
+        # per-pool auto-selection needs the risk signals; the rest of the
+        # sweep keeps the pre-risk default so runs stay comparable
+        failure_strategy = "retry_same"
     if name == "sizey":
         return SizeyMethod(SizeyConfig(), ttf=ttf, machine_cap_gb=cap_gb,
                            failure_strategy=failure_strategy,
@@ -108,6 +113,16 @@ def make(name, ttf, temporal_k, failure_strategy="retry_same",
     if name == "sizey_temporal":
         return SizeyMethod(SizeyConfig(), ttf=ttf, temporal_k=temporal_k,
                            machine_cap_gb=cap_gb,
+                           failure_strategy=failure_strategy,
+                           quality=quality)
+    if name == "sizey_risk":
+        return SizeyMethod(SizeyConfig(), ttf=ttf, machine_cap_gb=cap_gb,
+                           name=name, risk=True,
+                           failure_strategy=failure_strategy,
+                           quality=quality)
+    if name == "sizey_risk_temporal":
+        return SizeyMethod(SizeyConfig(), ttf=ttf, temporal_k=temporal_k,
+                           machine_cap_gb=cap_gb, name=name, risk=True,
                            failure_strategy=failure_strategy,
                            quality=quality)
     if name == "ks_plus":
@@ -255,10 +270,18 @@ def main():
                     help="mean slowdown of a straggler attempt "
                          "(1 + Exp(factor - 1) draw)")
     ap.add_argument("--failure-strategy", default="retry_same",
-                    choices=FAILURE_STRATEGIES,
+                    choices=list(FAILURE_STRATEGIES) + ["auto"],
                     help="how interrupted attempts are charged and re-run "
                          "(checkpoint additionally folds the observed "
-                         "crash rate into Sizey's offset choice)")
+                         "crash rate into Sizey's offset choice; auto "
+                         "lets the risk layer pick per pool — requires "
+                         "--risk, sizey methods only)")
+    ap.add_argument("--risk", action="store_true",
+                    help="add the risk-priced sizey variants (sizey_risk, "
+                         "plus sizey_risk_temporal with --temporal): the "
+                         "paper offset is replaced by a conformal "
+                         "uncertainty band priced from cluster pressure "
+                         "and crash exposure (repro.core.risk)")
     ap.add_argument("--arrival-rate", type=float, default=None,
                     help="Poisson arrival rate (roots/hour) for the "
                          "cluster engine's open-system load model")
@@ -313,6 +336,9 @@ def main():
                          "with examples/quality_report.py")
     ap.add_argument("--out", default="results/workflow_sim.csv")
     args = ap.parse_args()
+    if args.failure_strategy == "auto" and not (args.risk and args.cluster):
+        ap.error("--failure-strategy auto selects per pool from the risk "
+                 "signals; combine it with --risk and --cluster")
     if args.plot_wastage and not (args.cluster and args.temporal):
         ap.error("--plot-wastage overlays the cluster engine's peak vs "
                  "temporal runs; combine it with --cluster and --temporal")
@@ -418,6 +444,9 @@ def main():
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     fail_seed = args.seed if args.fail_seed is None else args.fail_seed
     methods = METHODS + (TEMPORAL_METHODS if args.temporal else [])
+    if args.risk:
+        methods = methods + ["sizey_risk"] + (
+            ["sizey_risk_temporal"] if args.temporal else [])
     collector = obs.start_tracing() if args.trace_out else None
     rows = []
     quality_rows: list[dict] = []

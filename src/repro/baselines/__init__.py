@@ -20,9 +20,12 @@ def make_method(name: str, machine_cap_gb: float = 128.0, ttf: float = 1.0,
     """Factory used by benchmarks: name -> SizingMethod instance.
 
     ``failure_strategy`` (``retry_same`` / ``retry_scaled`` /
-    ``checkpoint``) sets the crash handling the cluster engine applies to
-    the method's attempts — valid for every method, so the Ponder-style
-    strategy comparison runs the whole baseline field.
+    ``checkpoint``, plus ``auto`` for the risk variants) sets the crash
+    handling the cluster engine applies to the method's attempts — valid
+    for every method, so the Ponder-style strategy comparison runs the
+    whole baseline field. ``sizey_risk`` / ``sizey_risk_temporal`` are
+    the risk-priced variants (``risk`` kwarg forwards a
+    :class:`~repro.core.risk.RiskConfig`; defaults otherwise).
     """
     from repro.core import SizeyConfig
 
@@ -33,6 +36,18 @@ def make_method(name: str, machine_cap_gb: float = 128.0, ttf: float = 1.0,
     if name == "sizey":
         return SizeyMethod(SizeyConfig(**kw), ttf=ttf,
                            machine_cap_gb=machine_cap_gb, **strat)
+    if name == "sizey_risk":
+        risk = kw.pop("risk", True)
+        return SizeyMethod(SizeyConfig(**kw), ttf=ttf,
+                           machine_cap_gb=machine_cap_gb, name="sizey_risk",
+                           risk=risk, **strat)
+    if name == "sizey_risk_temporal":
+        risk = kw.pop("risk", True)
+        k = kw.pop("k_segments", 4)
+        return SizeyMethod(SizeyConfig(**kw), ttf=ttf,
+                           machine_cap_gb=machine_cap_gb,
+                           name="sizey_risk_temporal", temporal_k=k,
+                           risk=risk, **strat)
     if name == "sizey_argmax":
         return SizeyMethod(SizeyConfig(strategy="argmax", **kw), ttf=ttf,
                            machine_cap_gb=machine_cap_gb, name="sizey_argmax",

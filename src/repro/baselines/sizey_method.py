@@ -21,6 +21,19 @@ the raw aggregate prediction as the expected crashes-per-attempt grow
 GB of headroom is burned again and again by interruptions. With no
 observed crash the fold is a no-op, so failure-free runs stay bitwise
 identical to the default configuration.
+
+``risk`` (a :class:`~repro.core.risk.RiskConfig`, or ``True`` for the
+defaults) replaces the retrospective offset with the risk-priced band:
+the allocation becomes ``agg + band(tau)`` where the band is the pool's
+rolling conformal residual quantile widened by the decision's ensemble
+spread, and ``tau`` is priced from live cluster pressure (fed by the
+engine through ``note_pressure``) and observed crash exposure. Cold
+pools and preset decisions run the paper path bitwise, so ``risk=None``
+is byte-identical to the pre-risk method. With risk on,
+``failure_strategy="auto"`` additionally lets the cluster engine ask
+this method to pick each task's crash handling (``strategy_for``) and
+checkpoint cadence (``checkpoint_frac_for``) per pool from RAQ x crash
+exposure.
 """
 from __future__ import annotations
 
@@ -31,24 +44,53 @@ import numpy as np
 from repro.core import SizeyConfig
 from repro.core.predictor import SizeyPredictor, SizingDecision
 from repro.core.provenance import ProvenanceDB
+from repro.core.risk import RiskConfig, RiskManager, crash_probability
+from repro.core.risk import checkpoint_frac_for as _auto_checkpoint_frac
+from repro.core.risk import select_strategy as _auto_strategy
 from repro.obs.quality import QUALITY_KIND
+from repro.obs.risk import RISK_KIND
 from repro.workflow.accounting import (DEFAULT_CHECKPOINT_FRAC,
                                        FAILURE_STRATEGIES)
 from repro.workflow.trace import TaskInstance
 
 
 class SizeyMethod:
+    """The Sizey predictor behind the ``SizingMethod`` protocol.
+
+    One adapter composes every subsystem: ``temporal_k=K`` switches onto
+    time-segmented reservation plans, ``risk=...`` onto priced
+    uncertainty bands (with ``failure_strategy="auto"`` for per-pool
+    strategy selection), ``quality=True`` onto prequential telemetry,
+    ``persist_path`` onto the provenance/journal file.
+
+    Contract: every allocation is a deterministic function of the
+    observation history plus the journaled live signals (pressure,
+    crash counters) — no rng, no wall clock — so serial runs, cluster
+    runs and journal-replayed resumes reproduce decisions bitwise.
+    """
+
     def __init__(self, cfg: SizeyConfig | None = None, *, ttf: float = 1.0,
                  machine_cap_gb: float = 128.0, name: str | None = None,
                  fused: bool = True, temporal_k: int | None = None,
                  persist_path: str | None = None,
                  failure_strategy: str = "retry_same",
                  checkpoint_frac: float = DEFAULT_CHECKPOINT_FRAC,
-                 quality: bool = False):
-        if failure_strategy not in FAILURE_STRATEGIES:
+                 quality: bool = False,
+                 risk: RiskConfig | bool | None = None):
+        if risk:
+            self.risk = RiskManager(risk if isinstance(risk, RiskConfig)
+                                    else None)
+        else:
+            self.risk = None
+        if failure_strategy == "auto":
+            if self.risk is None:
+                raise ValueError("failure_strategy='auto' selects per-pool "
+                                 "strategies from the risk signals: it "
+                                 "requires risk=...")
+        elif failure_strategy not in FAILURE_STRATEGIES:
             raise ValueError(
                 f"unknown failure strategy {failure_strategy!r} "
-                f"(have {FAILURE_STRATEGIES})")
+                f"(have {FAILURE_STRATEGIES} + 'auto')")
         self.failure_strategy = failure_strategy
         self.checkpoint_frac = checkpoint_frac
         # crash-aware sizing state: interruptions observed vs attempt-hours
@@ -86,6 +128,13 @@ class SizeyMethod:
         self.quality = quality
         self._clock_h = 0.0
         self._quality_seq = len(self.predictor.db.aux.get(QUALITY_KIND, ()))
+        # risk-pricing state: the engine's pressure sample (live steps
+        # only; serial runs never call note_pressure, so pressure stays
+        # 0.0 and sizing prices generously) and the risk-row counter —
+        # like _quality_seq it restores from the warm-start prefix, so a
+        # re-executed sizing wave continues the stream bitwise
+        self._pressure = 0.0
+        self._risk_seq = len(self.predictor.db.aux.get(RISK_KIND, ()))
 
     def _crash_aware_alloc(self, decision) -> float:
         """Fold the observed crash rate into the offset choice (the
@@ -113,7 +162,119 @@ class SizeyMethod:
         self._crash_events += 1
         self._exposure_h += elapsed_h
 
+    def note_pressure(self, pressure: float) -> None:
+        """Cluster-engine hook (live steps only): the current sizing
+        pressure in [0, 1] — a pure function of engine state at the
+        scheduling round, so a repair-re-executed step samples the
+        identical value. Replay never calls it (journaled allocations
+        are applied verbatim); serial runs never call it (pressure stays
+        0.0 and risk pricing sizes generously)."""
+        self._pressure = float(pressure)
+
+    def _crash_p(self) -> float:
+        """Observed crashes-per-attempt probability (0.0 crash-free)."""
+        return crash_probability(self._crash_events, self._exposure_h,
+                                 self._runtime_sum_h, self._n_completed)
+
+    def _emit_risk_row(self, d, tau: float, band: float, crash_p: float,
+                       base_alloc: float, alloc: float,
+                       collapsed: bool = False) -> None:
+        """One ``kind="risk"`` aux row per repriced decision (see
+        :mod:`repro.obs.risk`): emitted at sizing time, which journal
+        replay never re-enters, so rows are live-only by construction
+        and regenerate bitwise on a repair-re-executed wave."""
+        self.predictor.db.add_aux(RISK_KIND, {
+            "seq": self._risk_seq, "t_h": float(self._clock_h),
+            "task_type": d.task_type, "machine": d.machine,
+            "tau": float(tau), "band_gb": float(band),
+            "pressure": float(self._pressure), "crash_p": float(crash_p),
+            "agg_pred_gb": float(d.agg_pred_gb),
+            "offset_alloc_gb": float(base_alloc),
+            "alloc_gb": float(alloc), "collapsed": int(collapsed)})
+        self._risk_seq += 1
+
+    def _risk_alloc(self, decision, base_alloc: float) -> float:
+        """Risk-priced allocation of one flat (peak) decision: the
+        paper's retrospective offset is replaced by ``agg + band(tau)``
+        with ``tau`` priced from (pressure, crash exposure) and the band
+        from the pool's conformal residual quantile + ensemble spread.
+        Preset decisions and cold pools (residual log below
+        ``min_samples``) return ``base_alloc`` untouched — bitwise the
+        paper path."""
+        d = decision
+        if d.source != "model" or d.model_preds is None:
+            return base_alloc
+        key = (d.task_type, d.machine)
+        pool = self.predictor.db.pools.get(key)
+        crash_p = self._crash_p()
+        tau = self.risk.quantile(self._pressure, crash_p)
+        band = self.risk.band(key, pool, tau, d.model_preds)
+        if band is None:
+            return base_alloc
+        cfg = self.predictor.cfg
+        alloc = min(max(float(d.agg_pred_gb) + band, cfg.min_alloc_gb),
+                    float(d.machine_cap_gb))
+        self._emit_risk_row(d, tau, band, crash_p, base_alloc, alloc)
+        return alloc
+
+    def _risk_plan(self, decision) -> None:
+        """Reprice a temporal decision in place: each plan segment gets
+        ``seg_agg + band``, and when the plan's temporal structure is
+        smaller than the pool's calibrated uncertainty the plan collapses
+        to flat — per-pool temporal k selection (a noisy pool runs k=1
+        until its calibration tightens). ``seg_decisions`` are untouched
+        (observe still credits per-segment models); the rebuilt plan
+        rides ``export_pending`` so recovery round-trips it bitwise."""
+        from repro.core.temporal.segments import ReservationPlan
+        peak = decision.peak_decision
+        if peak.source != "model" or peak.model_preds is None:
+            return
+        key = (decision.task_type, decision.machine)
+        pool = self.predictor.db.pools.get(key)
+        crash_p = self._crash_p()
+        tau = self.risk.quantile(self._pressure, crash_p)
+        band = self.risk.band(key, pool, tau, peak.model_preds)
+        if band is None:
+            return
+        cfg = self.predictor.cfg
+        cap = float(peak.machine_cap_gb)
+        base_alloc = decision.allocation_gb
+        vals = [min(max(float(sd.agg_pred_gb) + band, cfg.min_alloc_gb), cap)
+                for sd in decision.seg_decisions]
+        collapsed = self.risk.collapse_temporal(vals, band)
+        if collapsed:
+            vals = [max(vals)] * len(vals)
+        decision.plan = ReservationPlan(tuple(
+            (float(end), float(v))
+            for (end, _gb), v in zip(decision.plan.segments, vals)))
+        self._emit_risk_row(peak, tau, band, crash_p, base_alloc,
+                            decision.plan.peak_gb, collapsed)
+
+    def strategy_for(self, task: TaskInstance) -> str:
+        """Cluster-engine hook (``failure_strategy="auto"``, live sized
+        waves only): pick this task's crash handling from crash exposure
+        x the pool's best RAQ. The engine journals the choice per sized
+        task, so replay never re-asks (counters sit at kill-time values
+        during replay)."""
+        d = self._pending[id(task)]
+        if self.temporal:
+            d = d.peak_decision
+        raq = None
+        if d.raq is not None and len(d.raq):
+            raq = float(np.max(np.asarray(d.raq)))
+        return _auto_strategy(self.risk.cfg, self._crash_p(), raq)
+
+    def checkpoint_frac_for(self, task: TaskInstance) -> float:
+        """Cluster-engine hook (``failure_strategy="auto"``): crash-rate-
+        driven checkpoint cadence — checkpoint more often the crashier
+        the cluster looks. Journaled alongside ``strategy_for``."""
+        return _auto_checkpoint_frac(self.risk.cfg, self._crash_p())
+
     def allocate(self, task: TaskInstance) -> float:
+        """Size one task's first attempt: predict -> (crash-aware
+        offset) -> (risk band reprice) -> clamp. The decision stays
+        pending until :meth:`complete`/:meth:`abandon`; replayed waves
+        never re-enter here — journaled allocations apply verbatim."""
         if self.temporal:
             return self.allocate_batch([task])[0]
         # heterogeneous traces carry per-instance machine caps; route them
@@ -122,7 +283,10 @@ class SizeyMethod:
             task.task_type, task.machine, task.features, task.user_preset_gb,
             machine_cap_gb=task.machine_cap_gb)
         self._pending[id(task)] = decision
-        return self._crash_aware_alloc(decision)
+        alloc = self._crash_aware_alloc(decision)
+        if self.risk is not None:
+            alloc = self._risk_alloc(decision, alloc)
+        return alloc
 
     def allocate_batch(self, tasks: list[TaskInstance]) -> list[float]:
         """Decide a burst of submissions with one fused dispatch per pool
@@ -134,8 +298,15 @@ class SizeyMethod:
         if self.temporal:
             # a plan is a whole-runtime schedule: the crash-aware offset
             # fold applies to flat (peak) decisions only
+            if self.risk is not None:
+                for d in decisions:
+                    self._risk_plan(d)
             return [d.allocation_gb for d in decisions]
-        return [self._crash_aware_alloc(d) for d in decisions]
+        allocs = [self._crash_aware_alloc(d) for d in decisions]
+        if self.risk is not None:
+            allocs = [self._risk_alloc(d, a)
+                      for d, a in zip(decisions, allocs)]
+        return allocs
 
     def plan_for(self, task: TaskInstance):
         """Reservation plan for the allocation just returned (None for the
@@ -146,6 +317,9 @@ class SizeyMethod:
 
     def retry(self, task: TaskInstance, attempt: int,
               last_alloc_gb: float) -> float:
+        """Re-size after an OOM kill via the paper's retry ladder — a
+        pure function of (attempt, last alloc, pool state), replayable
+        bitwise."""
         decision = self._pending[id(task)]
         return self.predictor.retry_allocation(decision, attempt,
                                                last_alloc_gb)
@@ -163,6 +337,10 @@ class SizeyMethod:
 
     def complete(self, task: TaskInstance, first_alloc_gb: float,
                  attempts: int) -> None:
+        """Observe a completion: fold the measured peak/runtime into the
+        pool (amortized refit), the prequential residual log, and the
+        telemetry streams. Called once per task, live only — replayed
+        completions were observed before the crash and are skipped."""
         decision = self._pending.pop(id(task))
         self._note_completion(task)
         if self.temporal:
@@ -246,17 +424,24 @@ class SizeyMethod:
     # detour exactly.
 
     def export_state(self) -> dict:
-        """Crash-aware sizing counters (JSON-safe)."""
+        """Crash-aware sizing counters + the last pressure sample
+        (JSON-safe). Journaled once per engine step, so a recovered run
+        restores the counters to their kill-time values before replaying
+        the WAL tail."""
         return {"crash_events": self._crash_events,
                 "exposure_h": self._exposure_h,
                 "runtime_sum_h": self._runtime_sum_h,
-                "n_completed": self._n_completed}
+                "n_completed": self._n_completed,
+                "pressure": self._pressure}
 
     def restore_state(self, state: dict) -> None:
+        """Inverse of :meth:`export_state` (tolerates pre-risk journals:
+        the pressure sample defaults to 0.0)."""
         self._crash_events = int(state["crash_events"])
         self._exposure_h = float(state["exposure_h"])
         self._runtime_sum_h = float(state["runtime_sum_h"])
         self._n_completed = int(state["n_completed"])
+        self._pressure = float(state.get("pressure", 0.0))
 
     def export_pending(self, task: TaskInstance) -> dict | None:
         """In-flight decision for ``task`` as a JSON-safe blob (None when

@@ -436,6 +436,14 @@ class SizeyPredictor:
     def predict(self, task_type: str, machine: str, features,
                 user_preset_gb: float,
                 machine_cap_gb: float | None = None) -> SizingDecision:
+        """Size one task: ensemble predict -> RAQ gate -> offset -> clamp.
+
+        Deterministic given the pool's observation history — no rng, no
+        wall clock — so a journal warm start that replays the same
+        observations reproduces every decision bitwise. Pools younger
+        than ``cfg.min_history`` return the user preset
+        (``source != "model"``) untouched by models, offsets or risk
+        bands."""
         cap_gb = (self.default_machine_cap_gb if machine_cap_gb is None
                   else machine_cap_gb)
         feats = tuple(float(f) for f in np.atleast_1d(features))
@@ -575,6 +583,9 @@ class SizeyPredictor:
     # ------------------------------------------------------------- failure
     def retry_allocation(self, decision: SizingDecision, attempt: int,
                          last_alloc_gb: float) -> float:
+        """Retry-ladder step after an OOM kill: a pure function of
+        (attempt index, last allocation, pool max-seen, machine cap), so
+        journal replay re-derives the same ladder without re-asking."""
         pool = self.db.pool(decision.task_type, decision.machine)
         return retry_allocation(attempt, last_alloc_gb, pool.max_seen_gb,
                                 decision.machine_cap_gb)

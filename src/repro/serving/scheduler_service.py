@@ -123,6 +123,9 @@ class SchedulerService:
     # ------------------------------------------------------------- tenants
     def add_tenant(self, name: str, weight: float = 1.0,
                    max_active: int | None = None) -> None:
+        """Register a tenant: ``weight`` sets its deficit-round-robin
+        share of engine steps and its weight-proportional admission
+        slots; ``max_active`` caps concurrent workflows explicitly."""
         if name in self._tenants:
             raise ValueError(f"tenant {name!r} already registered")
         if weight <= 0.0:
@@ -136,6 +139,9 @@ class SchedulerService:
         return max(1, int(self.max_concurrent * t.weight / total_w))
 
     def stats(self) -> dict[str, dict]:
+        """Per-tenant scheduler counters (steps granted, active /
+        submitted / completed / finally-rejected workflows) — the same
+        numbers :meth:`scrape` exposes as gauges."""
         return {t.name: {"steps_granted": t.steps_granted,
                          "active": len(t.active),
                          "n_submitted": t.n_submitted,
@@ -155,6 +161,15 @@ class SchedulerService:
                 reg.gauge(f"scheduler_{stat}",
                           "per-tenant scheduler state").set(value,
                                                             tenant=tenant)
+        # per-workflow sizing pressure: the same engine sample risk-priced
+        # methods consume (repro.core.risk), exported so operators can
+        # correlate tight sizing with backlog on the shared endpoint
+        gauge = reg.gauge("engine_pressure",
+                          "per-workflow sizing pressure in [0, 1]")
+        for t in self._tenants.values():
+            for handle in t.active:
+                gauge.set(handle.engine.pressure(),
+                          tenant=t.name, workflow=handle.name)
         return reg.scrape()
 
     # ----------------------------------------------------------- admission

@@ -829,10 +829,21 @@ class ClusterEngine:
         self.backfill_depth = backfill_depth
         self.failure_strategy = getattr(method, "failure_strategy",
                                         "retry_same")
-        if self.failure_strategy not in FAILURE_STRATEGIES:
+        # "auto": the method picks each task's strategy + checkpoint
+        # cadence per pool at sizing time (risk-priced methods); choices
+        # are journaled per sized task so replay never re-asks the method
+        # (its counters sit at kill-time values during replay)
+        self.strategy_auto = self.failure_strategy == "auto"
+        if self.strategy_auto:
+            if not (hasattr(method, "strategy_for")
+                    and hasattr(method, "checkpoint_frac_for")):
+                raise ValueError(
+                    "failure_strategy='auto' needs a method exposing "
+                    "strategy_for and checkpoint_frac_for")
+        elif self.failure_strategy not in FAILURE_STRATEGIES:
             raise ValueError(f"unknown failure strategy "
                              f"{self.failure_strategy!r} "
-                             f"(have {FAILURE_STRATEGIES})")
+                             f"(have {FAILURE_STRATEGIES} + 'auto')")
         self.checkpoint_frac = float(getattr(method, "checkpoint_frac",
                                              DEFAULT_CHECKPOINT_FRAC))
         if straggler_factor < 1.0:
@@ -867,6 +878,7 @@ class ClusterEngine:
         for i, n in enumerate(self.nodes):
             n.idx = i
         self.max_cap = max(n.cap_gb for n in self.nodes)
+        self.total_cap = sum(n.cap_gb for n in self.nodes)
         self.classes = {n.machine for n in self.nodes
                         if n.machine is not None}
         # indexed placement core (trace-scale refactor): one free-capacity
@@ -894,6 +906,12 @@ class ClusterEngine:
         # completions were observed before the crash and their rows sit in
         # the warm-start prefix.
         self.has_note_clock = hasattr(method, "note_clock")
+        # risk pricing (repro.core.risk): feed the method the live sizing
+        # pressure at each scheduling round. Pressure is a pure function
+        # of engine state, so a repair-re-executed round samples the
+        # identical value; replay skips the call (journaled allocations
+        # are applied verbatim).
+        self.has_note_pressure = hasattr(method, "note_pressure")
         # durability protocol (optional; see SizeyMethod): without the
         # hooks, journal replay still re-applies the recorded allocations
         # but cannot restore in-flight decision state — best-effort only
@@ -963,6 +981,9 @@ class ClusterEngine:
         self.queue = _SeqQueue()
         self._pending_unsized: list[_Queued] = []
         self._refresh_dirty = False
+        # per-task (strategy, checkpoint_frac) choices of the LAST sized
+        # wave (failure_strategy="auto" only; None otherwise)
+        self._wave_strategies: list[tuple[str, float]] | None = None
         self._qseq = 0
         self._atok = 0   # attempt tokens (reservation + finish ids)
         self._dtok = 0   # crash-ownership tokens: a recover event only
@@ -1117,6 +1138,18 @@ class ClusterEngine:
         # every instance of the trace gets an outcome (serial semantics)
         self._unlock_children(entry.task.key, t)
 
+    def pressure(self) -> float:
+        """Live sizing pressure in [0, 1]: the larger of memory pressure
+        (reserved over total capacity) and queue backlog (queued entries
+        per node, saturating at 1). A pure function of engine state —
+        identical live, on a repair-re-executed round, and after a warm
+        resume — so risk-priced methods can consume it without breaking
+        the bitwise-recovery contract."""
+        mem = (self.total_reserved / self.total_cap
+               if self.total_cap > 0 else 0.0)
+        backlog = min(1.0, len(self.queue) / max(len(self.nodes), 1))
+        return max(mem, backlog)
+
     def _note_straggle(self, led: AttemptLedger, elapsed_h: float) -> None:
         """Straggler overhead actually incurred: the extra wall time of
         the ``elapsed_h`` the attempt really ran (a killed straggler is
@@ -1139,7 +1172,10 @@ class ClusterEngine:
         self.total_reserved -= gb
         self._note_straggle(entry.ledger, t - started)
         entry.ledger.record_interruption(t - started)
-        if self.failure_strategy == "retry_scaled":
+        # per-LEDGER strategy: under failure_strategy="auto" each task
+        # carries its own (journaled) choice, so the refresh decision
+        # reads the ledger, not the engine-level default
+        if entry.ledger.failure_strategy == "retry_scaled":
             entry.ledger.refresh_pending = True
             self._refresh_dirty = True
         if self.has_note and self._replay is None:
@@ -1445,6 +1481,11 @@ class ClusterEngine:
 
         # ----------------------------------------------- scheduling round
         clock = self.clock
+        if rec is None and self.has_note_pressure:
+            # live steps only: replayed waves re-apply journaled
+            # allocations, and a repair-re-executed round recomputes the
+            # identical sample from the restored engine state
+            method.note_pressure(self.pressure())
         # the queue is permanently seq-sorted (_SeqQueue), so the unsized
         # wave is exactly this drain's arrivals (plus, defensively, any
         # unsized entries a restored snapshot carried) in seq order —
@@ -1459,11 +1500,18 @@ class ClusterEngine:
             # (one fused device dispatch per pool for batched methods)
             self.n_waves += 1
             allocs = self._wave_allocs(rec, jrec, "sized", unsized)
-            for entry, alloc in zip(unsized, allocs):
+            strategies = self._wave_strategies
+            self._wave_strategies = None
+            for i, (entry, alloc) in enumerate(zip(unsized, allocs)):
+                if strategies is not None:
+                    strat, cfrac = strategies[i]
+                else:
+                    strat, cfrac = self.failure_strategy, \
+                        self.checkpoint_frac
                 entry.ledger = AttemptLedger(
                     entry.task, float(alloc), self._cap_for(entry.task),
-                    self.ttf, failure_strategy=self.failure_strategy,
-                    checkpoint_frac=self.checkpoint_frac)
+                    self.ttf, failure_strategy=strat,
+                    checkpoint_frac=cfrac)
                 if self.has_plan:
                     # temporal reservation schedule for the first attempt
                     # (set_plan drops 1-segment plans onto the flat path)
@@ -1494,7 +1542,7 @@ class ClusterEngine:
                     entry.ledger.aborted = True
                     self._finish_aborted(entry, clock)
                     self.queue.discard(entry)
-        if self.failure_strategy == "retry_scaled" and self._refresh_dirty:
+        if self._refresh_dirty:
             # crash-interrupted tasks are re-sized through the method (one
             # batched dispatch when available) before re-entering
             # placement: a tightened prediction shrinks what the next
@@ -1680,8 +1728,17 @@ class ClusterEngine:
         asks the method (journaling the allocations + in-flight decision
         blobs), replay mode re-applies the journaled wave verbatim —
         including restoring each task's decision blob, so later retries /
-        completions of the attempt see the decision it was sized with."""
+        completions of the attempt see the decision it was sized with.
+
+        Under ``failure_strategy="auto"`` a "sized" wave also records
+        each task's (strategy, checkpoint_frac) choice — asked of the
+        method live (elements 3-4 of the journal entry), read back at
+        replay: the method's crash counters sit at kill-time values
+        during replay, so re-asking would diverge. The aligned choices
+        are handed to the caller through ``self._wave_strategies``."""
         method = self.method
+        auto = self.strategy_auto and field == "sized"
+        self._wave_strategies = None
         if rec is not None:
             js = rec[field]
             if [list(e.task.key) for e in wave] != [s[0] for s in js]:
@@ -1692,6 +1749,13 @@ class ClusterEngine:
                 for e, s in zip(wave, js):
                     if s[2] is not None:
                         method.restore_pending(e.task, s[2])
+            if auto:
+                if any(len(s) < 5 for s in js):
+                    raise RuntimeError(
+                        "journal divergence: failure_strategy='auto' "
+                        "engine replaying a journal without per-task "
+                        "strategy choices")
+                self._wave_strategies = [(s[3], float(s[4])) for s in js]
             return [s[1] for s in js]
         with _span("engine/sizing_wave", kind=field, n=len(wave)):
             if self.has_batch:
@@ -1700,21 +1764,41 @@ class ClusterEngine:
             else:
                 self.n_size_calls += len(wave)
                 allocs = [method.allocate(e.task) for e in wave]
+        if auto:
+            # asked AFTER sizing so the method can read each task's
+            # fresh in-flight decision (per-pool RAQ trust)
+            self._wave_strategies = [
+                (method.strategy_for(e.task),
+                 float(method.checkpoint_frac_for(e.task)))
+                for e in wave]
         if jrec is not None:
             jrec[field] = [
                 [list(e.task.key), float(a),
                  (method.export_pending(e.task)
                   if self.has_export_pending else None)]
                 for e, a in zip(wave, allocs)]
+            if auto:
+                for s, (strat, cfrac) in zip(jrec[field],
+                                             self._wave_strategies):
+                    s.extend([strat, cfrac])
         return allocs
 
     # ----------------------------------------------------------- lifecycle
     def run(self) -> SimResult:
+        """Drive :meth:`step` to quiescence and return :meth:`result`.
+
+        Fully deterministic: every arrival, crash, straggler stretch and
+        rng draw derives from named seeds, so two runs of the same
+        (trace, method, config) — or a journaled run resumed after a
+        kill at any byte — produce bitwise-identical results."""
         while self.step():
             pass
         return self.result()
 
     def result(self) -> SimResult:
+        """Materialize the final :class:`SimResult`: outcomes in
+        completion order plus cluster metrics (makespan, queueing delay,
+        per-node/class utilization, failure and recovery counters)."""
         makespan = self.clock
         by_class: dict[str, list[Node]] = collections.defaultdict(list)
         for node in self.nodes:

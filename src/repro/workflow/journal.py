@@ -99,23 +99,38 @@ class Journal:
 
     @property
     def path(self) -> str:
+        """The backing JSONL file (the db's ``persist_path``)."""
         return self.db.persist_path
 
     # -------------------------------------------------------------- writes
     def begin(self, *, config: dict, trace_fp: int, method_name: str,
               resumed_from: int | None = None) -> None:
+        """Write the run's ``begin`` marker (engine config, trace
+        fingerprint, method name). ``resumed_from`` stamps recovery
+        generations so history never replays twice."""
         self.db.add_aux(WAL_KIND, {
             "rec": "begin", "config": config, "trace_fp": trace_fp,
             "method_name": method_name, "resumed_from": resumed_from})
 
     def append_step(self, rec: dict) -> None:
+        """Append one step's WAL row — everything seeds cannot re-derive
+        (drained events, wave allocations + decision blobs, retries,
+        completions, clock, method counters). MUST be written at the END
+        of the step, after the step's provenance rows: that ordering is
+        what lets :meth:`repair` truncate a crash back to the last step
+        boundary."""
         self.db.add_aux(WAL_KIND, rec)
 
     def end(self, *, step: int, n_outcomes: int) -> None:
+        """Write the ``end`` marker; a journal without one is an
+        unfinished run that :func:`recover_run` may resume."""
         self.db.add_aux(WAL_KIND, {"rec": "end", "step": step,
                                    "n_outcomes": n_outcomes})
 
     def snapshot(self, state: dict) -> None:
+        """Write a compacted full-state engine snapshot row (everything
+        ``ClusterEngine.export_state()`` serializes — indexes excluded:
+        they rebuild deterministically on restore)."""
         with _span("journal/snapshot", step=state["step"]):
             self.db.add_aux(SNAP_KIND,
                             {"step": state["step"], "state": state})

@@ -55,7 +55,23 @@ class SizingMethod(Protocol):
     #       observe a wave of simultaneous completions in one fused
     #       observe dispatch per pool;
     #   abandon(task)
-    #       drop in-flight state for an aborted task.
+    #       drop in-flight state for an aborted task;
+    #   note_clock(t_h) / note_interruption(task, elapsed_h)
+    #       engine telemetry hooks, live steps only (quality rows /
+    #       crash-aware sizing counters — see SizeyMethod);
+    #   note_pressure(p)
+    #       live sizing pressure sample (ClusterEngine.pressure()) fed
+    #       before each scheduling round; risk-priced methods consume it.
+    #       The serial simulate() below never calls it, so serial runs
+    #       price at pressure 0.0 (generous sizing) by construction;
+    #   strategy_for(task) -> str / checkpoint_frac_for(task) -> float
+    #       per-task failure-strategy auto-selection (engine-side
+    #       failure_strategy="auto"): asked once per live sized wave and
+    #       journaled, never re-asked at replay;
+    #   export_state() / restore_state(state) and
+    #   export_pending(task) / restore_pending(task, blob)
+    #       durability protocol: journal-ride the method state seeds
+    #       cannot re-derive (see repro.workflow.journal).
 
 
 @dataclasses.dataclass

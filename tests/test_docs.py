@@ -1,0 +1,186 @@
+"""Docs stay true (PR 10 satellites): markdown links resolve, the
+public seams carry docstrings documenting their bitwise/determinism
+contracts (an in-repo interrogate-style lint — no pip dependency), and
+every CLI flag the docs show for an example script actually exists in
+that script's ``--help``.
+"""
+from __future__ import annotations
+
+import inspect
+import pathlib
+import re
+import subprocess
+import sys
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+DOC_FILES = sorted([REPO / "README.md", REPO / "ROADMAP.md",
+                    *(REPO / "docs").glob("*.md")])
+
+# ----------------------------------------------------------- link checker
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def _relative_links(path: pathlib.Path) -> list[str]:
+    links = []
+    for target in _LINK.findall(path.read_text()):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        links.append(target)
+    return links
+
+
+@pytest.mark.parametrize("doc", DOC_FILES, ids=lambda p: p.name)
+def test_markdown_relative_links_resolve(doc):
+    broken = []
+    for target in _relative_links(doc):
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        if not (doc.parent / rel).exists():
+            broken.append(target)
+    assert not broken, f"{doc.name}: broken relative links {broken}"
+
+
+def test_docs_tree_exists_and_readme_links_it():
+    readme = (REPO / "README.md").read_text()
+    for name in ("architecture.md", "benchmarks.md", "recovery.md"):
+        assert (REPO / "docs" / name).exists(), f"docs/{name} missing"
+        assert f"docs/{name}" in readme, f"README does not link docs/{name}"
+
+
+def test_benchmarks_doc_covers_every_gated_baseline():
+    # every BENCH file check_regression gates must be documented
+    from benchmarks.check_regression import RULES
+    doc = (REPO / "docs" / "benchmarks.md").read_text()
+    missing = [name for name in RULES
+               if pathlib.Path(name).name not in doc]
+    assert not missing, f"docs/benchmarks.md does not mention {missing}"
+
+
+# ------------------------------------------------- docstring-coverage lint
+def _seam_objects():
+    from repro.baselines.sizey_method import SizeyMethod
+    from repro.core import risk
+    from repro.core.predictor import SizeyPredictor
+    from repro.core.risk import RiskConfig, RiskManager
+    from repro.serving.scheduler_service import SchedulerService
+    from repro.workflow.cluster import ClusterEngine
+    from repro.workflow.journal import Journal
+    classes = [SizeyPredictor, SizeyMethod, ClusterEngine,
+               SchedulerService, Journal, RiskConfig, RiskManager]
+    funcs = [getattr(risk, n) for n in risk.__all__
+             if inspect.isfunction(getattr(risk, n))]
+    return classes, funcs
+
+
+def _missing_docstrings():
+    classes, funcs = _seam_objects()
+    missing = []
+    for cls in classes:
+        if not inspect.getdoc(cls):
+            missing.append(cls.__name__)
+        for name, member in vars(cls).items():
+            if name.startswith("_"):
+                continue
+            if isinstance(member, property):
+                fn = member.fget
+            elif isinstance(member, (classmethod, staticmethod)):
+                fn = member.__func__
+            elif inspect.isfunction(member):
+                fn = member
+            else:
+                continue
+            if not inspect.getdoc(fn):
+                missing.append(f"{cls.__name__}.{name}")
+    for fn in funcs:
+        if not inspect.getdoc(fn):
+            missing.append(fn.__qualname__)
+    return missing
+
+
+def test_public_seams_fully_docstringed():
+    # interrogate-style threshold, pinned at 100% for the public seams:
+    # predictor, method adapter, engine, service, journal, risk layer
+    missing = _missing_docstrings()
+    assert not missing, (
+        f"{len(missing)} public seam members lack docstrings: {missing}")
+
+
+def test_seam_docstrings_state_determinism_contracts():
+    # the docstring pass must document the bitwise/determinism contracts,
+    # not just restate signatures: each seam mentions at least one of the
+    # contract words somewhere in its class + method docs
+    words = ("bitwise", "determinis", "replay", "journal", "seed")
+    classes, _ = _seam_objects()
+    for cls in classes:
+        docs = [inspect.getdoc(cls) or ""]
+        docs += [inspect.getdoc(m) or "" for m in vars(cls).values()
+                 if inspect.isfunction(m)]
+        blob = " ".join(docs).lower()
+        assert any(w in blob for w in words), (
+            f"{cls.__name__} docstrings never mention its "
+            f"determinism/durability contract")
+
+
+def test_key_modules_have_docstrings():
+    import importlib
+    mods = ["repro.core.predictor", "repro.core.provenance",
+            "repro.core.risk", "repro.core.risk.bands",
+            "repro.core.risk.pricing", "repro.core.temporal.predictor",
+            "repro.baselines.sizey_method", "repro.workflow.cluster",
+            "repro.workflow.simulator", "repro.workflow.journal",
+            "repro.serving.scheduler_service", "repro.obs.metrics",
+            "repro.obs.trace", "repro.obs.quality", "repro.obs.risk"]
+    bare = [m for m in mods
+            if not (importlib.import_module(m).__doc__ or "").strip()]
+    assert not bare, f"modules without docstrings: {bare}"
+
+
+# ------------------------------------------------------------ --help audit
+_EXAMPLES = sorted((REPO / "examples").glob("*.py"),
+                   key=lambda p: p.name)
+_CMD_LINE = re.compile(r"examples/(\w+\.py)")
+_FLAG = re.compile(r"(--[a-z][a-z0-9-]*)")
+
+
+def _documented_flags() -> dict[str, set[str]]:
+    """Flags the docs show per example script: shell lines mentioning
+    ``examples/<name>.py`` (plus backslash continuations) are scanned
+    for ``--flag`` tokens."""
+    flags: dict[str, set[str]] = {}
+    for doc in DOC_FILES:
+        lines = doc.read_text().splitlines()
+        i = 0
+        while i < len(lines):
+            m = _CMD_LINE.search(lines[i])
+            if m and not lines[i].lstrip().startswith("|"):
+                script = m.group(1)
+                cmd = lines[i]
+                while cmd.rstrip().endswith("\\") and i + 1 < len(lines):
+                    i += 1
+                    cmd = cmd.rstrip()[:-1] + " " + lines[i]
+                flags.setdefault(script, set()).update(_FLAG.findall(cmd))
+            i += 1
+    return flags
+
+
+def _help_text(script: pathlib.Path) -> str:
+    proc = subprocess.run(
+        [sys.executable, str(script), "--help"], cwd=REPO,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "HOME": "/tmp"},
+        capture_output=True, text=True, timeout=120)
+    assert proc.returncode == 0, (
+        f"{script.name} --help exited {proc.returncode}:\n{proc.stderr}")
+    return proc.stdout
+
+
+@pytest.mark.parametrize("script", _EXAMPLES, ids=lambda p: p.name)
+def test_example_help_runs_and_matches_docs(script):
+    help_text = _help_text(script)
+    documented = _documented_flags().get(script.name, set())
+    stale = sorted(f for f in documented if f not in help_text)
+    assert not stale, (
+        f"docs reference flags {script.name} does not expose: {stale}")

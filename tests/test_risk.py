@@ -1,0 +1,286 @@
+"""Risk-priced sizing (repro.core.risk): pricing math, calibration edge
+cases, bitwise fallbacks, and journal durability of the risk aux rows.
+
+The edge cases ISSUE 10 pins:
+  * empty residual log — a cold pool falls back to the paper offset
+    bitwise (risk with an unreachable min_samples == risk off);
+  * single-model-surviving RAQ gate — zero ensemble spread degrades the
+    band to the pure conformal quantile;
+  * pressure gauge absent — serial runs never call note_pressure, so
+    every priced quantile sits at tau_max exactly;
+  * journal round-trip — quantile/band aux rows regenerate bitwise
+    across kill-at-any-byte warm resumes, including under
+    failure_strategy="auto" (per-task choices journaled with the wave).
+"""
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.dirname(__file__))
+from chaos import (assert_results_equal, kill_and_resume, kill_points,
+                   run_journaled)
+
+from repro.baselines import make_method
+from repro.baselines.sizey_method import SizeyMethod
+from repro.core.risk import (RiskConfig, RiskManager, checkpoint_frac_for,
+                             conformal_band, crash_probability,
+                             ensemble_spread, price_quantile,
+                             select_strategy)
+from repro.obs.risk import RISK_KIND, read_risk_rows, summarize_risk
+from repro.workflow import generate_workflow
+from repro.workflow.cluster import ClusterEngine
+from repro.workflow.simulator import simulate
+
+SCALE = 0.3          # serial calibration runs: enough completions to warm
+CLUSTER_SCALE = 0.15  # journaled chaos runs: small + crashy, but large
+# enough that pools outgrow min_history and the residual log warms up
+
+
+def _trace(seed=3, scale=SCALE):
+    return generate_workflow("eager", seed=seed, scale=scale,
+                             machine_cap_gb=64.0)
+
+
+# ------------------------------------------------------------- pure pricing
+def test_price_quantile_monotone_in_pressure_and_crash():
+    cfg = RiskConfig()
+    taus_p = [price_quantile(cfg, p, 0.0) for p in np.linspace(0, 1, 11)]
+    taus_c = [price_quantile(cfg, 0.0, c) for c in np.linspace(0, 1, 11)]
+    assert taus_p[0] == cfg.tau_max and taus_c[0] == cfg.tau_max
+    assert all(a >= b for a, b in zip(taus_p, taus_p[1:]))
+    assert all(a >= b for a, b in zip(taus_c, taus_c[1:]))
+    assert all(cfg.tau_min <= t <= cfg.tau_max for t in taus_p + taus_c)
+    # full squeeze saturates at tau_min, never below
+    assert price_quantile(cfg, 1.0, 1.0) == cfg.tau_min
+
+
+def test_crash_probability_edges():
+    assert crash_probability(0, 10.0, 5.0, 7) == 0.0
+    p = crash_probability(3, 10.0, 5.0, 7)
+    assert 0.0 < p < 1.0
+    # more crashes over the same exposure -> higher probability
+    assert crash_probability(6, 10.0, 5.0, 7) > p
+
+
+def test_select_strategy_thresholds():
+    cfg = RiskConfig()
+    assert select_strategy(cfg, 0.0, 0.9) == "retry_same"
+    assert select_strategy(cfg, 0.1, None) == "retry_same"
+    assert select_strategy(cfg, 0.1, cfg.raq_trust - 0.01) == "retry_same"
+    assert select_strategy(cfg, 0.1, cfg.raq_trust) == "retry_scaled"
+    assert select_strategy(cfg, cfg.checkpoint_crash_p, 0.9) == "checkpoint"
+
+
+def test_checkpoint_frac_shrinks_with_crash_rate():
+    cfg = RiskConfig()
+    assert checkpoint_frac_for(cfg, 0.0) == cfg.max_checkpoint_frac
+    assert checkpoint_frac_for(cfg, 1.0) == cfg.min_checkpoint_frac
+    fr = [checkpoint_frac_for(cfg, c) for c in np.linspace(0, 1, 9)]
+    assert all(a >= b for a, b in zip(fr, fr[1:]))
+
+
+def test_risk_config_validation():
+    with pytest.raises(ValueError):
+        RiskConfig(tau_min=0.9, tau_max=0.8)
+    with pytest.raises(ValueError):
+        RiskConfig(tau_max=1.0)
+    with pytest.raises(ValueError):
+        RiskConfig(min_samples=0)
+    with pytest.raises(ValueError):
+        RiskConfig(window=2, min_samples=5)
+    with pytest.raises(ValueError):
+        RiskConfig(min_checkpoint_frac=0.6, max_checkpoint_frac=0.5)
+
+
+# ------------------------------------------------------------------- bands
+def test_conformal_band_empty_log_is_zero():
+    assert conformal_band(np.zeros((0,)), 0.9) == 0.0
+
+
+def test_conformal_band_is_sample_value_and_clamped():
+    res = np.asarray([-3.0, -1.0, 0.5, 2.0, 4.0])
+    band = conformal_band(res, 0.9)
+    assert band in set(res[res >= 0])    # method="higher": a real sample
+    # a pool that never under-predicts needs no headroom
+    assert conformal_band(np.asarray([-5.0, -2.0, -0.1]), 0.99) == 0.0
+
+
+def test_conformal_band_rolling_window():
+    res = np.concatenate([np.full(50, 10.0), np.full(50, 1.0)])
+    assert conformal_band(res, 0.9, window=50) == 1.0
+    assert conformal_band(res, 0.9, window=None) == 10.0
+
+
+def test_zero_spread_single_surviving_model():
+    # RAQ gate left one effective model: all survivors agree -> the band
+    # degrades to the pure conformal quantile, exactly
+    assert ensemble_spread(np.asarray([2.5, 2.5, 2.5])) == 0.0
+    assert ensemble_spread(None) == 0.0
+    assert ensemble_spread(np.asarray([])) == 0.0
+    res = np.asarray([0.5, 1.0, 1.5, 2.0, 2.5])
+    mgr = RiskManager(RiskConfig(spread_coef=1.0))
+
+    class _Pool:
+        log_count = len(res)
+        log_actual = res
+        log_agg = np.zeros(len(res))
+    same = mgr.band(("t", ""), _Pool(), 0.9, np.asarray([4.0, 4.0]))
+    assert same == conformal_band(res, 0.9)
+
+
+def test_collapse_temporal_rule():
+    mgr = RiskManager(RiskConfig(k_collapse_frac=0.5))
+    assert mgr.collapse_temporal([10.0, 10.4], band_gb=1.0)       # < 0.5 GB
+    assert not mgr.collapse_temporal([10.0, 11.0], band_gb=1.0)   # >= 0.5 GB
+    assert not mgr.collapse_temporal([10.0], band_gb=1.0)         # k == 1
+    assert not mgr.collapse_temporal([10.0, 10.4], band_gb=0.0)   # cold
+
+
+# ------------------------------------------------- method-level invariants
+def test_cold_pool_falls_back_to_paper_offset_bitwise():
+    # empty residual log everywhere (unreachable min_samples): every
+    # decision runs the paper path, so the run is bitwise risk=None
+    trace = _trace()
+    base = simulate(trace, SizeyMethod(machine_cap_gb=64.0))
+    cold_cfg = RiskConfig(min_samples=10 ** 6, window=10 ** 6)
+    m = SizeyMethod(machine_cap_gb=64.0, risk=cold_cfg)
+    cold = simulate(trace, m)
+    assert len(read_risk_rows(m.predictor.db)) == 0
+    for a, b in zip(base.outcomes, cold.outcomes):
+        assert a.task.key == b.task.key
+        assert a.first_alloc_gb == b.first_alloc_gb
+        assert a.wastage_gbh == b.wastage_gbh
+
+
+def test_serial_pressure_absent_prices_at_tau_max():
+    # serial simulate() never calls note_pressure and injects no crashes:
+    # every repriced decision must sit exactly at tau_max
+    m = SizeyMethod(machine_cap_gb=64.0, risk=True)
+    simulate(_trace(), m)
+    rows = read_risk_rows(m.predictor.db)
+    assert rows, "warm pools should have been repriced"
+    assert all(r["pressure"] == 0.0 for r in rows)
+    assert all(r["crash_p"] == 0.0 for r in rows)
+    assert all(r["tau"] == m.risk.cfg.tau_max for r in rows)
+    assert all(r["alloc_gb"] >= r["agg_pred_gb"] for r in rows)
+    digest = summarize_risk(rows)
+    assert digest["n"] == len(rows)
+    assert [r["seq"] for r in rows] == list(range(len(rows)))
+
+
+def test_risk_never_undercuts_aggregate_or_exceeds_cap():
+    m = SizeyMethod(machine_cap_gb=64.0, risk=True)
+    simulate(_trace(seed=7), m)
+    for r in read_risk_rows(m.predictor.db):
+        assert r["agg_pred_gb"] <= r["alloc_gb"] <= 64.0
+        assert r["band_gb"] >= 0.0
+
+
+def test_auto_strategy_requires_risk():
+    with pytest.raises(ValueError):
+        SizeyMethod(failure_strategy="auto")
+    m = SizeyMethod(failure_strategy="auto", risk=True)
+    assert m.failure_strategy == "auto"
+
+
+def test_make_method_risk_variants():
+    m = make_method("sizey_risk", machine_cap_gb=64.0)
+    assert m.name == "sizey_risk" and m.risk is not None
+    mt = make_method("sizey_risk_temporal", machine_cap_gb=64.0)
+    assert mt.temporal and mt.risk is not None
+
+
+def test_engine_pressure_is_bounded_and_live():
+    trace = _trace(scale=CLUSTER_SCALE)
+    eng = ClusterEngine(trace, SizeyMethod(machine_cap_gb=64.0, risk=True),
+                        n_nodes=4)
+    assert eng.pressure() == 0.0
+    seen = []
+    while eng.step():
+        seen.append(eng.pressure())
+    assert all(0.0 <= p <= 1.0 for p in seen)
+    assert max(seen) > 0.0, "a live run should show nonzero pressure"
+
+
+def test_temporal_risk_composes_and_can_collapse():
+    trace = _trace(seed=11)
+    # threshold so large that ANY pool with a positive band collapses
+    m = SizeyMethod(machine_cap_gb=64.0, temporal_k=4,
+                    risk=RiskConfig(k_collapse_frac=1e9))
+    eng = ClusterEngine(trace, m, n_nodes=4)
+    res = eng.run()
+    rows = read_risk_rows(m.predictor.db)
+    assert rows, "temporal risk run repriced nothing"
+    assert any(r["collapsed"] for r in rows), (
+        "k_collapse_frac=1e9 should flatten every banded plan")
+    assert len(res.outcomes) == len(trace.tasks)
+
+
+# --------------------------------------------------------------- durability
+# chaos traces are small (fast kill/resume sweeps), so pools see few
+# completions: drop min_samples so bands actually switch on
+_CHAOS_RISK = RiskConfig(min_samples=2, window=64)
+
+
+def _risk_factory(path):
+    return SizeyMethod(machine_cap_gb=64.0, persist_path=path,
+                       risk=_CHAOS_RISK)
+
+
+def _auto_factory(path):
+    return SizeyMethod(machine_cap_gb=64.0, persist_path=path,
+                       risk=_CHAOS_RISK, failure_strategy="auto")
+
+
+@pytest.mark.parametrize("factory", [_risk_factory, _auto_factory],
+                         ids=["risk", "risk_auto"])
+def test_risk_rows_bitwise_across_kill_points(tmp_path, factory):
+    # kill-at-any-byte warm resume: SimResult bitwise AND the risk-row
+    # stream (chosen quantile + band width) bitwise — truncated rows are
+    # regenerated exactly by the re-executed sizing wave. The auto
+    # variant additionally round-trips per-task strategy choices through
+    # the journaled 5-element sized entries.
+    trace = _trace(seed=5, scale=CLUSTER_SCALE)
+    kw = dict(n_nodes=4, fail_rate_per_node_h=0.1, fail_seed=5)
+    path = os.path.join(tmp_path, "run.jsonl")
+    baseline = run_journaled(trace, factory, path, **kw)
+    base_rows = read_risk_rows(path)
+    assert base_rows, "crashy risk run emitted no risk rows"
+    for cut in kill_points(path, 4, seed=5):
+        res, eng = kill_and_resume(path, cut, trace, factory)
+        assert_results_equal(baseline, res)
+        got = read_risk_rows(path + f".cut{cut}")
+        assert got == base_rows, (
+            f"kill@byte {cut}: risk rows diverged "
+            f"({len(got)} vs {len(base_rows)})")
+
+
+def test_auto_strategy_journal_entries_carry_choices(tmp_path):
+    import json
+    trace = _trace(seed=5, scale=CLUSTER_SCALE)
+    path = os.path.join(tmp_path, "run.jsonl")
+    run_journaled(trace, _auto_factory, path, n_nodes=4,
+                  fail_rate_per_node_h=0.1, fail_seed=5)
+    sized = []
+    with open(path) as fh:
+        for line in fh:
+            rec = json.loads(line)
+            if rec.get("rec") == "step":
+                sized.extend(rec.get("sized", []))
+    assert sized
+    for entry in sized:
+        assert len(entry) == 5, "auto wave entries must journal choices"
+        assert entry[3] in ("retry_same", "retry_scaled", "checkpoint")
+        assert 0.0 < entry[4] <= 1.0
+
+
+def test_restore_state_tolerates_pre_risk_journals():
+    m = SizeyMethod(machine_cap_gb=64.0, risk=True)
+    m.note_pressure(0.7)
+    state = m.export_state()
+    assert state["pressure"] == 0.7
+    state.pop("pressure")           # a PR 9 journal has no pressure key
+    m.restore_state(state)
+    assert m._pressure == 0.0
